@@ -1,0 +1,20 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

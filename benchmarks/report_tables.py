@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+results/dryrun/*.json.  Usage:
+  PYTHONPATH=src python -m benchmarks.report_tables [outdir]
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.roofline import HBM_PER_DEV, load_cells
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(cells: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | GiB/dev (args+temp) | fits 16G | "
+             "per-dev GFLOP | per-dev GB | coll GB (ici/dcn) | collective mix |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in cells:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR: {r.get('error','')[:60]} | | | | | |")
+            continue
+        m = r["memory"]
+        used = m["argument_size_in_bytes"] + m["temp_size_in_bytes"]
+        p = r["per_device"]
+        ops = r.get("collective_ops", {})
+        mix = " ".join(f"{k.split('-')[-1] if '-' in k else k}:{v}"
+                       for k, v in sorted(ops.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_bytes(used)} | {'yes' if used <= HBM_PER_DEV else 'NO'} | "
+            f"{p['flops']/1e9:.0f} | {p['bytes']/1e9:.1f} | "
+            f"{p['coll_ici']/1e9:.2f}/{p['coll_dcn']/1e9:.2f} | {mix} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | compute (ms) | memory (ms) | "
+             "collective (ms) | dominant | MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in cells:
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.1f} | "
+            f"{rf['collective_s']*1e3:.1f} | "
+            f"{rf['dominant'].replace('_s','')} | "
+            f"{r['model_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    cells = load_cells(outdir)
+    cells.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("## Dry-run table\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline table\n")
+    print(roofline_table(cells))
+
+
+if __name__ == "__main__":
+    main()

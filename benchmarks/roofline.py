@@ -1,0 +1,61 @@
+"""Roofline table: aggregates results/dryrun/*.json into the §Roofline
+report (one row per arch x shape x mesh cell)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+HBM_PER_DEV = 16 * 1024**3           # v5e
+
+
+def load_cells(out_dir: str = "results/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def row(rec: dict) -> str:
+    if rec.get("status") != "ok":
+        return f"status=ERROR {rec.get('error', '')[:80]}"
+    r = rec["roofline"]
+    m = rec["memory"]
+    used = m["argument_size_in_bytes"] + m["temp_size_in_bytes"]
+    fits = "fits" if used <= HBM_PER_DEV else "OVER"
+    return (f"compute={r['compute_s']*1e3:.1f}ms "
+            f"memory={r['memory_s']*1e3:.1f}ms "
+            f"collective={r['collective_s']*1e3:.1f}ms "
+            f"dom={r['dominant'].replace('_s','')} "
+            f"frac={rec['roofline_fraction']:.3f} "
+            f"useful_flops={rec['model_flops_ratio']:.2f} "
+            f"mem/dev={used/2**30:.1f}GiB({fits})")
+
+
+def main() -> dict:
+    cells = load_cells()
+    if not cells:
+        emit("roofline/none", 0.0, "no dry-run results found; run "
+             "python -m repro.launch.dryrun --all --mesh both first")
+        return {}
+    ok = 0
+    dominants = {"compute_s": 0, "memory_s": 0, "collective_s": 0}
+    for rec in cells:
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        emit(name, rec.get("t_compile_s", 0) * 1e6, row(rec))
+        if rec.get("status") == "ok":
+            ok += 1
+            dominants[rec["roofline"]["dominant"]] += 1
+    emit("roofline/summary", 0.0,
+         f"{ok}/{len(cells)} cells ok; dominant terms: "
+         f"compute={dominants['compute_s']} memory={dominants['memory_s']} "
+         f"collective={dominants['collective_s']}")
+    return {"cells": len(cells), "ok": ok}
+
+
+if __name__ == "__main__":
+    main()

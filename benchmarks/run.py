@@ -1,0 +1,42 @@
+"""Benchmark runner: one module per paper table/figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,table2,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = ("table2_detection", "fig5_energy_gaps", "fig8_sensitivity",
+           "fig9_scalability", "table4_accuracy", "fig10_overhead",
+           "roofline")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", type=str, default=None)
+    args = p.parse_args()
+    want = args.only.split(",") if args.only else None
+    failures = []
+    for name in MODULES:
+        if want and not any(w in name for w in want):
+            continue
+        print(f"# === benchmarks.{name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception as e:
+            failures.append(name)
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}", flush=True)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

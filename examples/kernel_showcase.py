@@ -1,0 +1,62 @@
+"""Kernel showcase: the four Pallas TPU kernels vs their XLA twins, with the
+analytic energy model quantifying each fusion's HBM-traffic saving.
+
+  PYTHONPATH=src python examples/kernel_showcase.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import AnalyticalEnergyModel
+from repro.core.graph import trace
+from repro.kernels import ops, ref
+
+
+def energy(fn, *args):
+    return AnalyticalEnergyModel().profile(trace(fn, *args)).total_energy_j
+
+
+def main():
+    key = jax.random.key(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    print(f"{'kernel':<18}{'XLA twin (J)':>14}{'Pallas (J)':>14}{'saving':>9}")
+
+    # flash attention
+    q = jax.random.normal(k1, (1, 8, 512, 64))
+    k = jax.random.normal(k2, (1, 8, 512, 64))
+    v = jax.random.normal(k3, (1, 8, 512, 64))
+    e0 = energy(lambda q, k, v: ref.attention(q, k, v), q, k, v)
+    e1 = energy(lambda q, k, v: ops.flash_attention(q, k, v), q, k, v)
+    print(f"{'flash_attention':<18}{e0:>14.5f}{e1:>14.5f}{1-e1/e0:>8.0%}")
+
+    # rmsnorm
+    x = jax.random.normal(k1, (4096, 1024))
+    w = jax.random.normal(k2, (1024,))
+    e0 = energy(ref.rmsnorm, x, w)
+    e1 = energy(ops.fused_rmsnorm, x, w)
+    print(f"{'fused_rmsnorm':<18}{e0:>14.5f}{e1:>14.5f}{1-e1/e0:>8.0%}")
+
+    # swiglu
+    g = jax.random.normal(k3, (4096, 1024))
+    u = jax.random.normal(k4, (4096, 1024))
+    e0 = energy(ref.swiglu, g, u)
+    e1 = energy(ops.fused_swiglu, g, u)
+    print(f"{'fused_swiglu':<18}{e0:>14.5f}{e1:>14.5f}{1-e1/e0:>8.0%}")
+
+    # selective scan
+    B, S, di, n = 1, 256, 128, 16
+    a = jax.nn.sigmoid(jax.random.normal(k1, (B, S, di, n))) * 0.9
+    b = jax.random.normal(k2, (B, S, di, n)) * 0.1
+    c = jax.random.normal(k3, (B, S, n))
+    h0 = jnp.zeros((B, di, n))
+    e0 = energy(lambda *t: ref.ssm_scan(*t)[0], a, b, c, h0)
+    e1 = energy(lambda *t: ops.fused_ssm_scan(*t)[0], a, b, c, h0)
+    print(f"{'fused_ssm_scan':<18}{e0:>14.5f}{e1:>14.5f}{1-e1/e0:>8.0%}")
+
+    print("\n(each saving is HBM-traffic energy the fused kernel avoids; "
+          "validated vs ref.py oracles in tests/test_kernels.py)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: differential energy debugging in 30 lines.
+
+Compare two implementations of the same computation; Magneton detects which
+one wastes energy and explains why.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.diff import DifferentialEnergyDebugger
+
+VOCAB = 8192
+
+
+def cross_entropy_onehot(logits, labels):
+    """The inefficient twin: materializes a (B, S, V) one-hot tensor in HBM
+    (pytorch-141822 class)."""
+    onehot = jax.nn.one_hot(labels, VOCAB, dtype=logits.dtype)
+    return -jnp.sum(onehot * jax.nn.log_softmax(logits, -1), axis=-1).mean()
+
+
+def cross_entropy_gather(logits, labels):
+    """The efficient twin: gathers the target logit directly."""
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+
+
+def main():
+    key = jax.random.key(0)
+    logits = jax.random.normal(key, (8, 128, VOCAB))
+    labels = jax.random.randint(jax.random.key(1), (8, 128), 0, VOCAB)
+
+    debugger = DifferentialEnergyDebugger()
+    report = debugger.compare(
+        cross_entropy_onehot, cross_entropy_gather, (logits, labels),
+        name_a="onehot-CE", name_b="gather-CE")
+    print(report.render())
+
+    waste = [f for f in report.findings if f.classification == "energy_waste"]
+    assert waste, "expected the one-hot CE to be flagged"
+    print(f"\n--> {len(waste)} energy-waste region(s) found; "
+          f"the one-hot materialization costs "
+          f"{report.total_energy_a_j / report.total_energy_b_j:.2f}x "
+          "the gather implementation.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end training driver: train a ~100M-param GPT-2-class model for a
+few hundred steps on the synthetic LM stream, with checkpointing and the
+Magneton energy audit enabled.
+
+Full run (a few hours on this CPU container):
+  PYTHONPATH=src python examples/train_demo.py --steps 300
+
+Quick check (~2 min):
+  PYTHONPATH=src python examples/train_demo.py --steps 30 --small
+"""
+
+import argparse
+import dataclasses
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.train.loop import LoopConfig, run_training
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import TrainConfig
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--small", action="store_true",
+                   help="2-layer model for a fast functional check")
+    p.add_argument("--ckpt", default="/tmp/repro_train_demo")
+    args = p.parse_args()
+
+    # gpt2-small full config is ~124M params — the "~100M model" target.
+    cfg = configs.get_config("gpt2-small")
+    if args.small:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("demo", seq_len=128 if not args.small else 32,
+                        global_batch=8 if not args.small else 4,
+                        kind="train")
+
+    losses = []
+
+    def on_step(step, metrics):
+        losses.append(metrics["loss"])
+
+    result = run_training(
+        cfg, shape,
+        opt_cfg=OptimizerConfig(lr=6e-4, warmup_steps=20,
+                                total_steps=args.steps),
+        tcfg=TrainConfig(remat=False),
+        loop=LoopConfig(num_steps=args.steps, checkpoint_every=100,
+                        checkpoint_dir=args.ckpt, log_every=10),
+        on_step=on_step)
+
+    first = sum(losses[:10]) / max(len(losses[:10]), 1)
+    last = sum(losses[-10:]) / max(len(losses[-10:]), 1)
+    print(f"\nloss {first:.3f} -> {last:.3f} over {len(losses)} steps "
+          f"({'LEARNING' if last < first - 0.05 else 'check a longer run'})")
+    print(f"checkpoints in {args.ckpt}: restartable with the same command")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Model configuration system and architecture registry.
+
+Every assigned architecture is a ``ModelConfig`` built from its published
+numbers (see the per-arch files in this package).  Layer stacks are described
+by a repeating ``block_pattern`` (the *superblock*) so heterogeneous models
+(jamba's 1:7 mamba:attn interleave, llama-3.2-vision's every-5th cross-attn)
+scan over a fixed-period block — keeping HLO size O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside the repeating superblock."""
+
+    mixer: str        # 'attn' | 'cross_attn' | 'mamba' | 'mlstm' | 'slstm'
+    ffn: str          # 'dense' | 'moe' | 'none'
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+
+    # --- attention variants ---
+    rope_theta: float = 500000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 0         # MLA decoupled-RoPE dims
+    v_head_dim: int = 0            # MLA value head dim (0 -> head_dim)
+    is_causal: bool = True         # False for encoder-only (hubert)
+
+    # --- MoE ---
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_num_shared: int = 0
+    moe_d_ff: int = 0              # expert hidden dim (0 -> d_ff)
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+
+    # --- SSM (mamba) ---
+    ssm_state_dim: int = 16
+    ssm_conv_dim: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0           # 0 -> ceil(d_model/16)
+    ssm_chunk: int = 256
+
+    # --- xLSTM ---
+    mlstm_proj_factor: float = 2.0
+    slstm_ffn_factor: float = 1.3333333
+
+    # --- multimodal stubs ---
+    cross_attn_period: int = 0     # vlm: every n-th layer is cross-attn
+    num_image_tokens: int = 0      # patch-embedding count from the stub tower
+    frontend: str = "none"         # 'none' | 'audio_frames' | 'vision_patches'
+
+    # --- layer stack ---
+    block_pattern: tuple[LayerSpec, ...] = (LayerSpec("attn", "dense"),)
+
+    # --- numerics / misc ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    sub_quadratic: bool = False    # supports long_500k decode
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_v_head_dim(self) -> int:
+        return self.v_head_dim or self.resolved_head_dim
+
+    @property
+    def resolved_moe_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def num_superblocks(self) -> int:
+        assert self.num_layers % self.period == 0, \
+            f"{self.name}: {self.num_layers} layers not divisible by period {self.period}"
+        return self.num_layers // self.period
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.ssm_dt_rank or -(-self.d_model // 16)
+
+    def param_count(self) -> int:
+        """Total parameters (analytic; embeddings + blocks + head)."""
+        from repro.models.transformer import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.transformer import count_params
+        return count_params(self, active_only=True)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A small same-family config for CPU smoke tests."""
+        small = dict(
+            num_layers=self.period * 2,
+            d_model=64,
+            num_heads=max(4, min(self.num_heads, 4)),
+            num_kv_heads=max(2, min(self.num_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            kv_lora_rank=32 if self.use_mla else 0,
+            q_lora_rank=0,
+            rope_head_dim=8 if self.use_mla else 0,
+            v_head_dim=16 if self.use_mla else 0,
+            moe_num_experts=min(self.moe_num_experts, 4),
+            moe_top_k=min(self.moe_top_k, 2),
+            moe_num_shared=min(self.moe_num_shared, 1),
+            moe_d_ff=32 if self.moe_num_experts else 0,
+            ssm_state_dim=8,
+            ssm_chunk=16,
+            num_image_tokens=8 if self.family == "vlm" else 0,
+            name=self.name + "-smoke",
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_imports()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    _ensure_imports()
+    return sorted(_REGISTRY)
+
+
+def _ensure_imports() -> None:
+    # import the per-arch modules for registration side effects
+    import importlib
+    for mod in ("xlstm_1_3b", "jamba_1_5_large_398b", "llama4_scout_17b_a16e",
+                "deepseek_v2_236b", "qwen1_5_110b", "phi3_medium_14b",
+                "qwen3_4b", "llama3_2_3b", "hubert_xlarge",
+                "llama_3_2_vision_90b", "gpt2_small"):
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+# shape sets assigned to LM-family archs -------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def supported_shapes(cfg: ModelConfig) -> list[str]:
+    """Which assigned shapes are semantically valid for this arch.
+
+    Skips (recorded in DESIGN.md §4): decode shapes for encoder-only archs;
+    long_500k for pure full-attention archs (needs sub-quadratic mixing).
+    """
+    out = ["train_4k", "prefill_32k"]
+    if cfg.is_causal:
+        out.append("decode_32k")
+        if cfg.sub_quadratic:
+            out.append("long_500k")
+    return out

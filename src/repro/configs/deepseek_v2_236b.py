@@ -1,0 +1,37 @@
+"""DeepSeek-V2 (236B total / 21B active) [moe] — arXiv:2405.04434.
+
+60L, d_model=5120, 128 heads, expert d_ff=1536, vocab=102400.
+MLA: kv_lora_rank=512, q_lora_rank=1536, decoupled RoPE head dim 64,
+per-head qk_nope/v dims 128.  MoE: 160 routed experts top-6 + 2 shared,
+on every layer (matching the assigned d_ff=1536 expert width).
+Full (latent) attention is still quadratic -> long_500k skipped; the MLA
+compressed cache is what makes decode_32k cheap.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+@register("deepseek-v2-236b")
+def deepseek_v2() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-236b",
+        family="moe",
+        num_layers=60,
+        d_model=5120,
+        num_heads=128,
+        num_kv_heads=128,        # MLA: heads share the latent cache
+        head_dim=128,
+        d_ff=1536,
+        vocab_size=102400,
+        block_pattern=(LayerSpec("attn", "moe"),),
+        use_mla=True,
+        kv_lora_rank=512,
+        q_lora_rank=1536,
+        rope_head_dim=64,
+        v_head_dim=128,
+        moe_num_experts=160,
+        moe_top_k=6,
+        moe_num_shared=2,
+        moe_d_ff=1536,
+        rope_theta=10000.0,
+    )

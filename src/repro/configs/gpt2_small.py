@@ -1,0 +1,25 @@
+"""GPT-2 small — the paper's own case-study model (§2.1, §6.4).
+
+Not part of the assigned pool; used by the zoo/benchmarks to reproduce the
+paper's HuggingFace-vs-vLLM GPT-2 experiments (matching sensitivity Fig. 8,
+scalability Fig. 9, profiler accuracy Table 4).
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+@register("gpt2-small")
+def gpt2_small() -> ModelConfig:
+    return ModelConfig(
+        name="gpt2-small",
+        family="dense",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=50257,
+        block_pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=10000.0,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,27 @@
+"""HuBERT-XLarge [audio] — arXiv:2106.07447 (wav2vec2-style encoder).
+
+48L, d_model=1280, 16H (kv=16), d_ff=5120, vocab=504 (masked-prediction
+codebook targets).  Encoder-only: bidirectional attention, no KV cache ->
+decode_32k / long_500k skipped.  The CNN waveform frontend is a STUB per
+the assignment: input_specs() supplies precomputed frame embeddings.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+@register("hubert-xlarge")
+def hubert_xlarge() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge",
+        family="audio",
+        num_layers=48,
+        d_model=1280,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=5120,
+        vocab_size=504,
+        is_causal=False,
+        frontend="audio_frames",
+        block_pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=10000.0,
+    )

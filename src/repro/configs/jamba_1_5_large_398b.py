@@ -1,0 +1,38 @@
+"""Jamba-1.5-Large (398B total / ~94B active) [hybrid] — arXiv:2403.19887.
+
+72L, d_model=8192, 64H (GQA kv=8), d_ff=24576, vocab=65536, MoE 16e top-2.
+Jamba block structure: attn:mamba ratio 1:7 (one attention layer per
+period-8 superblock, placed mid-block) and MoE replacing the dense MLP on
+every other layer.  Mamba mixing dominates -> sub-quadratic, runs long_500k
+(the 9 attention layers decode against a sharded 512k cache).
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+# period-8 superblock: mamba ×3, attn, mamba ×4; MoE on odd layer indices.
+_PATTERN = tuple(
+    LayerSpec("attn" if i == 4 else "mamba", "moe" if i % 2 == 1 else "dense")
+    for i in range(8)
+)
+
+
+@register("jamba-1.5-large-398b")
+def jamba_1_5_large_398b() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        num_layers=72,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=24576,
+        vocab_size=65536,
+        block_pattern=_PATTERN,
+        moe_num_experts=16,
+        moe_top_k=2,
+        moe_d_ff=24576,
+        ssm_state_dim=16,
+        ssm_conv_dim=4,
+        ssm_expand=2,
+        sub_quadratic=True,
+    )

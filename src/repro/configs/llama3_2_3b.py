@@ -1,0 +1,24 @@
+"""Llama-3.2-3B [dense] — hf:meta-llama/Llama-3.2-3B.
+
+28L, d_model=3072, 24H (GQA kv=8), d_ff=8192, vocab=128256.
+Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+@register("llama3.2-3b")
+def llama3_2_3b() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b",
+        family="dense",
+        num_layers=28,
+        d_model=3072,
+        num_heads=24,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=128256,
+        block_pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=500000.0,
+        tie_embeddings=True,
+    )

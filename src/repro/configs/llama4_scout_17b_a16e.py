@@ -1,0 +1,28 @@
+"""Llama-4-Scout-17B-16E [moe] — hf:meta-llama/Llama-4-Scout-17B-16E.
+
+48L, d_model=5120, 40H (GQA kv=8), expert d_ff=8192, vocab=202048,
+MoE 16 routed experts top-1 + 1 shared expert on every layer
+(~17B active / ~109B total).  Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+@register("llama4-scout-17b-a16e")
+def llama4_scout() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=202048,
+        block_pattern=(LayerSpec("attn", "moe"),),
+        moe_num_experts=16,
+        moe_top_k=1,
+        moe_num_shared=1,
+        moe_d_ff=8192,
+        rope_theta=500000.0,
+    )

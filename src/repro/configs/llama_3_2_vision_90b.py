@@ -1,0 +1,34 @@
+"""Llama-3.2-Vision-90B [vlm] — hf:meta-llama/Llama-3.2-90B-Vision.
+
+100 decoder layers, d_model=8192, 64H (GQA kv=8), d_ff=28672, vocab=128256.
+Every 5th layer is a gated cross-attention layer over image patch embeddings
+(period-5 superblock: 4 self-attn + 1 cross-attn).  The vision tower is a
+STUB per the assignment: input_specs() supplies precomputed patch embeddings
+(4 tiles x 1025 patches = 4100 image tokens).  Full attention -> long_500k
+skipped.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+_PATTERN = tuple(
+    LayerSpec("cross_attn" if i == 4 else "attn", "dense") for i in range(5)
+)
+
+
+@register("llama-3.2-vision-90b")
+def llama_3_2_vision_90b() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        num_layers=100,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=28672,
+        vocab_size=128256,
+        cross_attn_period=5,
+        num_image_tokens=4100,
+        frontend="vision_patches",
+        block_pattern=_PATTERN,
+        rope_theta=500000.0,
+    )

@@ -1,0 +1,23 @@
+"""Phi-3-medium-14B [dense] — arXiv:2404.14219.
+
+40L, d_model=5120, 40H (GQA kv=10), d_ff=17920, vocab=100352.
+RoPE + SwiGLU + GQA.  Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+@register("phi3-medium-14b")
+def phi3_medium() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b",
+        family="dense",
+        num_layers=40,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=10,
+        d_ff=17920,
+        vocab_size=100352,
+        block_pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=10000.0,
+    )

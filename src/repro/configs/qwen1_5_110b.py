@@ -1,0 +1,24 @@
+"""Qwen1.5-110B [dense] — hf:Qwen/Qwen1.5-110B family.
+
+80L, d_model=8192, 64H (GQA kv=8), d_ff=49152, vocab=152064, QKV bias.
+Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+@register("qwen1.5-110b")
+def qwen1_5_110b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-110b",
+        family="dense",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=49152,
+        vocab_size=152064,
+        qkv_bias=True,
+        block_pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=1000000.0,
+    )

@@ -1,0 +1,27 @@
+"""Qwen3-4B [dense] — hf:Qwen/Qwen3-4B (family config per Qwen3-8B card).
+
+36L, d_model=2560, 32H (GQA kv=8), d_ff=9728, vocab=151936, qk_norm.
+head_dim=128 (Qwen3 uses explicit 128-dim heads, not d_model/num_heads).
+Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+@register("qwen3-4b")
+def qwen3_4b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b",
+        family="dense",
+        num_layers=36,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=9728,
+        vocab_size=151936,
+        qk_norm=True,
+        block_pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=1000000.0,
+        tie_embeddings=True,
+    )

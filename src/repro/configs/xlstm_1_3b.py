@@ -1,0 +1,31 @@
+"""xLSTM-1.3B [ssm] — arXiv:2405.04517.
+
+48L, d_model=2048, 4 heads (kv=4), d_ff=0 (projections live inside the
+blocks), vocab=50304.  xLSTM[7:1] ratio: each period-8 superblock holds
+7 mLSTM blocks (pre-up-projection, factor 2) and 1 sLSTM block (gated FFN,
+factor 4/3).  Recurrent/chunked mixing is sub-quadratic -> runs long_500k.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+_PATTERN = tuple([LayerSpec("mlstm", "none")] * 7 + [LayerSpec("slstm", "none")])
+
+
+@register("xlstm-1.3b")
+def xlstm_1_3b() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-1.3b",
+        family="ssm",
+        num_layers=48,
+        d_model=2048,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=512,            # d_model / num_heads
+        d_ff=0,
+        vocab_size=50304,
+        block_pattern=_PATTERN,
+        mlstm_proj_factor=2.0,
+        slstm_ffn_factor=4.0 / 3.0,
+        sub_quadratic=True,
+        tie_embeddings=False,
+    )

@@ -1,0 +1,25 @@
+"""Magneton core: differential energy debugging for JAX programs."""
+
+from repro.core.diff import DifferentialEnergyDebugger
+from repro.core.energy import AnalyticalEnergyModel, EnergyProfile, ReplayProfiler
+from repro.core.graph import OpGraph, extract_graph, trace
+from repro.core.report import Finding, Report
+from repro.core.subgraph_match import MatchedRegion, match_subgraphs
+from repro.core.tensor_match import TensorMatcher, signature, signatures_match
+
+__all__ = [
+    "DifferentialEnergyDebugger",
+    "AnalyticalEnergyModel",
+    "ReplayProfiler",
+    "EnergyProfile",
+    "OpGraph",
+    "extract_graph",
+    "trace",
+    "Finding",
+    "Report",
+    "MatchedRegion",
+    "match_subgraphs",
+    "TensorMatcher",
+    "signature",
+    "signatures_match",
+]

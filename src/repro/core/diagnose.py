@@ -1,0 +1,141 @@
+"""Root-cause diagnosis (the paper's Algorithm 2, adapted to JAX/XLA).
+
+FINDDEVIATIONPOINT: compare the call paths (user stack frames recorded by the
+JAX tracer per equation) of the operators in a matched-but-unequal region and
+report the last common frame before they diverge.
+
+FINDKEYVAR: the paper re-runs with basic-block instrumentation to find the
+branch variable that selects a different GPU kernel.  In JAX the kernel
+selection is driven by *declarative* operator attributes and global config,
+so the key variable is recovered by diffing (1) the jaxpr equation params of
+corresponding operators — ``precision``, ``preferred_element_type``, dtypes,
+``dimension_numbers`` — and (2) a registered configuration snapshot
+(jax.config flags / model-config dataclasses).  See DESIGN.md §2 for why
+basic-block tracing has no TPU analogue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+from repro.core.graph import OpGraph, OpNode
+
+
+@dataclasses.dataclass
+class Diagnosis:
+    kind: str                       # 'api_difference' | 'param_difference' | 'config_difference'
+    deviation_point: str            # last common call frame
+    detail: str
+    key_variables: list[str]        # differing eqn params / config keys
+    ops_a: list[str]
+    ops_b: list[str]
+
+
+def _common_prefix(p1: Sequence[str], p2: Sequence[str]) -> int:
+    n = 0
+    for a, b in zip(p1, p2):
+        if a != b:
+            break
+        n += 1
+    return n
+
+
+def find_deviation_point(paths_a: Sequence[tuple[str, ...]],
+                         paths_b: Sequence[tuple[str, ...]]) -> str:
+    """Last common frame across the two sides' operator call paths."""
+    best_frame = "<program entry>"
+    best_len = -1
+    for pa in paths_a:
+        for pb in paths_b:
+            n = _common_prefix(pa, pb)
+            if n > best_len and n > 0:
+                best_len = n
+                best_frame = pa[n - 1]
+    return best_frame
+
+
+_KEY_PARAMS = ("precision", "preferred_element_type", "dimension_numbers",
+               "new_dtype", "dtype", "dimensions", "permutation", "axes",
+               "feature_group_count", "window_strides", "k", "is_stable",
+               "exhaustively", "accum_dtype")
+
+
+def _param_repr(v: Any) -> str:
+    s = repr(v)
+    return s if len(s) <= 80 else s[:77] + "..."
+
+
+def diff_eqn_params(node_a: OpNode, node_b: OpNode) -> list[str]:
+    out = []
+    keys = set(node_a.params) | set(node_b.params)
+    for k in sorted(keys):
+        if k not in _KEY_PARAMS and not (k in node_a.params and k in node_b.params):
+            continue
+        va, vb = node_a.params.get(k), node_b.params.get(k)
+        if _param_repr(va) != _param_repr(vb):
+            out.append(f"{k}: A={_param_repr(va)} vs B={_param_repr(vb)}")
+    return out
+
+
+def diff_config(config_a: Mapping[str, Any] | None,
+                config_b: Mapping[str, Any] | None) -> list[str]:
+    if not config_a or not config_b:
+        return []
+    out = []
+    for k in sorted(set(config_a) | set(config_b)):
+        va, vb = config_a.get(k), config_b.get(k)
+        if va != vb:
+            out.append(f"config[{k!r}]: A={va!r} vs B={vb!r}")
+    return out
+
+
+def _op_multiset(graph: OpGraph, idxs: Sequence[int]) -> list[str]:
+    return sorted(graph.nodes[i].primitive for i in idxs)
+
+
+def diagnose_region(graph_a: OpGraph, nodes_a: Sequence[int],
+                    graph_b: OpGraph, nodes_b: Sequence[int],
+                    *,
+                    config_a: Mapping[str, Any] | None = None,
+                    config_b: Mapping[str, Any] | None = None) -> Diagnosis:
+    """Explain why two equivalent regions consume different energy."""
+    ops_a = _op_multiset(graph_a, nodes_a)
+    ops_b = _op_multiset(graph_b, nodes_b)
+    paths_a = [graph_a.nodes[i].call_path for i in nodes_a if graph_a.nodes[i].call_path]
+    paths_b = [graph_b.nodes[i].call_path for i in nodes_b if graph_b.nodes[i].call_path]
+    deviation = find_deviation_point(paths_a, paths_b)
+
+    cfg_diffs = diff_config(config_a, config_b)
+
+    if ops_a != ops_b:
+        only_a = sorted(set(ops_a) - set(ops_b))
+        only_b = sorted(set(ops_b) - set(ops_a))
+        extra_a = len(ops_a) - len(ops_b)
+        detail = (f"different operator combinations: A uses {only_a or '(same set)'} "
+                  f"({len(ops_a)} ops), B uses {only_b or '(same set)'} "
+                  f"({len(ops_b)} ops, Δ{extra_a:+d})")
+        return Diagnosis(kind="api_difference", deviation_point=deviation,
+                         detail=detail,
+                         key_variables=cfg_diffs, ops_a=ops_a, ops_b=ops_b)
+
+    # same operator multiset -> same API, look for param/config differences
+    # pair same-primitive ops in topological order and diff params
+    key_vars: list[str] = list(cfg_diffs)
+    by_prim_a: dict[str, list[int]] = {}
+    by_prim_b: dict[str, list[int]] = {}
+    for i in nodes_a:
+        by_prim_a.setdefault(graph_a.nodes[i].primitive, []).append(i)
+    for i in nodes_b:
+        by_prim_b.setdefault(graph_b.nodes[i].primitive, []).append(i)
+    for prim, ia_list in by_prim_a.items():
+        for ia, ib in zip(ia_list, by_prim_b.get(prim, [])):
+            key_vars.extend(f"{prim}.{d}" for d in
+                            diff_eqn_params(graph_a.nodes[ia], graph_b.nodes[ib]))
+    kind = "config_difference" if cfg_diffs else "param_difference"
+    detail = ("same operators, diverging attributes/configuration"
+              if key_vars else
+              "same operators and attributes; energy difference stems from "
+              "tensor shapes/layouts feeding this region")
+    return Diagnosis(kind=kind, deviation_point=deviation, detail=detail,
+                     key_variables=sorted(set(key_vars)), ops_a=ops_a, ops_b=ops_b)

@@ -1,0 +1,149 @@
+"""DifferentialEnergyDebugger — the end-to-end Magneton pipeline.
+
+Given two callables implementing the same task and identical example inputs:
+  1. trace both to operator graphs (graph.py),
+  2. capture intermediate tensor values on n input samples (interp.py),
+  3. match semantically equivalent tensors (tensor_match.py, Hypothesis 1),
+  4. match semantically equivalent subgraphs (subgraph_match.py, Algorithm 1),
+  5. price every region with the energy model (energy.py),
+  6. detect: regions whose energy differs by more than ``energy_threshold``
+     while performance stays within ``perf_tolerance`` are software energy
+     waste (paper §6.1: 10% energy threshold, 1% perf tolerance); regions
+     where the cheaper side is also slower are performance-energy trade-offs,
+  7. diagnose each waste region (diagnose.py, Algorithm 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.diagnose import diagnose_region
+from repro.core.energy import (AnalyticalEnergyModel, EnergyProfile,
+                               ReplayProfiler, subgraph_energy, subgraph_time)
+from repro.core.graph import OpGraph, trace
+from repro.core.interp import capture_tensor_values
+from repro.core.report import Finding, Report
+from repro.core.subgraph_match import MatchedRegion, match_subgraphs
+from repro.core.tensor_match import TensorMatcher
+from repro.hw.specs import TPU_V5E, HardwareSpec
+
+
+def _perturb(args, seed: int):
+    """Fresh input sample with the same pytree structure/shapes/dtypes."""
+    rng = np.random.default_rng(seed)
+
+    def one(x):
+        x = np.asarray(x)
+        if x.dtype.kind in "f":
+            return (rng.standard_normal(x.shape) * (np.std(x) + 0.1)
+                    + np.mean(x)).astype(x.dtype)
+        if x.dtype.kind in "iu":
+            lo, hi = int(x.min()), int(x.max()) + 1
+            return rng.integers(lo, max(hi, lo + 1), size=x.shape).astype(x.dtype)
+        return x
+    return jax.tree_util.tree_map(one, args)
+
+
+@dataclasses.dataclass
+class DifferentialEnergyDebugger:
+    energy_threshold: float = 0.10       # paper default: 10% (robust down to 5%)
+    perf_tolerance: float = 0.01         # 1% — beyond that it's a trade-off
+    match_rtol: float = 1e-3
+    num_input_samples: int = 2           # Hypothesis 1: "across all model inputs"
+    spec: HardwareSpec = TPU_V5E
+    use_replay: bool = False             # measure real host wall time instead
+
+    def compare(self, fn_a: Callable, fn_b: Callable, args: Sequence[Any],
+                *, name_a: str = "A", name_b: str = "B",
+                config_a: Mapping[str, Any] | None = None,
+                config_b: Mapping[str, Any] | None = None,
+                output_rtol: float = 1e-2) -> Report:
+        args = tuple(args)
+        graph_a = trace(fn_a, *args, name=name_a)
+        graph_b = trace(fn_b, *args, name=name_b)
+
+        # -- functional equivalence gate (the two sides must do the same task;
+        #    paper enforces <=1% element-wise relative output difference)
+        out_a = jax.tree_util.tree_leaves(fn_a(*args))
+        out_b = jax.tree_util.tree_leaves(fn_b(*args))
+        for xa, xb in zip(out_a, out_b):
+            xa64 = np.asarray(xa, dtype=np.float64)
+            xb64 = np.asarray(xb, dtype=np.float64)
+            # max-norm relative difference: elementwise |a-b| measured against
+            # the magnitude of the outputs, so near-zero elements don't
+            # produce spurious "different task" verdicts.
+            scale = max(float(np.max(np.abs(xa64)), ),
+                        float(np.max(np.abs(xb64))), 1e-6)
+            rel = float(np.max(np.abs(xa64 - xb64))) / scale
+            if rel > output_rtol:
+                raise ValueError(
+                    f"implementations disagree (max rel diff {rel:.3e} > "
+                    f"{output_rtol}); not the same task")
+
+        # -- multi-sample tensor capture
+        samples = [args] + [_perturb(args, seed=17 + k)
+                            for k in range(self.num_input_samples - 1)]
+        vals_a = [capture_tensor_values(graph_a, *s) for s in samples]
+        vals_b = [capture_tensor_values(graph_b, *s) for s in samples]
+
+        matcher = TensorMatcher(rtol=self.match_rtol)
+        eq_pairs = matcher.match(vals_a, vals_b)
+        regions = match_subgraphs(graph_a, graph_b, eq_pairs)
+
+        # -- energy profiles
+        if self.use_replay:
+            profiler = ReplayProfiler()
+            prof_a = profiler.profile(graph_a, *args)
+            prof_b = profiler.profile(graph_b, *args)
+        else:
+            model = AnalyticalEnergyModel(self.spec)
+            prof_a = model.profile(graph_a)
+            prof_b = model.profile(graph_b)
+
+        findings = [self._classify(i, r, graph_a, graph_b, prof_a, prof_b,
+                                   config_a, config_b)
+                    for i, r in enumerate(regions)]
+        return Report(name_a=name_a, name_b=name_b, findings=findings,
+                      total_energy_a_j=prof_a.total_energy_j,
+                      total_energy_b_j=prof_b.total_energy_j,
+                      meta={"regions": len(regions),
+                            "eq_tensor_pairs": len(eq_pairs),
+                            "nodes_a": len(graph_a.nodes),
+                            "nodes_b": len(graph_b.nodes),
+                            "energy_model": "replay" if self.use_replay
+                            else self.spec.name})
+
+    # ------------------------------------------------------------------
+    def _classify(self, idx: int, region: MatchedRegion,
+                  graph_a: OpGraph, graph_b: OpGraph,
+                  prof_a: EnergyProfile, prof_b: EnergyProfile,
+                  config_a, config_b) -> Finding:
+        e_a = subgraph_energy(prof_a, region.nodes_a)
+        e_b = subgraph_energy(prof_b, region.nodes_b)
+        t_a = subgraph_time(prof_a, region.nodes_a)
+        t_b = subgraph_time(prof_b, region.nodes_b)
+        lo, hi = min(e_a, e_b), max(e_a, e_b)
+        delta = (hi - lo) / lo if lo > 0 else (0.0 if hi <= 0 else float("inf"))
+        wasteful = "A" if e_a > e_b else ("B" if e_b > e_a else "-")
+        if delta <= self.energy_threshold:
+            cls = "comparable"
+        else:
+            # efficient side must not be slower by more than perf_tolerance
+            t_waste, t_eff = (t_a, t_b) if wasteful == "A" else (t_b, t_a)
+            if t_eff <= t_waste * (1.0 + self.perf_tolerance):
+                cls = "energy_waste"
+            else:
+                cls = "tradeoff"
+        diag = None
+        if cls == "energy_waste":
+            diag = diagnose_region(graph_a, region.nodes_a,
+                                   graph_b, region.nodes_b,
+                                   config_a=config_a, config_b=config_b)
+        return Finding(region_idx=idx, energy_a_j=e_a, energy_b_j=e_b,
+                       time_a_s=t_a, time_b_s=t_b,
+                       nodes_a=list(region.nodes_a), nodes_b=list(region.nodes_b),
+                       classification=cls, wasteful_side=wasteful, diagnosis=diag)

@@ -1,0 +1,148 @@
+"""Energy models: analytic (roofline-timed) and replay-measured.
+
+Mirrors the paper's modular profiler (§5.2): a physical power meter when you
+have one, replay-based software profiling when you don't.  On this CPU-only
+container the 'physical meter' role is played by the analytic TPU-v5e model
+(DESIGN.md §2); the ReplayProfiler measures real per-operator wall time on the
+host and converts it through the host power model, preserving orderings and
+relative differences that can be cross-checked against the analytic numbers
+(benchmarks/bench_energy_accuracy.py, Table-4 analogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import costs as costs_mod
+from repro.core.graph import OpGraph
+from repro.hw.specs import CPU_HOST, TPU_V5E, HardwareSpec
+
+
+@dataclasses.dataclass
+class OpEnergy:
+    node_idx: int
+    primitive: str
+    energy_j: float
+    time_s: float
+    flops: float
+    hbm_bytes: float
+    ici_bytes: float
+    bound: str          # 'compute' | 'memory' | 'collective'
+
+
+@dataclasses.dataclass
+class EnergyProfile:
+    graph_name: str
+    ops: list[OpEnergy]
+
+    @property
+    def total_energy_j(self) -> float:
+        return sum(o.energy_j for o in self.ops)
+
+    @property
+    def total_time_s(self) -> float:
+        return sum(o.time_s for o in self.ops)
+
+    def top_k(self, k: int = 5) -> list[OpEnergy]:
+        return sorted(self.ops, key=lambda o: -o.energy_j)[:k]
+
+    def by_primitive(self) -> dict[str, float]:
+        agg: dict[str, float] = {}
+        for o in self.ops:
+            agg[o.primitive] = agg.get(o.primitive, 0.0) + o.energy_j
+        return dict(sorted(agg.items(), key=lambda kv: -kv[1]))
+
+
+class AnalyticalEnergyModel:
+    """Prices every operator from cost rules + hardware energy coefficients.
+
+    E_op = e_flop·FLOPs + e_hbm·HBM_bytes + e_ici·ICI_bytes + P_static·t_op,
+    with t_op the roofline max of the three terms.  fp32-accurate matmuls
+    (precision=HIGHEST) run at peak_flops_fp32 — the TF32/tensor-core
+    misconfiguration cases (c1/c8) fall out of this term.
+    """
+
+    def __init__(self, spec: HardwareSpec = TPU_V5E):
+        self.spec = spec
+
+    def op_energy(self, graph: OpGraph, node_idx: int) -> OpEnergy:
+        node = graph.nodes[node_idx]
+        c = costs_mod.node_cost(graph, node)
+        s = self.spec
+        fp32_flops = c.flops * c.fp32_fraction
+        bf16_flops = c.flops - fp32_flops
+        t_compute = s.compute_time(bf16_flops) + s.compute_time(fp32_flops, fp32=True)
+        t_mem = s.memory_time(c.hbm_bytes)
+        t_coll = s.collective_time(c.ici_bytes)
+        t_op = max(t_compute, t_mem, t_coll, 0.0)
+        if t_op == t_compute and t_compute > 0:
+            bound = "compute"
+        elif t_op == t_coll and t_coll > 0:
+            bound = "collective"
+        else:
+            bound = "memory"
+        energy = (bf16_flops * s.joules_per_flop
+                  + fp32_flops * 3.0 * s.joules_per_flop
+                  + c.hbm_bytes * s.joules_per_hbm_byte
+                  + c.ici_bytes * s.joules_per_ici_byte
+                  + s.idle_watts * t_op)
+        return OpEnergy(node_idx=node_idx, primitive=node.primitive,
+                        energy_j=energy, time_s=t_op, flops=c.flops,
+                        hbm_bytes=c.hbm_bytes, ici_bytes=c.ici_bytes, bound=bound)
+
+    def profile(self, graph: OpGraph) -> EnergyProfile:
+        return EnergyProfile(graph_name=graph.name,
+                             ops=[self.op_energy(graph, i)
+                                  for i in range(len(graph.nodes))])
+
+
+class ReplayProfiler:
+    """Measures real per-operator wall time by replaying each operator.
+
+    The paper's fallback when no power meter is attached: replay each operator
+    long enough to average out sampling noise, then convert time to energy via
+    the power model.  On this host the measurement is real CPU time; the power
+    conversion uses the host spec so analytic and measured Joules live on the
+    same scale.
+    """
+
+    def __init__(self, spec: HardwareSpec = CPU_HOST,
+                 min_replay_time_s: float = 5e-3, max_replay_iters: int = 64):
+        self.spec = spec
+        self.min_replay_time_s = min_replay_time_s
+        self.max_replay_iters = max_replay_iters
+
+    def profile(self, graph: OpGraph, *args) -> EnergyProfile:
+        from repro.core.interp import run_instrumented
+        _, records = run_instrumented(
+            graph, *args, measure=True,
+            min_replay_time_s=self.min_replay_time_s,
+            max_replay_iters=self.max_replay_iters)
+        ops = []
+        for rec in records:
+            node = graph.nodes[rec.node_idx]
+            c = costs_mod.node_cost(graph, node)
+            t = rec.wall_time_s or 0.0
+            # dynamic power scales with achieved intensity; static always on
+            util = min(1.0, (c.flops / max(t, 1e-12)) / self.spec.peak_flops_bf16)
+            p_dyn = self.spec.compute_watts * util + self.spec.hbm_watts * min(
+                1.0, (c.hbm_bytes / max(t, 1e-12)) / self.spec.hbm_bw)
+            energy = (self.spec.idle_watts + p_dyn) * t
+            ops.append(OpEnergy(node_idx=rec.node_idx, primitive=rec.primitive,
+                                energy_j=energy, time_s=t, flops=c.flops,
+                                hbm_bytes=c.hbm_bytes, ici_bytes=c.ici_bytes,
+                                bound="measured"))
+        return EnergyProfile(graph_name=graph.name, ops=ops)
+
+
+def subgraph_energy(profile: EnergyProfile, node_idxs: Sequence[int]) -> float:
+    idxs = set(node_idxs)
+    return sum(o.energy_j for o in profile.ops if o.node_idx in idxs)
+
+
+def subgraph_time(profile: EnergyProfile, node_idxs: Sequence[int]) -> float:
+    idxs = set(node_idxs)
+    return sum(o.time_s for o in profile.ops if o.node_idx in idxs)

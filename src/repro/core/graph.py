@@ -1,0 +1,278 @@
+"""Computational-graph extraction from jaxprs.
+
+This is Magneton's trace substrate, adapted to JAX (DESIGN.md §2): instead of
+reconstructing an operator DAG from CUPTI kernel traces + correlation IDs, we
+take the dataflow DAG JAX already has — the jaxpr.  Nodes are equations
+(operators), edges are tensors (jaxpr variables), and every node carries the
+user call path recorded by the tracer (the analogue of the libunwind /
+PyEval_SetProfile stacks in the paper's §5.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import numpy as np
+from jax._src.core import ClosedJaxpr, Jaxpr, Literal, Var
+
+# Higher-order primitives whose inner jaxpr we inline during flattening.
+# scan / while / cond are kept as super-nodes (their bodies execute a
+# data-dependent or repeated number of times; costs.py prices them).
+_INLINE_PRIMITIVES = ("pjit", "jit", "closed_call", "custom_jvp_call",
+                      "custom_vjp_call", "remat", "checkpoint",
+                      "custom_vjp_call_jaxpr", "shard_map")
+
+
+def _nested_jaxpr(eqn) -> ClosedJaxpr | None:
+    """Return the callee jaxpr of a call-like equation, if any."""
+    p = eqn.params
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in p:
+            val = p[key]
+            if isinstance(val, ClosedJaxpr):
+                return val
+            if isinstance(val, Jaxpr):
+                return ClosedJaxpr(val, ())
+    return None
+
+
+@dataclasses.dataclass
+class OpNode:
+    """One operator (jaxpr equation) in the graph."""
+
+    idx: int
+    primitive: str
+    params: dict[str, Any]
+    invars: list[int]          # tensor ids
+    outvars: list[int]         # tensor ids
+    call_path: tuple[str, ...]  # user stack frames, outermost first
+    scope: tuple[str, ...] = ()  # names of inlined call frames (e.g. remat)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"OpNode({self.idx}:{self.primitive})"
+
+
+@dataclasses.dataclass
+class TensorEdge:
+    """One tensor (jaxpr variable) in the graph."""
+
+    tid: int
+    shape: tuple[int, ...]
+    dtype: str
+    producer: int | None = None        # OpNode idx, None for graph inputs
+    consumers: list[int] = dataclasses.field(default_factory=list)
+    is_input: bool = False
+    is_output: bool = False
+    is_const: bool = False
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass
+class OpGraph:
+    """Operator-level computational graph of one traced program."""
+
+    name: str
+    nodes: list[OpNode]
+    tensors: dict[int, TensorEdge]
+    inputs: list[int]                   # tensor ids in call order
+    outputs: list[int]
+    closed_jaxpr: ClosedJaxpr | None = None
+
+    # ---- structural helpers -------------------------------------------------
+    def successors(self, node_idx: int) -> list[int]:
+        out: list[int] = []
+        for tid in self.nodes[node_idx].outvars:
+            out.extend(self.tensors[tid].consumers)
+        return sorted(set(out))
+
+    def predecessors(self, node_idx: int) -> list[int]:
+        out: list[int] = []
+        for tid in self.nodes[node_idx].invars:
+            p = self.tensors[tid].producer
+            if p is not None:
+                out.append(p)
+        return sorted(set(out))
+
+    def topo_order(self) -> list[int]:
+        # jaxpr equations are already topologically sorted.
+        return list(range(len(self.nodes)))
+
+    def subgraph_nodes_between(self, src_tids: set[int], dst_tids: set[int]) -> list[int]:
+        """Node idxs on any path from the src tensors to the dst tensors.
+
+        Traversal does NOT stop at frontier tensors: a sink tensor may have
+        further consumers that feed *another* sink (multi-output graphs), and
+        those nodes belong to the region too.  Because the graph is a DAG,
+        the fwd∩bwd intersection still yields exactly the between-set.
+        """
+        # forward reachable from src
+        fwd: set[int] = set()
+        frontier = [c for t in src_tids for c in self.tensors[t].consumers]
+        while frontier:
+            n = frontier.pop()
+            if n in fwd:
+                continue
+            fwd.add(n)
+            for tid in self.nodes[n].outvars:
+                frontier.extend(self.tensors[tid].consumers)
+        # backward reachable from dst
+        bwd: set[int] = set()
+        frontier = [self.tensors[t].producer for t in dst_tids
+                    if self.tensors[t].producer is not None]
+        while frontier:
+            n = frontier.pop()
+            if n is None or n in bwd:
+                continue
+            bwd.add(n)
+            for tid in self.nodes[n].invars:
+                if tid in src_tids:
+                    continue
+                p = self.tensors[tid].producer
+                if p is not None:
+                    frontier.append(p)
+        return sorted(fwd & bwd)
+
+
+def _call_path(eqn, max_frames: int = 12) -> tuple[str, ...]:
+    """User-code call path of an equation, outermost first."""
+    si = eqn.source_info
+    tb = getattr(si, "traceback", None)
+    if tb is None:
+        return ()
+    try:
+        import jax._src.source_info_util as siu
+        frames = list(siu.user_frames(tb))
+    except Exception:
+        frames = [f for f in tb.frames
+                  if "site-packages/jax" not in f.file_name]
+    out = []
+    for f in frames[:max_frames]:
+        fname = f.file_name.rsplit("/", 1)[-1]
+        line = getattr(f, "start_line", None) or getattr(f, "line_num", 0)
+        out.append(f"{fname}:{f.function_name}:{line}")
+    # user_frames yields innermost first; we want outermost first so common
+    # prefixes correspond to shared high-level call sites (Algorithm 2).
+    return tuple(reversed(out))
+
+
+def extract_graph(closed_jaxpr: ClosedJaxpr, *, name: str = "graph",
+                  inline_calls: bool = True) -> OpGraph:
+    """Build an OpGraph from a ClosedJaxpr, optionally inlining call prims."""
+
+    nodes: list[OpNode] = []
+    tensors: dict[int, TensorEdge] = {}
+    var_ids: dict[Any, int] = {}
+    next_tid = [0]
+
+    def tid_for(v, *, scope_suffix: str = "") -> int:
+        key = (id(v), scope_suffix)
+        if key not in var_ids:
+            t = next_tid[0]
+            next_tid[0] += 1
+            var_ids[key] = t
+            aval = v.aval
+            tensors[t] = TensorEdge(
+                tid=t, shape=tuple(getattr(aval, "shape", ())),
+                dtype=str(getattr(aval, "dtype", "float32")))
+        return var_ids[key]
+
+    def lit_tid(v) -> int:
+        t = next_tid[0]
+        next_tid[0] += 1
+        arr = np.asarray(v.val)
+        tensors[t] = TensorEdge(tid=t, shape=tuple(arr.shape), dtype=str(arr.dtype),
+                                is_const=True)
+        return t
+
+    def walk(jaxpr: Jaxpr, env: dict[Var, int], scope: tuple[str, ...]):
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            inner = _nested_jaxpr(eqn) if inline_calls else None
+            if inner is not None and prim in _INLINE_PRIMITIVES:
+                # Inline: map callee invars to caller tensor ids.
+                inner_env: dict[Var, int] = {}
+                for cv, cval in zip(inner.jaxpr.constvars, inner.consts):
+                    t = next_tid[0]
+                    next_tid[0] += 1
+                    arr = np.asarray(cval) if not hasattr(cval, "aval") else cval
+                    tensors[t] = TensorEdge(
+                        tid=t, shape=tuple(np.shape(arr)), dtype=str(np.asarray(arr).dtype)
+                        if not hasattr(arr, "dtype") else str(arr.dtype), is_const=True)
+                    inner_env[cv] = t
+                for iv, outer_v in zip(inner.jaxpr.invars, eqn.invars):
+                    inner_env[iv] = (lit_tid(outer_v) if isinstance(outer_v, Literal)
+                                     else env[outer_v])
+                sub_scope = scope + (prim,)
+                walk(inner.jaxpr, inner_env, sub_scope)
+                for ov, inner_ov in zip(eqn.outvars, inner.jaxpr.outvars):
+                    if isinstance(inner_ov, Literal):
+                        env[ov] = lit_tid(inner_ov)
+                    else:
+                        env[ov] = inner_env[inner_ov]
+                continue
+
+            in_tids = [lit_tid(v) if isinstance(v, Literal) else env[v]
+                       for v in eqn.invars]
+            out_tids = []
+            for v in eqn.outvars:
+                t = next_tid[0]
+                next_tid[0] += 1
+                aval = v.aval
+                tensors[t] = TensorEdge(tid=t, shape=tuple(getattr(aval, "shape", ())),
+                                        dtype=str(getattr(aval, "dtype", "float32")))
+                env[v] = t
+                out_tids.append(t)
+
+            idx = len(nodes)
+            node = OpNode(idx=idx, primitive=prim, params=dict(eqn.params),
+                          invars=in_tids, outvars=out_tids,
+                          call_path=_call_path(eqn), scope=scope)
+            nodes.append(node)
+            for t in in_tids:
+                tensors[t].consumers.append(idx)
+            for t in out_tids:
+                tensors[t].producer = idx
+
+    env: dict[Var, int] = {}
+    jaxpr = closed_jaxpr.jaxpr
+    for cv, cval in zip(jaxpr.constvars, closed_jaxpr.consts):
+        t = next_tid[0]
+        next_tid[0] += 1
+        shape = tuple(np.shape(cval))
+        dtype = str(cval.dtype) if hasattr(cval, "dtype") else str(np.asarray(cval).dtype)
+        tensors[t] = TensorEdge(tid=t, shape=shape, dtype=dtype, is_const=True)
+        env[cv] = t
+    inputs = []
+    for iv in jaxpr.invars:
+        t = next_tid[0]
+        next_tid[0] += 1
+        aval = iv.aval
+        tensors[t] = TensorEdge(tid=t, shape=tuple(getattr(aval, "shape", ())),
+                                dtype=str(getattr(aval, "dtype", "float32")),
+                                is_input=True)
+        env[iv] = t
+        inputs.append(t)
+
+    walk(jaxpr, env, ())
+
+    outputs = []
+    for ov in jaxpr.outvars:
+        t = lit_tid(ov) if isinstance(ov, Literal) else env[ov]
+        tensors[t].is_output = True
+        outputs.append(t)
+
+    return OpGraph(name=name, nodes=nodes, tensors=tensors, inputs=inputs,
+                   outputs=outputs, closed_jaxpr=closed_jaxpr)
+
+
+def trace(fn: Callable, *example_args, name: str | None = None,
+          inline_calls: bool = True, **example_kwargs) -> OpGraph:
+    """Trace ``fn`` on example args and return its operator graph."""
+    closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+    return extract_graph(closed, name=name or getattr(fn, "__name__", "graph"),
+                         inline_calls=inline_calls)

@@ -1,0 +1,194 @@
+"""Instrumenting jaxpr interpreter.
+
+The JAX analogue of the paper's CUPTI Callback tracing (§5.1): executes a
+traced program operator by operator, firing a callback with each operator's
+inputs/outputs.  Used for
+  * capturing intermediate tensor VALUES (tensor_match.py needs them),
+  * replay-based per-operator wall-time measurement (energy.py ReplayProfiler,
+    the paper's §5.2 software profiling mode),
+  * runtime overhead benchmarking (Fig. 10 analogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+from jax._src.core import ClosedJaxpr, Literal
+
+from repro.core.graph import OpGraph
+
+
+@dataclasses.dataclass
+class OpRecord:
+    node_idx: int
+    primitive: str
+    out_values: list[Any] | None      # only kept if capture_values
+    wall_time_s: float | None          # only set if measure (replay) enabled
+    replay_iters: int = 0
+
+
+def _bind(eqn, invals):
+    subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+    out = eqn.primitive.bind(*subfuns, *invals, **bind_params)
+    if not eqn.primitive.multiple_results:
+        out = [out]
+    return out
+
+
+# Collectives appearing inside an inlined shard_map body.  The interpreter
+# executes with *global* values; on this single-host container every mesh
+# axis has size 1, so each collective is semantically the identity (and
+# axis_index is 0).  Multi-shard interpretation is impossible off-cluster and
+# raises.
+_COLLECTIVES = {"psum", "pmax", "pmin", "pmean", "all_gather", "all_to_all",
+                "ppermute", "pbroadcast", "psum_scatter", "reduce_scatter",
+                "psum_invariant", "all_gather_invariant", "pvary"}
+
+
+def _collective_passthrough(eqn, invals, axis_sizes: dict[str, int]):
+    name = eqn.primitive.name
+    axes = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+    if not isinstance(axes, (tuple, list)):
+        axes = (axes,)
+    sizes = [axis_sizes.get(a, 1) for a in axes]
+    if any(s != 1 for s in sizes):
+        raise NotImplementedError(
+            f"cannot interpret {name} over axes {axes} with sizes {sizes} "
+            "on a single-host container")
+    if name == "axis_index":
+        return [np.int32(0)]
+    return list(invals)
+
+
+def run_instrumented(
+    graph: OpGraph,
+    *args,
+    capture_values: bool = False,
+    measure: bool = False,
+    min_replay_time_s: float = 5e-3,
+    max_replay_iters: int = 64,
+    on_op: Callable[[OpRecord], None] | None = None,
+) -> tuple[list[Any], list[OpRecord]]:
+    """Execute the graph's jaxpr operator-by-operator with instrumentation.
+
+    When ``measure`` is set, each operator is re-executed until at least
+    ``min_replay_time_s`` of wall time accumulates — the replay trick from the
+    paper's §5.2 that averages out timer/counter noise for microsecond ops.
+    Note the instrumented path executes the *unfused* operator stream, which
+    is exactly the operator-level execution model priced by costs.py.
+    """
+    closed = graph.closed_jaxpr
+    if closed is None:
+        raise ValueError("OpGraph was built without a ClosedJaxpr; cannot execute")
+    # Re-extract with the same flattening used to build `graph` so node idxs line up.
+    from repro.core.graph import extract_graph
+    flat = extract_graph(closed, name=graph.name, inline_calls=True)
+    if len(flat.nodes) != len(graph.nodes):
+        raise ValueError("graph/node mismatch; rebuild graph with extract_graph")
+
+    jaxpr = closed.jaxpr
+    env: dict[Any, Any] = {}
+
+    def read(v):
+        return v.val if isinstance(v, Literal) else env[v]
+
+    def write(v, val):
+        env[v] = val
+
+    for v, val in zip(jaxpr.constvars, closed.consts):
+        write(v, val)
+    flat_args = jax.tree_util.tree_leaves(args)
+    if len(flat_args) != len(jaxpr.invars):
+        raise ValueError(f"expected {len(jaxpr.invars)} args, got {len(flat_args)}")
+    for v, val in zip(jaxpr.invars, flat_args):
+        write(v, val)
+
+    records: list[OpRecord] = []
+    node_idx = 0
+
+    def exec_eqns(eqns, inner_env, read_fn, write_fn,
+                  axis_sizes: dict[str, int] | None = None):
+        nonlocal node_idx
+        from repro.core.graph import _INLINE_PRIMITIVES, _nested_jaxpr
+        axis_sizes = axis_sizes or {}
+        for eqn in eqns:
+            inner = _nested_jaxpr(eqn)
+            if inner is not None and eqn.primitive.name in _INLINE_PRIMITIVES:
+                sub_env: dict[Any, Any] = {}
+
+                def sread(v, _se=sub_env):
+                    return v.val if isinstance(v, Literal) else _se[v]
+
+                def swrite(v, val, _se=sub_env):
+                    _se[v] = val
+
+                sub_axes = dict(axis_sizes)
+                if eqn.primitive.name == "shard_map":
+                    mesh = eqn.params.get("mesh")
+                    if mesh is not None:
+                        sub_axes.update({str(k): int(v)
+                                         for k, v in mesh.shape.items()})
+                for cv, cval in zip(inner.jaxpr.constvars, inner.consts):
+                    swrite(cv, cval)
+                for iv, ov in zip(inner.jaxpr.invars, eqn.invars):
+                    swrite(iv, read_fn(ov))
+                exec_eqns(inner.jaxpr.eqns, sub_env, sread, swrite, sub_axes)
+                for ov, iv in zip(eqn.outvars, inner.jaxpr.outvars):
+                    write_fn(ov, sread(iv))
+                continue
+
+            invals = [read_fn(v) for v in eqn.invars]
+            wall = None
+            iters = 0
+            if eqn.primitive.name in _COLLECTIVES or \
+                    eqn.primitive.name == "axis_index":
+                out = _collective_passthrough(eqn, invals, axis_sizes)
+            elif measure:
+                # warmup once (compile path), then replay until stable
+                out = _bind(eqn, invals)
+                jax.block_until_ready(out)
+                t0 = time.perf_counter()
+                elapsed = 0.0
+                while elapsed < min_replay_time_s and iters < max_replay_iters:
+                    out = _bind(eqn, invals)
+                    jax.block_until_ready(out)
+                    iters += 1
+                    elapsed = time.perf_counter() - t0
+                wall = elapsed / max(iters, 1)
+            else:
+                out = _bind(eqn, invals)
+            for v, val in zip(eqn.outvars, out):
+                write_fn(v, val)
+            rec = OpRecord(
+                node_idx=node_idx,
+                primitive=eqn.primitive.name,
+                out_values=[np.asarray(o) for o in out] if capture_values else None,
+                wall_time_s=wall,
+                replay_iters=iters,
+            )
+            records.append(rec)
+            if on_op is not None:
+                on_op(rec)
+            node_idx += 1
+
+    exec_eqns(jaxpr.eqns, env, read, write, {})
+    outs = [read(v) for v in jaxpr.outvars]
+    return outs, records
+
+
+def capture_tensor_values(graph: OpGraph, *args) -> dict[int, np.ndarray]:
+    """Map tensor-id -> concrete value for every edge in the graph."""
+    values: dict[int, np.ndarray] = {}
+    flat_args = jax.tree_util.tree_leaves(args)
+    for tid, val in zip(graph.inputs, flat_args):
+        values[tid] = np.asarray(val)
+    outs, records = run_instrumented(graph, *args, capture_values=True)
+    for rec in records:
+        node = graph.nodes[rec.node_idx]
+        for tid, val in zip(node.outvars, rec.out_values or []):
+            values[tid] = val
+    return values

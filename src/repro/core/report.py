@@ -1,0 +1,91 @@
+"""Findings data model and rendering for the differential energy debugger."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from repro.core.diagnose import Diagnosis
+
+
+@dataclasses.dataclass
+class Finding:
+    """One detected software-energy-waste (or trade-off) region."""
+
+    region_idx: int
+    energy_a_j: float
+    energy_b_j: float
+    time_a_s: float
+    time_b_s: float
+    nodes_a: list[int]
+    nodes_b: list[int]
+    classification: str          # 'energy_waste' | 'tradeoff' | 'comparable'
+    wasteful_side: str           # 'A' | 'B' | '-'
+    diagnosis: Diagnosis | None = None
+
+    @property
+    def energy_delta_pct(self) -> float:
+        lo = min(self.energy_a_j, self.energy_b_j)
+        hi = max(self.energy_a_j, self.energy_b_j)
+        if lo <= 0:
+            return 0.0 if hi <= 0 else float("inf")
+        return (hi - lo) / lo * 100.0
+
+    @property
+    def perf_delta_pct(self) -> float:
+        lo = min(self.time_a_s, self.time_b_s)
+        hi = max(self.time_a_s, self.time_b_s)
+        if lo <= 0:
+            return 0.0
+        return (hi - lo) / lo * 100.0
+
+
+@dataclasses.dataclass
+class Report:
+    name_a: str
+    name_b: str
+    findings: list[Finding]
+    total_energy_a_j: float
+    total_energy_b_j: float
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def waste_findings(self) -> list[Finding]:
+        return [f for f in self.findings if f.classification == "energy_waste"]
+
+    def render(self, *, max_findings: int = 10) -> str:
+        lines = []
+        lines.append(f"=== Magneton differential energy report: "
+                     f"A={self.name_a} vs B={self.name_b} ===")
+        lines.append(f"total energy  A: {self.total_energy_a_j:.4e} J   "
+                     f"B: {self.total_energy_b_j:.4e} J   "
+                     f"(Δ {self._total_delta():+.1f}% A vs B)")
+        waste = self.waste_findings
+        lines.append(f"matched regions: {len(self.findings)}   "
+                     f"energy-waste findings: {len(waste)}")
+        for f in sorted(waste, key=lambda f: -abs(f.energy_a_j - f.energy_b_j))[:max_findings]:
+            lines.append(f"--- region {f.region_idx}: wasteful side {f.wasteful_side}, "
+                         f"ΔE {f.energy_delta_pct:.1f}% "
+                         f"(A {f.energy_a_j:.3e} J vs B {f.energy_b_j:.3e} J), "
+                         f"Δperf {f.perf_delta_pct:.2f}%")
+            d = f.diagnosis
+            if d is not None:
+                lines.append(f"    kind: {d.kind}")
+                lines.append(f"    deviation point: {d.deviation_point}")
+                lines.append(f"    {d.detail}")
+                for kv in d.key_variables[:6]:
+                    lines.append(f"    key variable: {kv}")
+        return "\n".join(lines)
+
+    def _total_delta(self) -> float:
+        if self.total_energy_b_j <= 0:
+            return 0.0
+        return (self.total_energy_a_j - self.total_energy_b_j) / self.total_energy_b_j * 100.0
+
+    def to_json(self) -> str:
+        def enc(o):
+            if dataclasses.is_dataclass(o) and not isinstance(o, type):
+                return dataclasses.asdict(o)
+            raise TypeError(type(o))
+        return json.dumps(dataclasses.asdict(self), default=enc, indent=2)

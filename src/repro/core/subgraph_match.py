@@ -1,0 +1,262 @@
+"""Topology-aware subgraph matching (the paper's Algorithm 1).
+
+Builds an op/tensor bipartite flow graph per side, computes dominator trees
+(Cooper–Harvey–Kennedy over the DAG's reverse-post-order), extracts the
+dominator path from the virtual source to the virtual sink, and uses
+bijectively-matched equivalent tensors that appear on BOTH dominator paths as
+cut points.  Regions between consecutive cut points are recursively matched
+(divide and conquer), giving O(N²) overall as in the paper.
+
+Weights/constants are side inputs: they do not participate in domination
+(otherwise every parameter edge would destroy the dominator chain — in the
+paper's Figure 7 the cut points are activations, with weights entering each
+region from the side).  Ops reachable only from side inputs (e.g. a weight
+transpose) are assigned to the region of their first activation-consumer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.graph import OpGraph
+
+Vertex = tuple[str, int]   # ("op", node_idx) or ("t", tensor_id)
+_SRC: Vertex = ("src", -1)
+_SNK: Vertex = ("snk", -1)
+
+
+def _build_flow(graph: OpGraph, src_tids: Sequence[int],
+                snk_tids: Sequence[int]) -> dict[Vertex, list[Vertex]]:
+    """Adjacency of the op/tensor flow graph between given tensor frontiers."""
+    succ: dict[Vertex, list[Vertex]] = {_SRC: [], _SNK: []}
+    src_set, snk_set = set(src_tids), set(snk_tids)
+    nodes = graph.subgraph_nodes_between(src_set, snk_set)
+    node_set = set(nodes)
+
+    interior_tids: set[int] = set()
+    for n in nodes:
+        for t in graph.nodes[n].outvars:
+            if t not in snk_set:
+                interior_tids.add(t)
+
+    for t in src_set:
+        succ[_SRC].append(("t", t))
+        succ[("t", t)] = []
+    for t in snk_set:
+        succ.setdefault(("t", t), []).append(_SNK)
+    for t in interior_tids:
+        succ.setdefault(("t", t), [])
+
+    for n in nodes:
+        v = ("op", n)
+        succ[v] = []
+        for t in graph.nodes[n].outvars:
+            if t in snk_set or t in interior_tids:
+                succ[v].append(("t", t))
+    for t in list(src_set) + list(interior_tids):
+        for c in graph.tensors[t].consumers:
+            if c in node_set:
+                succ[("t", t)].append(("op", c))
+    return succ
+
+
+def _dominator_path(succ: dict[Vertex, list[Vertex]]) -> list[Vertex]:
+    """Vertices dominating _SNK, in order from _SRC to _SNK."""
+    # reverse post-order from _SRC (iterative DFS)
+    visited: set[Vertex] = set()
+    post: list[Vertex] = []
+    stack: list[tuple[Vertex, int]] = [(_SRC, 0)]
+    visited.add(_SRC)
+    while stack:
+        v, i = stack.pop()
+        kids = succ.get(v, [])
+        if i < len(kids):
+            stack.append((v, i + 1))
+            k = kids[i]
+            if k not in visited:
+                visited.add(k)
+                stack.append((k, 0))
+        else:
+            post.append(v)
+    rpo = list(reversed(post))
+    order = {v: i for i, v in enumerate(rpo)}
+    preds: dict[Vertex, list[Vertex]] = {v: [] for v in rpo}
+    for v in rpo:
+        for k in succ.get(v, []):
+            if k in order:
+                preds[k].append(v)
+
+    idom: dict[Vertex, Vertex | None] = {v: None for v in rpo}
+    idom[_SRC] = _SRC
+
+    def intersect(a: Vertex, b: Vertex) -> Vertex:
+        while a != b:
+            while order[a] > order[b]:
+                a = idom[a]  # type: ignore[assignment]
+            while order[b] > order[a]:
+                b = idom[b]  # type: ignore[assignment]
+        return a
+
+    changed = True
+    while changed:
+        changed = False
+        for v in rpo:
+            if v == _SRC:
+                continue
+            new = None
+            for p in preds[v]:
+                if idom[p] is not None:
+                    new = p if new is None else intersect(new, p)
+            if new is not None and idom[v] != new:
+                idom[v] = new
+                changed = True
+
+    if _SNK not in idom or idom[_SNK] is None:
+        return []
+    path = [_SNK]
+    v = _SNK
+    while v != _SRC:
+        v = idom[v]  # type: ignore[assignment]
+        if v is None:
+            return []
+        path.append(v)
+    return list(reversed(path))
+
+
+@dataclasses.dataclass
+class MatchedRegion:
+    """A pair of semantically equivalent subgraphs, one per side."""
+
+    nodes_a: list[int]
+    nodes_b: list[int]
+    in_pair: tuple[int, int] | None    # (tid_a, tid_b) entry cut point
+    out_pair: tuple[int, int] | None   # exit cut point
+    depth: int = 0
+
+    def size(self) -> int:
+        return max(len(self.nodes_a), len(self.nodes_b))
+
+
+def _attach_side_ops(graph: OpGraph, region_nodes: list[int],
+                     claimed: set[int]) -> list[int]:
+    """Pull in unclaimed producers of side inputs (weight preprocessing)."""
+    out = set(region_nodes)
+    frontier = list(region_nodes)
+    while frontier:
+        n = frontier.pop()
+        for t in graph.nodes[n].invars:
+            p = graph.tensors[t].producer
+            if p is not None and p not in out and p not in claimed:
+                out.add(p)
+                frontier.append(p)
+    return sorted(out)
+
+
+def match_subgraphs(
+    graph_a: OpGraph, graph_b: OpGraph,
+    eq_pairs: Sequence[tuple[int, int]],
+    *,
+    stream_inputs_a: Sequence[int] | None = None,
+    stream_inputs_b: Sequence[int] | None = None,
+) -> list[MatchedRegion]:
+    """Algorithm 1: recursively match equivalent regions of two graphs.
+
+    ``eq_pairs`` are equivalent-tensor pairs from TensorMatcher (they will be
+    reduced to bijective pairs here).  ``stream_inputs_*`` select which graph
+    inputs carry the activation stream (default: all inputs shared by an
+    equivalent pair, falling back to all inputs).
+    """
+    from repro.core.tensor_match import bijective_pairs
+    eq = bijective_pairs(eq_pairs)
+    eq_a2b = dict(eq)
+
+    def default_stream(graph: OpGraph, side_is_a: bool) -> list[int]:
+        tids = []
+        for t in graph.inputs:
+            if side_is_a and t in eq_a2b:
+                tids.append(t)
+            elif not side_is_a and t in set(eq_a2b.values()):
+                tids.append(t)
+        return tids or list(graph.inputs)
+
+    src_a = list(stream_inputs_a) if stream_inputs_a else default_stream(graph_a, True)
+    src_b = list(stream_inputs_b) if stream_inputs_b else default_stream(graph_b, True is False)
+
+    regions: list[MatchedRegion] = []
+
+    def recurse(src_ta: list[int], snk_ta: list[int],
+                src_tb: list[int], snk_tb: list[int],
+                in_pair, out_pair, depth: int):
+        flow_a = _build_flow(graph_a, src_ta, snk_ta)
+        flow_b = _build_flow(graph_b, src_tb, snk_tb)
+        path_a = _dominator_path(flow_a)
+        path_b = _dominator_path(flow_b)
+        # interior tensor vertices on the dominator paths (exclude frontiers)
+        ends_a = set(src_ta) | set(snk_ta)
+        ends_b = set(src_tb) | set(snk_tb)
+        dom_a = [t for (kind, t) in path_a if kind == "t" and t not in ends_a]
+        dom_b = [t for (kind, t) in path_b if kind == "t" and t not in ends_b]
+        dom_b_order = {t: i for i, t in enumerate(dom_b)}
+        # ordered, order-consistent cut pairs (strictly increasing in B)
+        cuts: list[tuple[int, int]] = []
+        last_b = -1
+        for ta in dom_a:
+            tb = eq_a2b.get(ta)
+            if tb is None or tb not in dom_b_order:
+                continue
+            if dom_b_order[tb] > last_b:
+                cuts.append((ta, tb))
+                last_b = dom_b_order[tb]
+        if not cuts:  # |E| = 1 base case: the whole region matches
+            na = graph_a.subgraph_nodes_between(set(src_ta), set(snk_ta))
+            nb = graph_b.subgraph_nodes_between(set(src_tb), set(snk_tb))
+            if na or nb:
+                regions.append(MatchedRegion(nodes_a=na, nodes_b=nb,
+                                             in_pair=in_pair, out_pair=out_pair,
+                                             depth=depth))
+            return
+        # divide and conquer on the cut points
+        bounds_a = [src_ta] + [[ta] for ta, _ in cuts] + [snk_ta]
+        bounds_b = [src_tb] + [[tb] for _, tb in cuts] + [snk_tb]
+        pair_bounds = [in_pair] + cuts + [out_pair]
+        for k in range(len(bounds_a) - 1):
+            recurse(bounds_a[k], bounds_a[k + 1],
+                    bounds_b[k], bounds_b[k + 1],
+                    pair_bounds[k], pair_bounds[k + 1], depth + 1)
+
+    recurse(src_a, list(graph_a.outputs), src_b, list(graph_b.outputs),
+            None, None, 0)
+
+    # Adaptive source selection: a heavily-shared side input (e.g. a weight
+    # matrix reused by every layer) in the source set gives every operator a
+    # bypass path from _SRC, destroying the dominator chain (no cut points,
+    # one giant region).  If the first pass is degenerate and there are
+    # several matched inputs, retry with each input pair as the sole stream
+    # source and keep the most fine-grained (paper Fig. 7 treats weights as
+    # side inputs for exactly this reason).
+    n_nodes = max(len(graph_a.nodes), len(graph_b.nodes))
+    degenerate = len(regions) <= max(2, n_nodes // 50)
+    if (degenerate and stream_inputs_a is None and len(src_a) > 1
+            and n_nodes >= 20):
+        best = regions
+        for ta in src_a:
+            tb = eq_a2b.get(ta)
+            if tb is None or tb not in set(src_b):
+                continue
+            regions = []
+            recurse([ta], list(graph_a.outputs), [tb],
+                    list(graph_b.outputs), None, None, 0)
+            if len(regions) > len(best):
+                best = regions
+        regions = best
+
+    # attach weight-only side ops to their consuming region
+    claimed_a = {n for r in regions for n in r.nodes_a}
+    claimed_b = {n for r in regions for n in r.nodes_b}
+    for r in regions:
+        r.nodes_a = _attach_side_ops(graph_a, r.nodes_a, claimed_a - set(r.nodes_a))
+        r.nodes_b = _attach_side_ops(graph_b, r.nodes_b, claimed_b - set(r.nodes_b))
+        claimed_a |= set(r.nodes_a)
+        claimed_b |= set(r.nodes_b)
+    return regions

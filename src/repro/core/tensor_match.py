@@ -1,0 +1,214 @@
+"""Semantically-equivalent tensor matching via multi-mode SVD invariants.
+
+Implements the paper's §4.2 tensor matcher: layout transformations (permute,
+reshape) reorder entries but preserve (a) every entry-symmetric statistic and
+(b) the singular-value spectra of the *corresponding* tensor unfoldings.  Two
+tensors are declared equivalent when their cheap symmetric invariants agree
+within tolerance AND at least one pair of equal-length unfolding spectra
+matches (Hypothesis 1 requires this to hold for every probed model input).
+
+For tensors too large for dense SVDs we fall back to the symmetric invariants
+only, which are still exact under permute/reshape (they are functions of the
+entry multiset).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TensorSignature:
+    numel: int
+    dtype: str
+    # entry-symmetric invariants (exact under any permute/reshape)
+    l1: float
+    l2: float
+    mean: float
+    amax: float
+    amin: float
+    # invariant SET S(T): spectra of ALL unfoldings, keyed by sorted matrix
+    # dims (rows, cols) with rows <= cols so transposed unfoldings compare
+    # equal.  Each key holds the list of spectra for that unfolding shape —
+    # a permutation of axes permutes WHICH unfolding produces WHICH spectrum,
+    # so matching is set-wise per key.
+    spectra: dict[tuple[int, int], list[np.ndarray]] | None
+
+    def is_degenerate(self) -> bool:
+        return self.numel < 2 or not np.isfinite(self.l2)
+
+
+def _unfoldings(shape: tuple[int, ...]) -> list[tuple[tuple[int, ...], tuple[int, ...]]]:
+    r = len(shape)
+    axes = list(range(r))
+    outs = []
+    seen = set()
+    for k in range(1, r):
+        for G in itertools.combinations(axes, k):
+            Gc = tuple(a for a in axes if a not in G)
+            key = frozenset((G, Gc))
+            if key in seen:
+                continue
+            seen.add(key)
+            outs.append((G, Gc))
+    return outs
+
+
+def signature(arr: np.ndarray, *, max_svd_numel: int = 1 << 20,
+              max_order: int = 5, max_unfoldings: int = 16) -> TensorSignature:
+    a = np.asarray(arr)
+    if a.dtype.kind == "c":
+        a = np.abs(a).astype(np.float64)   # complex: layout-invariant modulus
+    elif a.dtype.kind in "biu?":
+        a = a.astype(np.float64)
+    else:
+        a = a.astype(np.float64, copy=False)
+    flat = a.ravel()
+    numel = flat.size
+    l1 = float(np.sum(np.abs(flat))) if numel else 0.0
+    l2 = float(np.sqrt(np.sum(flat * flat))) if numel else 0.0
+    mean = float(np.mean(flat)) if numel else 0.0
+    amax = float(np.max(flat)) if numel else 0.0
+    amin = float(np.min(flat)) if numel else 0.0
+
+    spectra: dict[tuple[int, int], list[np.ndarray]] | None = None
+    shape = tuple(int(s) for s in np.shape(arr))
+    r = len(shape)
+    if 2 <= numel <= max_svd_numel and 1 <= r <= max_order:
+        spectra = {}
+        unfs = _unfoldings(shape) if r >= 2 else [((0,), ())]
+        if r == 1:
+            m = a.reshape(1, -1)
+            s = np.linalg.svd(m, compute_uv=False)
+            spectra[(1, numel)] = [s]
+        else:
+            for G, Gc in unfs[:max_unfoldings]:
+                rows = int(np.prod([shape[i] for i in G], dtype=np.int64))
+                cols = int(np.prod([shape[i] for i in Gc], dtype=np.int64))
+                m = np.transpose(a, G + Gc).reshape(rows, cols)
+                if rows > cols:
+                    rows, cols = cols, rows
+                try:
+                    s = np.linalg.svd(m, compute_uv=False)
+                except np.linalg.LinAlgError:
+                    continue
+                spectra.setdefault((rows, cols), []).append(np.sort(s)[::-1])
+    return TensorSignature(numel=numel, dtype=str(np.asarray(arr).dtype),
+                           l1=l1, l2=l2, mean=mean, amax=amax, amin=amin,
+                           spectra=spectra)
+
+
+def _close(x: float, y: float, rtol: float) -> bool:
+    scale = max(abs(x), abs(y), 1e-30)
+    return abs(x - y) <= rtol * scale
+
+
+def signatures_match(a: TensorSignature, b: TensorSignature, *,
+                     rtol: float = 1e-3) -> bool:
+    """Hypothesis-1 equivalence test for one input sample."""
+    if a.is_degenerate() or b.is_degenerate():
+        return False
+    if a.numel != b.numel:
+        return False
+    for xa, xb in ((a.l1, b.l1), (a.l2, b.l2), (a.mean, b.mean),
+                   (a.amax, b.amax), (a.amin, b.amin)):
+        if not _close(xa, xb, rtol):
+            return False
+    if a.spectra is None or b.spectra is None:
+        return True  # symmetric invariants only (large tensors)
+    shared = set(a.spectra) & set(b.spectra)
+    if not shared:
+        # No unfolding with common matrix dims (exotic reshape): fall back to
+        # the symmetric invariants, which already passed.
+        return True
+
+    def spec_close(sa: np.ndarray, sb: np.ndarray) -> bool:
+        n = min(len(sa), len(sb))
+        denom = float(np.linalg.norm(sa[:n])) + 1e-30
+        return float(np.linalg.norm(sa[:n] - sb[:n])) / denom <= rtol * 10
+
+    # set-wise match per key (the paper's invariant set S(T)): every spectrum
+    # on the smaller side must find a distinct partner on the other side.
+    for key in shared:
+        la, lb = a.spectra[key], b.spectra[key]
+        small, big = (la, lb) if len(la) <= len(lb) else (lb, la)
+        used: set[int] = set()
+        for sa in small:
+            hit = None
+            for j, sb in enumerate(big):
+                if j not in used and spec_close(sa, sb):
+                    hit = j
+                    break
+            if hit is None:
+                return False
+            used.add(hit)
+    return True
+
+
+@dataclasses.dataclass
+class TensorMatcher:
+    """Matches tensors across two graphs from one or more value captures."""
+
+    rtol: float = 1e-3
+    max_svd_numel: int = 1 << 20
+    min_numel: int = 2
+
+    def _sig_table(self, values: dict[int, np.ndarray]) -> dict[int, TensorSignature]:
+        out = {}
+        for tid, val in values.items():
+            if np.size(val) < self.min_numel:
+                continue
+            out[tid] = signature(val, max_svd_numel=self.max_svd_numel)
+        return out
+
+    def match(self, values_a: Sequence[dict[int, np.ndarray]],
+              values_b: Sequence[dict[int, np.ndarray]]) -> list[tuple[int, int]]:
+        """Return (tid_a, tid_b) pairs equivalent under EVERY input sample.
+
+        ``values_a[k]`` / ``values_b[k]`` are tensor-id -> value maps captured
+        from the two graphs on the k-th identical model input.
+        """
+        if len(values_a) != len(values_b) or not values_a:
+            raise ValueError("need the same nonzero number of captures per side")
+        sig_a = [self._sig_table(v) for v in values_a]
+        sig_b = [self._sig_table(v) for v in values_b]
+        tids_a = set(sig_a[0])
+        tids_b = set(sig_b[0])
+        for t in sig_a[1:]:
+            tids_a &= set(t)
+        for t in sig_b[1:]:
+            tids_b &= set(t)
+
+        # bucket by numel to avoid the full cross product in practice
+        by_numel: dict[int, list[int]] = {}
+        for tb in tids_b:
+            by_numel.setdefault(sig_b[0][tb].numel, []).append(tb)
+
+        pairs: list[tuple[int, int]] = []
+        for ta in sorted(tids_a):
+            for tb in by_numel.get(sig_a[0][ta].numel, ()):  # candidates
+                ok = all(signatures_match(sa[ta], sb[tb], rtol=self.rtol)
+                         for sa, sb in zip(sig_a, sig_b))
+                if ok:
+                    pairs.append((ta, tb))
+        return pairs
+
+
+def bijective_pairs(pairs: Iterable[tuple[int, int]]) -> list[tuple[int, int]]:
+    """Keep only pairs whose endpoints match exactly one partner each.
+
+    Ambiguous matches (a tensor numerically equal to several peers, e.g. a
+    value and its copy) cannot serve as cut points; Algorithm 1 needs
+    unambiguous correspondences.
+    """
+    count_a: dict[int, int] = {}
+    count_b: dict[int, int] = {}
+    plist = list(pairs)
+    for a, b in plist:
+        count_a[a] = count_a.get(a, 0) + 1
+        count_b[b] = count_b.get(b, 0) + 1
+    return [(a, b) for a, b in plist if count_a[a] == 1 and count_b[b] == 1]

@@ -1,0 +1,3 @@
+from repro.hw.specs import HardwareSpec, TPU_V5E, TPU_V5P, CPU_HOST, get_spec
+
+__all__ = ["HardwareSpec", "TPU_V5E", "TPU_V5P", "CPU_HOST", "get_spec"]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the compute hot-spots the paper's findings target.
+
+flash_attention — streaming online-softmax prefill attention (vllm-20174)
+rmsnorm        — single-HBM-pass fused norm (pytorch-76012 class)
+fused_act      — fused SwiGLU / tanh-GELU (hf-39073: fused vs 5-kernel GELU)
+ssm_scan       — VMEM-resident chunked selective scan (state never hits HBM)
+
+Each kernel ships with a pure-jnp oracle in ref.py (also its energy-wasteful
+twin for the differential debugger) and a jit'd wrapper in ops.py that
+auto-selects interpret mode off-TPU.
+"""
+
+from repro.kernels.ops import (flash_attention, fused_gelu, fused_rmsnorm,
+                               fused_ssm_scan, fused_swiglu)
+
+__all__ = ["flash_attention", "fused_rmsnorm", "fused_swiglu", "fused_gelu",
+           "fused_ssm_scan"]

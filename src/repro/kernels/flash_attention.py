@@ -1,0 +1,127 @@
+"""Flash attention for TPU: tiled online-softmax with explicit VMEM blocking.
+
+TPU adaptation of the paper's prefill-attention finding (vllm-20174 /
+"default prefill attention can be inefficient"): the efficient implementation
+never materializes the (Sq, Sk) score matrix in HBM.  The kernel streams
+(block_q x d) query tiles against (block_k x d) key/value tiles held in VMEM,
+maintaining the online-softmax running max/denominator in VMEM scratch, and
+writes each output tile exactly once.  HBM traffic drops from
+O(Sq*Sk + S*d) to O(S*d) — on a 32k prefill that is the difference between
+~4 GB and ~17 MB of score traffic per head.
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks); the kv dimension is the
+minormost (sequential on TPU), so VMEM scratch persists across kv steps.
+MXU alignment: block_q/block_k multiples of 128 in production; d padded to a
+lane multiple by the wrapper (ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30          # avoids -inf - -inf = nan in the rescale path
+_LANES = 128             # TPU lane width; m/l scratch broadcast over lanes
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, sm_scale: float, block_q: int, block_k: int,
+                  num_kv_blocks: int, q_offset: int):
+    """One (q-block, kv-block) step of the online-softmax recurrence."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal block skip: a kv block strictly above the diagonal of this q
+    # block contributes nothing; skip its FLOPs (and on real TPU, its DMA
+    # cost is hidden by the same-shape pipeline).
+    q_start = qi * block_q + q_offset                 # global q row of tile
+    should_run = True
+    if causal:
+        should_run = ki * block_k <= q_start + block_q - 1
+
+    @pl.when(should_run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)              # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(                       # (block_q, block_k)
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                           (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                          # (block_q, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_cur)                 # rescale factor
+        p = jnp.exp(s - m_cur)                         # (block_q, block_k)
+        l_ref[...] = l_ref[...] * corr + jnp.broadcast_to(
+            jnp.sum(p, axis=-1, keepdims=True), l_ref.shape)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)               # fully-masked rows
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, sm_scale: float | None = None,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    """Flat-head flash attention.  q: (BH, Sq, D); k,v: (BH, Sk, D).
+
+    GQA head-group mapping is handled by the wrapper (ops.flash_attention),
+    which expands k/v indices; here heads are 1:1.
+    """
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0, (Sq, block_q)
+    assert Sk % block_k == 0, (Sk, block_k)
+    num_q = Sq // block_q
+    num_kv = Sk // block_k
+    scale = sm_scale if sm_scale is not None else float(1.0 / np.sqrt(D))
+    q_offset = Sk - Sq if causal else 0                # cached-decode offset
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, sm_scale=scale, block_q=block_q,
+        block_k=block_k, num_kv_blocks=num_kv, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, num_q, num_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),      # acc
+            pltpu.VMEM((block_q, _LANES), jnp.float32),  # running max
+            pltpu.VMEM((block_q, _LANES), jnp.float32),  # running denom
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

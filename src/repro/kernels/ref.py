@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel allclose tests (tests/
+test_kernels.py) and simultaneously the *energy-wasteful twins* used by the
+differential debugger: each oracle materializes intermediates in HBM that the
+fused kernel keeps in VMEM, so (ref, kernel) pairs double as zoo cases.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, sm_scale: float | None = None) -> jax.Array:
+    """Naive full-matrix attention.  q: (B,H,Sq,D); k,v: (B,KV,Sk,D).
+
+    Materializes the (Sq,Sk) score matrix in HBM — the wasteful twin of the
+    flash kernel (zoo case vllm-20174).  GQA via head-group broadcasting.
+    """
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    g = H // KV
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, KV, g, Sq, D)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        offset = Sk - Sq
+        qpos = jnp.arange(Sq)[:, None] + offset
+        kpos = jnp.arange(Sk)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """x: (..., d); w: (d,).  fp32 statistics, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(g: jax.Array, u: jax.Array) -> jax.Array:
+    """silu(g) * u, elementwise."""
+    gf = g.astype(jnp.float32)
+    return (gf * jax.nn.sigmoid(gf) * u.astype(jnp.float32)).astype(g.dtype)
+
+
+def gelu_tanh(x: jax.Array) -> jax.Array:
+    """Tanh-approximate GELU, the five-op unfused form (case hf-39073)."""
+    xf = x.astype(jnp.float32)
+    c = np.sqrt(2.0 / np.pi).astype(np.float32)
+    inner = c * (xf + 0.044715 * xf * xf * xf)
+    return (0.5 * xf * (1.0 + jnp.tanh(inner))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# selective scan (mamba)
+# ---------------------------------------------------------------------------
+
+def ssm_scan(a: jax.Array, b: jax.Array, c: jax.Array,
+             h0: jax.Array, *, chunk: int = 64) -> tuple[jax.Array, jax.Array]:
+    """Fused selective scan oracle.
+
+    Solves h_t = a_t * h_{t-1} + b_t and projects y_t = <h_t, c_t>_n.
+    a, b: (B,S,di,n) f32; c: (B,S,n) f32; h0: (B,di,n) f32.
+    Returns (y (B,S,di) f32, h_last (B,di,n) f32).
+
+    This oracle materializes all S states in HBM (the wasteful twin); the
+    Pallas kernel keeps the state in VMEM and only writes y.
+    """
+    B, S, di, n = a.shape
+    q = min(chunk, S)
+    assert S % q == 0
+    nc = S // q
+    a_c = a.reshape(B, nc, q, di, n).transpose(1, 0, 2, 3, 4)
+    b_c = b.reshape(B, nc, q, di, n).transpose(1, 0, 2, 3, 4)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_step(h, ab):
+        ac, bc = ab
+        aa, bb = jax.lax.associative_scan(op, (ac, bc), axis=1)
+        h_steps = aa * h[:, None] + bb
+        return h_steps[:, -1], h_steps
+
+    h_last, h_all = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    h_all = h_all.transpose(1, 0, 2, 3, 4).reshape(B, S, di, n)
+    y = jnp.einsum("bsen,bsn->bse", h_all, c)
+    return y, h_last

@@ -1,0 +1,71 @@
+"""Dtype-faithful analytic cost of a cell, from the step jaxpr.
+
+Why this exists: the dry-run's compiled numbers come from the XLA *CPU*
+pipeline, whose FloatNormalization pass rewrites every bf16 tensor to f32
+before buffer assignment — so ``cost_analysis()['bytes accessed']`` prices
+bf16 traffic at 4 bytes and cannot see dtype-level optimizations (bf16
+attention scores, bf16 gradient reduction).  This module prices the SAME
+step with core/costs.py operator rules, which read the true jaxpr dtypes
+(scan bodies multiplied by trip count, collectives priced in ici_bytes).
+
+Used by §Perf as the second meter next to the compiled-artifact numbers:
+structural changes are validated on both meters; dtype changes on this one.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_config
+from repro.core.costs import graph_cost
+from repro.core.graph import trace
+from repro.launch.specs import batch_specs
+from repro.models import transformer as tf
+from repro.train.optimizer import OptimizerConfig, abstract_opt_state
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+def analytic_cell_cost(arch: str, shape_name: str, *,
+                       attn_impl: str = "xla",
+                       devices: int = 256,
+                       remat: bool = True) -> dict:
+    """Global flops/bytes/ici of one (arch x shape) step, divided by the
+    device count under the uniform-sharding assumption."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tcfg = TrainConfig(attn_impl=attn_impl, remat=remat)
+        opt_cfg = OptimizerConfig()
+        step = make_train_step(cfg, None, opt_cfg, tcfg)
+        params = tf.model_abstract_params(cfg)
+        opt = abstract_opt_state(params, opt_cfg)
+        batch = batch_specs(cfg, shape)
+        closed = jax.make_jaxpr(step)(params, opt, batch)
+    elif shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+
+        def fn(params, tokens):
+            return tf.prefill(cfg, params, tokens, max_len=S,
+                              attn_impl=attn_impl)[0]
+        params = tf.model_abstract_params(cfg)
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        closed = jax.make_jaxpr(fn)(params, tokens)
+    else:
+        B, S = shape.global_batch, shape.seq_len
+
+        def fn(params, caches, tokens, pos):
+            return tf.decode_step(cfg, params, caches, tokens, pos,
+                                  attn_impl=attn_impl)[0]
+        params = tf.model_abstract_params(cfg)
+        caches = tf.abstract_cache(cfg, B, S)
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        closed = jax.make_jaxpr(fn)(params, caches, tokens, pos)
+
+    from repro.core.graph import extract_graph
+    g = extract_graph(closed, name=f"{arch}/{shape_name}")
+    c = graph_cost(g)
+    return {"flops": c.flops / devices, "bytes": c.hbm_bytes / devices,
+            "ici_bytes": c.ici_bytes / devices,
+            "global_flops": c.flops, "global_bytes": c.hbm_bytes}

@@ -1,0 +1,139 @@
+"""Mamba selective-SSM block (for jamba's hybrid stack).
+
+Training/prefill uses a *chunked* selective scan: within each chunk of
+``cfg.ssm_chunk`` steps the first-order linear recurrence
+    h_t = a_t * h_{t-1} + b_t,   a_t = exp(dt_t * A),  b_t = dt_t * B_t * x_t
+is solved with an associative scan (parallel, MXU/VPU friendly); the state is
+carried across chunks with jax.lax.scan.  This is the same decomposition the
+``ssm_scan`` Pallas kernel implements on TPU (kernels/ssm_scan.py); the XLA
+path here is its oracle.  Decode is the O(1) recurrent step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, ParamTree
+from repro.sharding.rules import constrain
+
+Cache = dict[str, jax.Array]
+
+
+def mamba_schema(cfg: ModelConfig) -> ParamTree:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    n, dtr, cw = cfg.ssm_state_dim, cfg.resolved_dt_rank, cfg.ssm_conv_dim
+    dt = cfg.dtype
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner"), dtype=dt),
+        "conv_w": ParamSpec((cw, di), (None, "ssm_inner"), dtype=dt, scale=0.1),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), init="zeros", dtype=dt),
+        "x_proj": ParamSpec((di, dtr + 2 * n), ("ssm_inner", None), dtype=dt),
+        "dt_proj": ParamSpec((dtr, di), (None, "ssm_inner"), dtype=dt, scale=0.1),
+        "dt_bias": ParamSpec((di,), ("ssm_inner",), init="ssm_dt_bias", dtype="float32"),
+        "a_log": ParamSpec((di, n), ("ssm_inner", "ssm_state"), init="ssm_a_log",
+                           dtype="float32"),
+        "d_skip": ParamSpec((di,), ("ssm_inner",), init="ones", dtype="float32"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), dtype=dt,
+                              scale=0.02 / np.sqrt(2.0)),
+    }
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int) -> Cache:
+    di, n, cw = cfg.ssm_d_inner, cfg.ssm_state_dim, cfg.ssm_conv_dim
+    return {
+        "conv": jnp.zeros((batch, cw - 1, di), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv via shifted adds. x: (B,S,di), w: (cw,di)."""
+    cw = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)           # (B, S+cw-1, di)
+    s = x.shape[1]
+    out = b
+    for i in range(cw):
+        out = out + xp[:, i:i + s, :] * w[i]
+    new_prev = xp[:, -(cw - 1):, :] if cw > 1 else prev
+    return out, new_prev
+
+
+def _chunked_selective_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                            chunk: int) -> tuple[jax.Array, jax.Array]:
+    """Solve h_t = a_t h_{t-1} + b_t.  a,b: (B,S,di,n); h0: (B,di,n).
+
+    Returns (h per step (B,S,di,n), final h).  Chunked associative scan:
+    O(S/Q) sequential steps of parallel O(Q) scans.
+    """
+    B, S, di, n = a.shape
+    q = min(chunk, S)
+    assert S % q == 0, f"seq {S} not divisible by ssm chunk {q}"
+    nc = S // q
+    a_c = a.reshape(B, nc, q, di, n).transpose(1, 0, 2, 3, 4)
+    b_c = b.reshape(B, nc, q, di, n).transpose(1, 0, 2, 3, 4)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_step(h, ab):
+        ac, bc = ab                                # (B,q,di,n)
+        aa, bb = jax.lax.associative_scan(op, (ac, bc), axis=1)
+        h_steps = aa * h[:, None] + bb             # (B,q,di,n)
+        return h_steps[:, -1], h_steps
+
+    h_last, h_all = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    h_all = h_all.transpose(1, 0, 2, 3, 4).reshape(B, S, di, n)
+    return h_all, h_last
+
+
+def mamba_apply(cfg: ModelConfig, params: ParamTree, x: jax.Array,
+                *, mesh: Mesh | None = None, cache: Cache | None = None,
+                decode: bool = False) -> tuple[jax.Array, Cache | None]:
+    """x: (B,S,d). decode=True runs the O(1) recurrent step (S==1)."""
+    di, n, dtr = cfg.ssm_d_inner, cfg.ssm_state_dim, cfg.resolved_dt_rank
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    if mesh is not None:
+        xz = constrain(xz, mesh, ("batch", None, "ssm_inner"))
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    prev_conv = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"], params["conv_b"], prev_conv)
+    xc = jax.nn.silu(xc)
+
+    proj = jnp.einsum("bse,ef->bsf", xc, params["x_proj"])
+    dt_raw, bmat, cmat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_raw, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])                                     # (B,S,di)
+    a = -jnp.exp(params["a_log"])                                # (di,n)
+    da = jnp.exp(dt[..., None] * a)                              # (B,S,di,n)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * \
+        bmat.astype(jnp.float32)[:, :, None, :]                  # (B,S,di,n)
+
+    if decode:
+        assert cache is not None and x.shape[1] == 1
+        h = cache["h"] * da[:, 0] + bx[:, 0]                     # (B,di,n)
+        y = jnp.einsum("ben,bn->be", h, cmat.astype(jnp.float32)[:, 0])[:, None]
+        h_last = h
+    else:
+        h0 = cache["h"] if cache is not None else \
+            jnp.zeros((x.shape[0], di, n), jnp.float32)
+        h_all, h_last = _chunked_selective_scan(da, bx, h0, cfg.ssm_chunk)
+        y = jnp.einsum("bsen,bsn->bse", h_all, cmat.astype(jnp.float32))
+
+    y = y + params["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": h_last}
+    return out, new_cache

@@ -1,0 +1,284 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunked-parallel)
+and sLSTM (scalar memory, sequential recurrence).
+
+mLSTM uses the chunkwise-parallel linear-attention form with log-space
+stabilization: within a chunk of Q steps the decay matrix
+    D_tj = F_t - F_j + log i_j   (F = cumsum log f,  j <= t)
+is materialized (Q×Q per head) and the inter-chunk state (C, n, m) is carried
+with jax.lax.scan — the same decomposition as the mlstm_chunk Pallas kernel.
+The stored state is de-scaled: true C = C̃ · exp(m).
+
+sLSTM has a genuine nonlinear recurrence (block-diagonal recurrent weights)
+and is executed step-by-step with lax.scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, ParamTree, rms_norm
+from repro.models.ssm import _causal_conv
+from repro.sharding.rules import constrain
+
+Cache = dict[str, jax.Array]
+
+_CONV_W = 4
+
+
+def _round64(x: float) -> int:
+    return max(64, int(round(x / 64)) * 64)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_schema(cfg: ModelConfig) -> ParamTree:
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)          # inner width
+    h = cfg.num_heads
+    dh = di // h
+    dt = cfg.dtype
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner"), dtype=dt),
+        "conv_w": ParamSpec((_CONV_W, di), (None, "ssm_inner"), dtype=dt, scale=0.1),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), init="zeros", dtype=dt),
+        "w_q": ParamSpec((h, dh, dh), ("heads", None, None), dtype=dt),
+        "w_k": ParamSpec((h, dh, dh), ("heads", None, None), dtype=dt),
+        "w_v": ParamSpec((h, dh, dh), ("heads", None, None), dtype=dt),
+        "w_if": ParamSpec((di, 2 * h), ("ssm_inner", None), dtype="float32",
+                          scale=0.01),
+        "b_i": ParamSpec((h,), (None,), init="zeros", dtype="float32"),
+        "b_f": ParamSpec((h,), (None,), init="ones", dtype="float32"),
+        "out_norm": ParamSpec((di,), ("ssm_inner",), init="ones", dtype="float32"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), dtype=dt,
+                              scale=0.02 / np.sqrt(2.0)),
+    }
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int) -> Cache:
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, di), jnp.dtype(cfg.dtype)),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,Q,dh) fp32; log_i/log_f: (B,H,Q); state=(C̃,ñ,m).
+    Returns (h (B,H,Q,dh), new_state).
+    """
+    C, n, m = state
+    B, H, Q, dh = q.shape
+    F = jnp.cumsum(log_f, axis=-1)                          # (B,H,Q)
+    D = (F[..., :, None] - F[..., None, :] + log_i[..., None, :])
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    D = jnp.where(tri, D, -jnp.inf)
+    m_intra = jnp.max(D, axis=-1)                           # (B,H,Q)
+    m_inter = F + m[..., None]                              # (B,H,Q)
+    m_t = jnp.maximum(m_intra, m_inter)
+    m_t = jnp.maximum(m_t, -1e30)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k)
+    S = scores * jnp.exp(D - m_t[..., None])                # masked via D=-inf
+    inter_scale = jnp.exp(m_inter - m_t)                    # (B,H,Q)
+    num = (jnp.einsum("bhqk,bhkd->bhqd", S, v)
+           + inter_scale[..., None] * jnp.einsum("bhqd,bhde->bhqe", q, C))
+    qn = (jnp.sum(S, axis=-1)
+          + inter_scale * jnp.einsum("bhqd,bhd->bhq", q, n))
+    den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+    h = num / den[..., None]
+
+    # end-of-chunk state
+    FQ = F[..., -1:]
+    decay_j = FQ - F + log_i                                # (B,H,Q)
+    m_new = jnp.maximum(FQ[..., 0] + m, jnp.max(decay_j, axis=-1))
+    w_j = jnp.exp(decay_j - m_new[..., None])
+    C_new = (jnp.exp(FQ[..., 0] + m - m_new)[..., None, None] * C
+             + jnp.einsum("bhq,bhqd,bhqe->bhde", w_j, k, v))
+    n_new = (jnp.exp(FQ[..., 0] + m - m_new)[..., None] * n
+             + jnp.einsum("bhq,bhqd->bhd", w_j, k))
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_apply(cfg: ModelConfig, params: ParamTree, x: jax.Array,
+                *, mesh: Mesh | None = None, cache: Cache | None = None,
+                decode: bool = False) -> tuple[jax.Array, Cache | None]:
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    dh = di // H
+    B, S, _ = x.shape
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    if mesh is not None:
+        xz = constrain(xz, mesh, ("batch", None, "ssm_inner"))
+    xm, z = jnp.split(xz, 2, axis=-1)
+    prev_conv = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xm, params["conv_w"], params["conv_b"], prev_conv)
+    xc = jax.nn.silu(xc)
+
+    def heads(t, w):
+        th = t.reshape(B, S, H, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+        return jnp.einsum("bhsd,hde->bhse", th, w.astype(jnp.float32))
+
+    q = heads(xc, params["w_q"])
+    k = heads(xc, params["w_k"]) / np.sqrt(dh)
+    v = heads(xm, params["w_v"])
+    gates = jnp.einsum("bse,ef->bsf", xc.astype(jnp.float32), params["w_if"])
+    gates = gates.reshape(B, S, 2, H).transpose(2, 0, 3, 1)     # (2,B,H,S)
+    log_i = gates[0] + params["b_i"][None, :, None]
+    log_f = jax.nn.log_sigmoid(gates[1] + params["b_f"][None, :, None])
+
+    if cache is not None:
+        state0 = (cache["C"], cache["n"], cache["m"])
+    else:
+        state0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                  jnp.zeros((B, H, dh), jnp.float32),
+                  jnp.full((B, H), -1e30, jnp.float32))
+
+    if decode:
+        assert S == 1
+        h, state = _mlstm_chunk(q, k, v, log_i, log_f, state0)
+    else:
+        Q = min(cfg.ssm_chunk, S)
+        assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+        nc = S // Q
+
+        def split_c(t):   # (B,H,S,...) -> (nc,B,H,Q,...)
+            return t.reshape(t.shape[0], t.shape[1], nc, Q, *t.shape[3:]) \
+                    .transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+
+        def step(st, inp):
+            qc, kc, vc, lic, lfc = inp
+            h, st2 = _mlstm_chunk(qc, kc, vc, lic, lfc, st)
+            return st2, h
+
+        state, h_chunks = jax.lax.scan(
+            step, state0, (split_c(q), split_c(k), split_c(v),
+                           split_c(log_i), split_c(log_f)))
+        h = h_chunks.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+
+    hs = h.transpose(0, 2, 1, 3).reshape(B, S, di)
+    # per-head group norm (RMS over each head's slice)
+    hs = _group_rms(hs, params["out_norm"], H, cfg.norm_eps)
+    y = hs.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"C": state[0], "n": state[1], "m": state[2],
+                     "conv": new_conv}
+    return out, new_cache
+
+
+def _group_rms(x: jax.Array, scale: jax.Array, groups: int, eps: float) -> jax.Array:
+    """RMS-normalize per head group. x: (B,S,di)."""
+    B, S, di = x.shape
+    xg = x.reshape(B, S, groups, di // groups).astype(jnp.float32)
+    var = jnp.mean(xg * xg, axis=-1, keepdims=True)
+    xg = xg * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, S, di) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_schema(cfg: ModelConfig) -> ParamTree:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    dt = cfg.dtype
+    f = _round64(cfg.slstm_ffn_factor * d)
+    return {
+        "w_in": ParamSpec((d, 4 * d), ("embed", "ssm_inner"), dtype=dt),
+        "r_rec": ParamSpec((4, h, dh, dh), (None, "heads", None, None),
+                           dtype="float32", scale=0.02),
+        "bias": ParamSpec((4 * d,), (None,), init="zeros", dtype="float32"),
+        "out_norm": ParamSpec((d,), ("embed_act",), init="ones", dtype="float32"),
+        "ffn_w1": ParamSpec((d, f), ("embed", "ffn"), dtype=dt),
+        "ffn_w3": ParamSpec((d, f), ("embed", "ffn"), dtype=dt),
+        "ffn_w2": ParamSpec((f, d), ("ffn", "embed"), dtype=dt,
+                            scale=0.02 / np.sqrt(2.0)),
+    }
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int) -> Cache:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(cfg: ModelConfig, params: ParamTree, wx_t: jax.Array,
+                state: tuple) -> tuple[jax.Array, tuple]:
+    """One recurrence step. wx_t: (B, 4d) input preactivations."""
+    c, n, m, h = state
+    B, d4 = wx_t.shape
+    d = d4 // 4
+    H = cfg.num_heads
+    dh = d // H
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh, params["r_rec"]).reshape(4, B, d)
+    pre = wx_t.reshape(B, 4, d).transpose(1, 0, 2) + rec + \
+        params["bias"].reshape(4, d)[:, None, :]
+    zi, ii, fi, oi = pre[0], pre[1], pre[2], pre[3]
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    log_i = ii
+    log_f = jax.nn.log_sigmoid(fi)
+    m_t = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_t)
+    f_s = jnp.exp(log_f + m - m_t)
+    c_t = f_s * c + i_s * zt
+    n_t = jnp.maximum(f_s * n + i_s, jnp.exp(-m_t))
+    h_t = ot * c_t / n_t
+    return h_t, (c_t, n_t, m_t, h_t)
+
+
+def slstm_apply(cfg: ModelConfig, params: ParamTree, x: jax.Array,
+                *, mesh: Mesh | None = None, cache: Cache | None = None,
+                decode: bool = False) -> tuple[jax.Array, Cache | None]:
+    B, S, d = x.shape
+    wx = jnp.einsum("bsd,de->bse", x, params["w_in"]).astype(jnp.float32)
+    if cache is not None:
+        state0 = (cache["c"], cache["n"], cache["m"], cache["h"])
+    else:
+        z = jnp.zeros((B, d), jnp.float32)
+        state0 = (z, z, jnp.full((B, d), -1e30, jnp.float32), z)
+
+    if decode:
+        assert S == 1
+        h_t, state = _slstm_cell(cfg, params, wx[:, 0], state0)
+        hs = h_t[:, None]
+    else:
+        def step(st, wx_t):
+            h_t, st2 = _slstm_cell(cfg, params, wx_t, st)
+            return st2, h_t
+        state, hseq = jax.lax.scan(step, state0, wx.transpose(1, 0, 2))
+        hs = hseq.transpose(1, 0, 2)                       # (B,S,d)
+
+    hs = _group_rms(hs, params["out_norm"], cfg.num_heads, cfg.norm_eps)
+    y = hs.astype(x.dtype)
+    # gated FFN (factor 4/3 per the xLSTM sLSTM block)
+    g = jnp.einsum("bsd,df->bsf", y, params["ffn_w1"])
+    u = jnp.einsum("bsd,df->bsf", y, params["ffn_w3"])
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, params["ffn_w2"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+    return out, new_cache

@@ -1,0 +1,47 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``serve_step`` (decode) computes logits for the new position ONLY — computing
+all-position logits with a 32k cache is zoo case 'lmhead-redundant'
+(hf-38977).  Both steps are pure functions of (params, cache, tokens, pos)
+so they jit/shard cleanly on the production mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None, *, max_len: int,
+                      attn_impl: str = "xla") -> Callable:
+    def prefill_step(params, tokens, image_embeds=None, frames=None):
+        if cfg.family == "audio":
+            # encoder: no cache; "prefill" is the full encoder forward
+            logits, _ = tf.forward(cfg, params, None, inputs_embeds=frames,
+                                   mesh=mesh, remat=True, attn_impl=attn_impl)
+            return logits, None
+        logits, caches = tf.prefill(cfg, params, tokens, mesh=mesh,
+                                    max_len=max_len,
+                                    image_embeds=image_embeds,
+                                    attn_impl=attn_impl)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh | None,
+                     attn_impl: str = "xla") -> Callable:
+    def decode_step(params, caches, tokens, pos):
+        logits, new_caches = tf.decode_step(cfg, params, caches, tokens, pos,
+                                            mesh=mesh, attn_impl=attn_impl)
+        return logits, new_caches
+    return decode_step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]

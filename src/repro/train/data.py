@@ -1,0 +1,107 @@
+"""Deterministic, restart-safe synthetic data pipeline.
+
+The pipeline is a pure function of (seed, step): a restarted job resumes
+from any step with bit-identical batches and *no* data replay/skip logic
+beyond setting the step counter — the fault-tolerance property the
+checkpoint manager relies on.  Sharded hosts draw disjoint slices of the
+global batch by host index, so the global batch is identical regardless of
+host count (elastic scaling keeps the data order stable).
+
+The token stream is a deterministic mixture (zipf-ish unigram + short
+repeated motifs) — enough structure that a ~100M model's loss visibly drops
+within a few hundred steps (examples/train_demo.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    motif_len: int = 16
+    num_motifs: int = 512
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM token stream."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # fixed motif table: short token patterns the model can learn
+        self.motifs = rng.integers(
+            0, cfg.vocab_size, size=(cfg.num_motifs, cfg.motif_len),
+            dtype=np.int32)
+        # zipf-ish unigram distribution
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self.unigram = p / p.sum()
+
+    def batch(self, step: int, *, host_index: int = 0,
+              host_count: int = 1) -> dict[str, np.ndarray]:
+        """Global batch for ``step`` (host slice if host_count > 1)."""
+        cfg = self.cfg
+        assert cfg.global_batch % host_count == 0
+        per_host = cfg.global_batch // host_count
+        rows = []
+        base = step * cfg.global_batch + host_index * per_host
+        for r in range(per_host):
+            rows.append(self._row(base + r))
+        tokens = np.stack(rows)                       # (B, S+1)
+        return {"tokens": tokens[:, :-1].astype(np.int32),
+                "labels": tokens[:, 1:].astype(np.int32)}
+
+    def _row(self, row_id: int) -> np.ndarray:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed << 32) ^ row_id)
+        out = np.empty(cfg.seq_len + 1, dtype=np.int64)
+        i = 0
+        while i < cfg.seq_len + 1:
+            if rng.random() < 0.5:                    # motif insertion
+                m = self.motifs[rng.integers(cfg.num_motifs)]
+                n = min(len(m), cfg.seq_len + 1 - i)
+                out[i:i + n] = m[:n]
+                i += n
+            else:                                     # unigram noise
+                n = min(int(rng.integers(4, 32)), cfg.seq_len + 1 - i)
+                out[i:i + n] = rng.choice(cfg.vocab_size, size=n,
+                                          p=self.unigram)
+                i += n
+        return out
+
+
+def make_batch_fn(model_cfg: ModelConfig, shape: ShapeConfig, *,
+                  seed: int = 0, batch_override: int | None = None):
+    """Returns ``batch(step) -> dict`` matching the model's input schema."""
+    gb = batch_override or shape.global_batch
+    data = SyntheticLM(DataConfig(vocab_size=model_cfg.vocab_size,
+                                  seq_len=shape.seq_len,
+                                  global_batch=gb, seed=seed))
+
+    def batch_fn(step: int) -> dict[str, np.ndarray]:
+        b = data.batch(step)
+        if model_cfg.family == "audio":
+            # frontend stub: deterministic frame embeddings from the tokens
+            rng = np.random.default_rng(seed ^ (step + 1))
+            frames = rng.standard_normal(
+                (gb, shape.seq_len, model_cfg.d_model)).astype(np.float32)
+            return {"frames": frames, "labels": b["labels"]}
+        if model_cfg.family == "vlm":
+            rng = np.random.default_rng(seed ^ (step + 1))
+            img = rng.standard_normal(
+                (gb, model_cfg.num_image_tokens,
+                 model_cfg.d_model)).astype(np.float32)
+            return {**b, "image_embeds": img}
+        return b
+
+    return batch_fn

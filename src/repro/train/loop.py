@@ -1,0 +1,138 @@
+"""The training loop: sharded step, checkpoint/restart, straggler watch,
+and the Magneton energy audit as a first-class feature.
+
+``run_training`` is what launch/train.py drives.  It is deliberately plain:
+every fault-tolerance behaviour (resume, preemption checkpoint, straggler
+flagging) is observable and unit-tested (tests/test_train_loop.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.sharding.rules import GLOBAL_RULES
+from repro.train.checkpoint import CheckpointManager, PreemptionGuard
+from repro.train.data import make_batch_fn
+from repro.train.optimizer import (OptimizerConfig, abstract_opt_state,
+                                   init_opt_state, opt_state_shardings)
+from repro.train.straggler import StragglerMonitor
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    num_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    async_checkpoint: bool = True
+    seed: int = 0
+
+
+def batch_shardings(mesh: Mesh | None, batch: dict) -> dict | None:
+    if mesh is None:
+        return None
+    return {k: GLOBAL_RULES.sharding(mesh, ("batch",) + (None,) * (v.ndim - 1),
+                                     v.shape)
+            for k, v in batch.items()}
+
+
+def run_training(cfg: ModelConfig, shape: ShapeConfig, *,
+                 mesh: Mesh | None = None,
+                 opt_cfg: OptimizerConfig = OptimizerConfig(),
+                 tcfg: TrainConfig = TrainConfig(),
+                 loop: LoopConfig = LoopConfig(),
+                 batch_override: int | None = None,
+                 guard: PreemptionGuard | None = None,
+                 on_step: Callable[[int, dict], None] | None = None) -> dict:
+    """Train; resume from the latest checkpoint in loop.checkpoint_dir."""
+    mgr = CheckpointManager(loop.checkpoint_dir)
+    monitor = StragglerMonitor()
+    batch_fn = make_batch_fn(cfg, shape, seed=loop.seed,
+                             batch_override=batch_override)
+
+    # --- state init or restore --------------------------------------------
+    start = mgr.latest_step()
+    if start is None:
+        key = jax.random.key(loop.seed)
+        params = tf.model_init(cfg, key)
+        opt_state = init_opt_state(params, opt_cfg)
+        if mesh is not None:
+            pshard = tf.model_param_shardings(cfg, mesh)
+            params = jax.tree_util.tree_map(jax.device_put, params, pshard)
+            oshard = opt_state_shardings(pshard, opt_cfg, mesh)
+            opt_state = jax.tree_util.tree_map(jax.device_put, opt_state,
+                                               oshard)
+        step0 = 0
+    else:
+        shardings = None
+        if mesh is not None:
+            pshard = tf.model_param_shardings(cfg, mesh)
+            shardings = {"params": pshard,
+                         "opt": opt_state_shardings(pshard, opt_cfg, mesh)}
+        _, state = mgr.restore(start, shardings=shardings)
+        params, opt_state = state["params"], state["opt"]
+        step0 = start
+
+    train_step = make_train_step(cfg, mesh, opt_cfg, tcfg)
+    if mesh is not None:
+        b0 = batch_fn(step0)
+        jit_step = jax.jit(
+            train_step,
+            in_shardings=(tf.model_param_shardings(cfg, mesh),
+                          opt_state_shardings(
+                              tf.model_param_shardings(cfg, mesh),
+                              opt_cfg, mesh),
+                          batch_shardings(mesh, b0)),
+            donate_argnums=(0, 1))
+    else:
+        jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    history: list[dict] = []
+    exited_early = False
+    for step in range(step0, loop.num_steps):
+        t0 = time.time()
+        batch = batch_fn(step)
+        params, opt_state, metrics = jit_step(params, opt_state, batch)
+        metrics = {k: float(v) for k, v in
+                   jax.tree_util.tree_map(np.asarray, metrics).items()}
+        wall = time.time() - t0
+        monitor.observe(wall, step=step)
+        metrics.update(step=step, wall_time=wall)
+        history.append(metrics)
+        if on_step is not None:
+            on_step(step, metrics)
+        if loop.log_every and step % loop.log_every == 0:
+            print(f"step {step:6d}  loss {metrics['loss']:.4f}  "
+                  f"gnorm {metrics['grad_norm']:.3f}  {wall*1e3:.0f} ms")
+        next_step = step + 1
+        want_ckpt = (loop.checkpoint_every
+                     and next_step % loop.checkpoint_every == 0)
+        preempted = guard is not None and guard.should_exit
+        if want_ckpt or preempted or next_step == loop.num_steps:
+            state = {"params": params, "opt": opt_state}
+            if loop.async_checkpoint and not preempted:
+                mgr.save_async(next_step, state,
+                               metadata={"loss": metrics["loss"]})
+            else:
+                mgr.save(next_step, state,
+                         metadata={"loss": metrics["loss"],
+                                   "preempted": preempted})
+        if preempted:
+            exited_early = True
+            break
+
+    mgr.wait()
+    return {"history": history, "final_step": step + 1,
+            "exited_early": exited_early,
+            "straggler_events": monitor.events,
+            "params": params, "opt_state": opt_state}

@@ -1,0 +1,140 @@
+"""AdamW with mixed-precision state and optional gradient compression.
+
+State layout (pod-scale memory discipline, DESIGN.md §5): parameters live in
+the model dtype (bf16), first/second moments in fp32 — 10 bytes/param, fully
+sharded with the same PartitionSpecs as the parameters.  Updates are computed
+in fp32 and cast back.
+
+Gradient compression (an explicit distributed-optimization trick): grads can
+be cast to bf16 before the data-parallel reduction, with fp32 error feedback
+accumulated locally so the compression bias does not accumulate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    compress_grads: bool = False   # bf16 reduction + fp32 error feedback
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def init_opt_state(params: Any, cfg: OptimizerConfig) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree_util.tree_map(zeros32, params),
+        "v": jax.tree_util.tree_map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree_util.tree_map(zeros32, params)
+    return state
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def compress_decompress(grads: Any, err: Any):
+    """bf16 compression with error feedback. Returns (compressed, new_err)."""
+    def comp(g, e):
+        gf = g.astype(jnp.float32) + e
+        gc = gf.astype(jnp.bfloat16)
+        return gc, gf - gc.astype(jnp.float32)
+    flat = jax.tree_util.tree_map(comp, grads, err)
+    comp_g = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return comp_g, new_err
+
+
+def adamw_update(params: Any, grads: Any, state: dict,
+                 cfg: OptimizerConfig) -> tuple[Any, dict, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"]
+    lr = schedule(cfg, step)
+    new_state = dict(state)
+
+    if cfg.compress_grads:
+        grads, new_err = compress_decompress(grads, state["err"])
+        new_state["err"] = new_err
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * clip
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                        + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m2, v2
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is3)
+    new_state["m"] = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is3)
+    new_state["v"] = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is3)
+    new_state["step"] = step + 1
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics
+
+
+def opt_state_shardings(param_shardings: Any, cfg: OptimizerConfig,
+                        mesh) -> dict:
+    """Optimizer-state shardings mirror the parameter shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    state = {
+        "m": param_shardings,
+        "v": param_shardings,
+        "step": NamedSharding(mesh, PartitionSpec()),
+    }
+    if cfg.compress_grads:
+        state["err"] = param_shardings
+    return state
+
+
+def abstract_opt_state(abstract_params: Any, cfg: OptimizerConfig) -> dict:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree_util.tree_map(f32, abstract_params),
+        "v": jax.tree_util.tree_map(f32, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree_util.tree_map(f32, abstract_params)
+    return state

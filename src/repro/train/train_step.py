@@ -1,0 +1,98 @@
+"""Train-step factory: loss, gradient accumulation, optimizer update.
+
+Microbatched gradient accumulation reduces activation memory and — because
+the gradient all-reduce happens once after accumulation instead of per
+microbatch — collective energy (the efficient twin of zoo case c9 /
+pytorch-181115 dist.Join).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import cross_entropy
+from repro.train.optimizer import OptimizerConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: bool | str = True  # False | True (full) | 'dots' (save matmuls)
+    attn_impl: str = "xla"
+    z_loss: float = 1e-4
+    accum_dtype: str = "float32"
+
+
+def make_loss_fn(cfg: ModelConfig, mesh: Mesh | None,
+                 tcfg: TrainConfig) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = tf.forward(
+            cfg, params,
+            batch.get("tokens"),
+            inputs_embeds=batch.get("frames"),
+            image_embeds=batch.get("image_embeds"),
+            mesh=mesh, remat=tcfg.remat, attn_impl=tcfg.attn_impl)
+        loss = cross_entropy(logits, batch["labels"], z_loss=tcfg.z_loss)
+        total = loss + cfg.router_aux_loss * aux
+        return total, {"loss": loss, "aux_loss": aux}
+    return loss_fn
+
+
+def _split_microbatches(batch: dict, m: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        assert b % m == 0, f"batch {b} not divisible by {m} microbatches"
+        return x.reshape(m, b // m, *x.shape[1:])
+    return jax.tree_util.tree_map(sp, batch)
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh | None,
+                    opt_cfg: OptimizerConfig,
+                    tcfg: TrainConfig = TrainConfig()) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    loss_fn = make_loss_fn(cfg, mesh, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            mb = _split_microbatches(batch, tcfg.microbatches)
+            acc_dt = jnp.dtype(tcfg.accum_dtype)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+            def body(acc, micro):
+                (loss, metrics), g = grad_fn(params, micro)
+                acc2 = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(acc_dt), acc, g)
+                return acc2, (loss, metrics)
+
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: (g / tcfg.microbatches), grads)
+            metrics = jax.tree_util.tree_map(jnp.mean, metricses)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(params, grads,
+                                                        opt_state, opt_cfg)
+        metrics = {**metrics, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, mesh: Mesh | None,
+                   tcfg: TrainConfig = TrainConfig()) -> Callable:
+    loss_fn = make_loss_fn(cfg, mesh, tcfg)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+    return eval_step

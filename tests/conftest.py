@@ -1,0 +1,14 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512."""
+
+import warnings
+
+import jax
+import pytest
+
+warnings.filterwarnings("ignore")
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,114 @@
+"""Cost rules and the energy model: per-op pricing, ordering, replay."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.costs import graph_cost, node_cost
+from repro.core.energy import AnalyticalEnergyModel, ReplayProfiler
+from repro.core.graph import trace
+from repro.hw.specs import TPU_V5E
+
+
+def _graph(fn, *args):
+    return trace(fn, *args)
+
+
+def test_matmul_flops():
+    g = _graph(lambda a, b: a @ b, jnp.ones((64, 128)), jnp.ones((128, 32)))
+    c = graph_cost(g)
+    assert c.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_precision_highest_prices_fp32():
+    def hi(a, b):
+        return jax.lax.dot(a, b, precision=jax.lax.Precision.HIGHEST)
+    g = _graph(hi, jnp.ones((32, 32), jnp.bfloat16), jnp.ones((32, 32), jnp.bfloat16))
+    dot = next(n for n in g.nodes if n.primitive == "dot_general")
+    assert node_cost(g, dot).fp32_fraction == 1.0
+
+
+def test_scan_multiplies_body():
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+    g = _graph(f, jnp.ones((16, 16)))
+    c = graph_cost(g)
+    single = 2 * 16**3
+    assert c.flops >= 7 * single
+
+
+def test_dynamic_update_slice_cheaper_than_concat():
+    cache = jnp.zeros((4, 1024, 64))
+    new = jnp.ones((4, 1, 64))
+
+    def by_concat(cache, new):
+        return jnp.concatenate([cache[:, :512], new, cache[:, 513:]], axis=1)
+
+    def by_dus(cache, new):
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, 512, axis=1)
+
+    c1 = graph_cost(_graph(by_concat, cache, new))
+    c2 = graph_cost(_graph(by_dus, cache, new))
+    assert c2.hbm_bytes < 0.01 * c1.hbm_bytes
+
+
+def test_collective_priced_in_ici_bytes():
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
+
+    def f(x):
+        return jax.shard_map(lambda y: jax.lax.psum(y, "dp"), mesh=mesh,
+                             in_specs=P(), out_specs=P())(x)
+    g = _graph(f, jnp.ones((128, 128)))
+    c = graph_cost(g)
+    assert c.ici_bytes >= 2 * 128 * 128 * 4
+
+
+def test_pallas_call_priced_as_single_pass():
+    from repro.kernels import ops as kops
+    x = jnp.ones((256, 256))
+
+    def unfused(x):
+        c = 0.7978845608
+        inner = c * (x + 0.044715 * x * x * x)
+        return 0.5 * x * (1.0 + jnp.tanh(inner))
+
+    g_fused = _graph(lambda x: kops.fused_gelu(x), x)
+    g_unfused = _graph(unfused, x)
+    b_fused = graph_cost(g_fused).hbm_bytes
+    b_unfused = graph_cost(g_unfused).hbm_bytes
+    assert b_fused < 0.5 * b_unfused
+
+
+def test_energy_model_total_positive_and_ordered():
+    model = AnalyticalEnergyModel(TPU_V5E)
+    g_small = _graph(lambda a, b: a @ b, jnp.ones((32, 32)), jnp.ones((32, 32)))
+    g_big = _graph(lambda a, b: a @ b, jnp.ones((256, 256)), jnp.ones((256, 256)))
+    e_small = model.profile(g_small).total_energy_j
+    e_big = model.profile(g_big).total_energy_j
+    assert 0 < e_small < e_big
+
+
+def test_replay_profiler_measures_wall_time():
+    prof = ReplayProfiler(max_replay_iters=4)
+    g = _graph(lambda a, b: jnp.tanh(a @ b), jnp.ones((128, 128)),
+               jnp.ones((128, 128)))
+    p = prof.profile(g, jnp.ones((128, 128)), jnp.ones((128, 128)))
+    assert p.total_energy_j > 0
+    assert all(op.time_s >= 0 for op in p.ops)
+    assert {op.primitive for op in p.ops} >= {"dot_general", "tanh"}
+
+
+def test_profile_top_k_and_breakdown():
+    model = AnalyticalEnergyModel(TPU_V5E)
+    g = _graph(lambda a, b: jnp.tanh(a @ b) + 1.0, jnp.ones((256, 256)),
+               jnp.ones((256, 256)))
+    p = model.profile(g)
+    top = p.top_k(1)
+    assert top[0].primitive == "dot_general"
+    agg = p.by_primitive()
+    assert set(agg) >= {"dot_general", "tanh", "add"}

@@ -1,0 +1,88 @@
+"""OpGraph extraction: inlining, dataflow, call paths, between-sets."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.graph import trace
+
+
+def test_basic_extraction():
+    def f(x, y):
+        return jnp.tanh(x @ y) + 1.0
+
+    g = trace(f, jnp.ones((4, 8)), jnp.ones((8, 4)))
+    prims = [n.primitive for n in g.nodes]
+    assert "dot_general" in prims
+    assert "tanh" in prims
+    assert len(g.inputs) == 2
+    assert len(g.outputs) == 1
+
+
+def test_jit_calls_are_inlined():
+    """jax.nn helpers wrap bodies in `jit` eqns; the graph must inline them."""
+    def f(x):
+        return jax.nn.one_hot(jnp.argmax(x, -1), 7)
+
+    g = trace(f, jnp.ones((3, 7)))
+    prims = {n.primitive for n in g.nodes}
+    assert "jit" not in prims and "pjit" not in prims
+    assert "argmax" in prims
+
+
+def test_dataflow_producer_consumer():
+    def f(x):
+        a = x * 2.0
+        b = a + 1.0
+        return b
+
+    g = trace(f, jnp.ones((4,)))
+    mul = next(n for n in g.nodes if n.primitive == "mul")
+    add = next(n for n in g.nodes if n.primitive == "add")
+    assert g.successors(mul.idx) == [add.idx]
+    assert g.predecessors(add.idx) == [mul.idx]
+
+
+def test_call_paths_recorded():
+    def inner(x):
+        return jnp.exp(x)
+
+    def f(x):
+        return inner(x) + 1
+
+    g = trace(f, jnp.ones((3,)))
+    exp = next(n for n in g.nodes if n.primitive == "exp")
+    assert any("inner" in frame for frame in exp.call_path)
+
+
+def test_between_set_with_multi_output():
+    """A sink tensor with downstream consumers must not orphan nodes."""
+    def f(x):
+        a = jnp.tanh(x)          # output 1, also consumed below
+        b = (a * a).sum()        # output 2
+        return a, b
+
+    g = trace(f, jnp.ones((4,)))
+    nodes = g.subgraph_nodes_between(set(g.inputs), set(g.outputs))
+    prims = {g.nodes[n].primitive for n in nodes}
+    assert "mul" in prims and "reduce_sum" in prims and "tanh" in prims
+
+
+def test_scan_is_supernode():
+    def f(x):
+        def body(c, _):
+            return c * 1.1, c
+        return jax.lax.scan(body, x, None, length=5)
+
+    g = trace(f, jnp.ones((3,)))
+    assert any(n.primitive == "scan" for n in g.nodes)
+
+
+def test_constants_marked():
+    def f(x):
+        return x + jnp.arange(4.0)
+
+    g = trace(f, jnp.ones((4,)))
+    assert any(t.is_const or g.nodes[t.producer].primitive == "iota"
+               for t in g.tensors.values() if t.producer is not None
+               or t.is_const)

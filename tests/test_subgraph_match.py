@@ -1,0 +1,101 @@
+"""Algorithm 1: topology-aware subgraph matching on constructed graphs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import trace
+from repro.core.interp import capture_tensor_values
+from repro.core.subgraph_match import match_subgraphs
+from repro.core.tensor_match import TensorMatcher
+
+
+def _match(fn_a, fn_b, args, rtol=1e-3):
+    ga = trace(fn_a, *args, name="a")
+    gb = trace(fn_b, *args, name="b")
+    va = [capture_tensor_values(ga, *args)]
+    vb = [capture_tensor_values(gb, *args)]
+    pairs = TensorMatcher(rtol=rtol).match(va, vb)
+    return ga, gb, match_subgraphs(ga, gb, pairs)
+
+
+def test_identical_graphs_fully_matched():
+    def f(x, w):
+        return jnp.tanh(x @ w) @ w.T
+
+    x, w = np.random.default_rng(0).standard_normal((2, 16, 16)).astype(np.float32)
+    ga, gb, regions = _match(f, f, (x, w))
+    covered_a = {n for r in regions for n in r.nodes_a}
+    assert covered_a == set(range(len(ga.nodes)))
+    # every region should pair identical node multisets
+    for r in regions:
+        prims_a = sorted(ga.nodes[n].primitive for n in r.nodes_a)
+        prims_b = sorted(gb.nodes[n].primitive for n in r.nodes_b)
+        assert prims_a == prims_b
+
+
+def test_figure7_fused_vs_split_qkv():
+    """The paper's Figure 7: separate Q,K,V projections vs fused QKV+split
+    must match as one equivalent region (cut at the attention output)."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((8, 32)).astype(np.float32)
+    wq = rng.standard_normal((32, 16)).astype(np.float32)
+    wk = rng.standard_normal((32, 16)).astype(np.float32)
+    wv = rng.standard_normal((32, 16)).astype(np.float32)
+
+    def split_qkv(x, wq, wk, wv):
+        q, k, v = x @ wq, x @ wk, x @ wv
+        s = jax.nn.softmax(q @ k.T / 4.0, axis=-1)
+        o = s @ v
+        return jnp.tanh(o)
+
+    def fused_qkv(x, wq, wk, wv):
+        w = jnp.concatenate([wq, wk, wv], axis=1)
+        qkv = x @ w
+        q, k, v = jnp.split(qkv, 3, axis=1)
+        s = jax.nn.softmax(q @ k.T / 4.0, axis=-1)
+        o = s @ v
+        return jnp.tanh(o)
+
+    ga, gb, regions = _match(split_qkv, fused_qkv, (x, wq, wk, wv))
+    assert regions, "no regions matched"
+    # find the region containing the projection stage on both sides
+    proj = next(r for r in regions
+                if any(ga.nodes[n].primitive == "dot_general"
+                       for n in r.nodes_a)
+                and any(gb.nodes[n].primitive == "concatenate"
+                        for n in r.nodes_b))
+    # side A has 3 projection dots, side B has concat+1 dot+split
+    dots_a = sum(ga.nodes[n].primitive == "dot_general" for n in proj.nodes_a)
+    assert dots_a >= 3
+
+
+def test_recursion_depth_produces_multiple_regions():
+    """A chain with k matched intermediates must split into k+1 regions."""
+    def f(x):
+        a = jnp.tanh(x)
+        b = a * 2.0
+        c = jnp.exp(b)
+        return c.sum()
+
+    x = np.random.default_rng(2).standard_normal((16, 16)).astype(np.float32)
+    ga, gb, regions = _match(f, f, (x,))
+    assert len(regions) >= 3
+
+
+def test_o_n_squared_scalability():
+    """Matching a ~200-node pair completes quickly (paper Fig. 9 analogue is
+    in benchmarks; here we just guard the complexity class)."""
+    import time
+
+    def deep(x):
+        for i in range(60):
+            x = jnp.tanh(x * 1.01 + 0.01)
+        return x
+
+    x = np.random.default_rng(3).standard_normal((8, 8)).astype(np.float32)
+    t0 = time.time()
+    ga, gb, regions = _match(deep, deep, (x,))
+    assert time.time() - t0 < 60
+    assert len(regions) >= 30

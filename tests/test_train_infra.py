@@ -1,0 +1,202 @@
+"""Fault-tolerance infrastructure: checkpoint atomicity & elasticity, data
+determinism, straggler detection, loop resume/preemption."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.train.checkpoint import CheckpointManager, PreemptionGuard
+from repro.train.data import DataConfig, SyntheticLM, make_batch_fn
+from repro.train.loop import LoopConfig, run_training
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   init_opt_state)
+from repro.train.straggler import StragglerMonitor
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _state():
+    return {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+            "m": jnp.ones((3, 4), jnp.float32),
+            "step": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip_bf16():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(5, _state())
+        step, restored = mgr.restore()
+        assert step == 5
+        assert restored["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                      np.asarray(_state()["w"], np.float32))
+        assert int(restored["step"]) == 7
+
+
+def test_checkpoint_atomicity_no_partial_dirs():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, _state())
+        # a crashed write leaves only tmp dirs, which all_steps must ignore
+        os.makedirs(os.path.join(d, "step_00000002.tmp-deadbeef"))
+        assert mgr.all_steps() == [1]
+        step, _ = mgr.restore()
+        assert step == 1
+
+
+def test_checkpoint_gc_keeps_latest():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _state())
+        assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_async_then_wait():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save_async(9, _state(), metadata={"loss": 1.5})
+        mgr.wait()
+        assert mgr.latest_step() == 9
+        assert mgr.metadata(9)["loss"] == 1.5
+
+
+def test_checkpoint_elastic_restore_onto_sharding():
+    """Restore re-shards onto whatever mesh exists now (device count 1)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, _state())
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        sh = {"w": NamedSharding(mesh, P()), "m": NamedSharding(mesh, P()),
+              "step": NamedSharding(mesh, P())}
+        _, restored = mgr.restore(shardings=sh)
+        assert restored["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_across_restarts():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=8, seed=3)
+    a = SyntheticLM(cfg).batch(step=17)
+    b = SyntheticLM(cfg).batch(step=17)      # fresh pipeline, same step
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_host_slices_partition_global_batch():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=8, seed=0)
+    data = SyntheticLM(cfg)
+    full = data.batch(step=3)
+    h0 = data.batch(step=3, host_index=0, host_count=2)
+    h1 = data.batch(step=3, host_index=1, host_count=2)
+    np.testing.assert_array_equal(
+        np.concatenate([h0["tokens"], h1["tokens"]]), full["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=64, seq_len=24, global_batch=2, seed=1)
+    b = SyntheticLM(cfg).batch(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 24)
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_persistent_outlier():
+    mon = StragglerMonitor(patience=2, warmup=3)
+    for _ in range(30):
+        mon.observe(1.0 + np.random.default_rng(0).normal(0, 0.01))
+    flagged = False
+    for _ in range(3):
+        flagged = mon.observe(3.0, source="host7") or flagged
+    assert flagged
+    assert "host7" in mon.exclusion_list
+
+
+def test_straggler_ignores_transient_spike():
+    mon = StragglerMonitor(patience=3, warmup=3)
+    for _ in range(20):
+        mon.observe(1.0)
+    assert not mon.observe(5.0, source="host1")   # single spike: not flagged
+    for _ in range(5):
+        mon.observe(1.0)
+    assert "host1" not in mon.exclusion_list
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic_loss():
+    w = {"w": jnp.ones((8,)) * 5.0}
+    ocfg = OptimizerConfig(lr=0.1, warmup_steps=0, weight_decay=0.0)
+    state = init_opt_state(w, ocfg)
+    for _ in range(50):
+        g = {"w": 2 * w["w"]}
+        w, state, _ = adamw_update(w, g, state, ocfg)
+    assert float(jnp.abs(w["w"]).max()) < 2.0
+
+
+def test_grad_compression_error_feedback():
+    from repro.train.optimizer import compress_decompress
+    g = {"w": jnp.full((4,), 1e-3, jnp.float32) * (1 + 2 ** -10)}
+    err = {"w": jnp.zeros((4,), jnp.float32)}
+    total = jnp.zeros((4,), jnp.float32)
+    for _ in range(64):
+        cg, err = compress_decompress(g, err)
+        total = total + cg["w"].astype(jnp.float32)
+    # error feedback keeps the accumulated bias tiny
+    want = 64 * g["w"]
+    np.testing.assert_allclose(total, want, rtol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# loop resume / preemption (integration)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = configs.get_config("gpt2-small").reduced(num_layers=2)
+    shape = ShapeConfig("tiny", seq_len=16, global_batch=4, kind="train")
+    return cfg, shape
+
+
+def test_loop_resumes_from_checkpoint(tiny_setup):
+    cfg, shape = tiny_setup
+    with tempfile.TemporaryDirectory() as d:
+        r1 = run_training(cfg, shape, opt_cfg=OptimizerConfig(),
+                          loop=LoopConfig(num_steps=4, checkpoint_every=2,
+                                          checkpoint_dir=d, log_every=0,
+                                          async_checkpoint=False))
+        assert r1["final_step"] == 4
+        r2 = run_training(cfg, shape, opt_cfg=OptimizerConfig(),
+                          loop=LoopConfig(num_steps=6, checkpoint_every=2,
+                                          checkpoint_dir=d, log_every=0,
+                                          async_checkpoint=False))
+        assert r2["history"][0]["step"] == 4     # resumed, no replay
+        assert r2["final_step"] == 6
+
+
+def test_loop_preemption_checkpoints_and_exits(tiny_setup):
+    cfg, shape = tiny_setup
+    with tempfile.TemporaryDirectory() as d:
+        guard = PreemptionGuard(signals=())
+        guard.trigger()
+        r = run_training(cfg, shape, opt_cfg=OptimizerConfig(),
+                         loop=LoopConfig(num_steps=50, checkpoint_every=999,
+                                         checkpoint_dir=d, log_every=0),
+                         guard=guard)
+        assert r["exited_early"]
+        mgr = CheckpointManager(d)
+        assert mgr.latest_step() == r["final_step"]

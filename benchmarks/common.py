@@ -18,3 +18,13 @@ def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(path: str, payload: dict) -> None:
+    """Write a benchmark payload as JSON (e.g. BENCH_matcher.json) so future
+    PRs can track the perf trajectory machine-readably."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")

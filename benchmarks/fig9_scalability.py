@@ -3,8 +3,14 @@
 The paper matches vLLM-vs-Transformers GPT-2 graphs (757/408 nodes) in 167ms
 and Llama-3-8B graphs in 1.4s while a brute-force strawman times out at 5
 minutes.  We reproduce the scaling curve on synthetic deep networks of
-increasing node count and run the exponential strawman with a small budget
-to show the combinatorial blow-up.
+increasing node count, comparing the production streaming+lazy pipeline
+(capture_tensor_stats -> bucketed two-phase match) against the seed eager
+pipeline (full-value capture -> exhaustive numel-bucketed match), and run the
+exponential strawman with a small budget to show the combinatorial blow-up.
+
+Emits ``BENCH_matcher.json`` (nodes/sec, peak captured bytes, wall time per
+graph size, speedup vs the eager path) via benchmarks.common.emit_json so
+future PRs can track the perf trajectory.
 """
 
 from __future__ import annotations
@@ -16,9 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_json
 from repro.core.graph import trace
-from repro.core.interp import capture_tensor_values
+from repro.core.interp import (capture_tensor_stats, capture_tensor_values)
 from repro.core.subgraph_match import match_subgraphs
 from repro.core.tensor_match import TensorMatcher, bijective_pairs
 
@@ -30,6 +36,47 @@ def _deep_model(layers):
             x = x * 1.01
         return x.sum()
     return fn
+
+
+def _run_eager(ga, gb, x, w):
+    """Seed pipeline: materialize every tensor, exhaustive signature match.
+
+    Matches the seed benchmark's timer placement: the value capture happens
+    before the clock starts; the match + region extraction are timed.
+    """
+    tc0 = time.perf_counter()
+    va = capture_tensor_values(ga, x, w)
+    vb = capture_tensor_values(gb, x, w)
+    t_capture = time.perf_counter() - tc0
+    captured = sum(v.nbytes for v in va.values()) + \
+        sum(v.nbytes for v in vb.values())
+    t0 = time.perf_counter()
+    pairs = TensorMatcher().match_exhaustive([va], [vb])
+    regions = match_subgraphs(ga, gb, pairs)
+    return time.perf_counter() - t0, t_capture, captured, pairs, regions
+
+
+def _run_streaming(ga, gb, x, w):
+    """Production pipeline: streamed invariants + lazy two-phase matching.
+
+    The capture (outside the clock, like the eager run) retains only per-
+    tensor invariants; the TIMED region includes the matcher's selective
+    phase-2 value re-captures — they are part of matching, not of capture.
+    """
+    tc0 = time.perf_counter()
+    _, sa = capture_tensor_stats(ga, x, w)
+    _, sb = capture_tensor_stats(gb, x, w)
+    t_capture = time.perf_counter() - tc0
+    m = TensorMatcher()
+    t0 = time.perf_counter()
+    pairs = m.match_streamed(
+        [sa], [sb],
+        lambda k, tids: capture_tensor_values(ga, x, w, only_tids=tids),
+        lambda k, tids: capture_tensor_values(gb, x, w, only_tids=tids))
+    regions = match_subgraphs(ga, gb, pairs)
+    dt = time.perf_counter() - t0
+    captured = m.last_stats.peak_value_bytes if m.last_stats else 0
+    return dt, t_capture, captured, pairs, regions
 
 
 def _brute_force(ga, gb, eq_pairs, budget_s: float):
@@ -49,6 +96,7 @@ def _brute_force(ga, gb, eq_pairs, budget_s: float):
 
 def main() -> dict:
     results = {}
+    bench = {"configs": {}}
     key = jax.random.key(0)
     x = jax.random.normal(key, (16, 32))
     w = jax.random.normal(jax.random.key(1), (32, 32)) * 0.1
@@ -57,15 +105,71 @@ def main() -> dict:
         fn = _deep_model(layers)
         ga = trace(fn, x, w)
         gb = trace(fn, x, w)
-        va = capture_tensor_values(ga, x, w)
-        vb = capture_tensor_values(gb, x, w)
-        t0 = time.perf_counter()
-        pairs = TensorMatcher().match([va], [vb])
-        regions = match_subgraphs(ga, gb, pairs)
-        dt = time.perf_counter() - t0
-        results[layers] = dt
-        emit(f"fig9/nodes={len(ga.nodes)}", dt * 1e6,
-             f"regions={len(regions)} time={dt*1e3:.0f}ms")
+        nodes = len(ga.nodes)
+
+        # best-of-2 to damp shared-container timer noise (both paths equally)
+        runs_e = [_run_eager(ga, gb, x, w) for _ in range(2)]
+        runs_s = [_run_streaming(ga, gb, x, w) for _ in range(2)]
+        t_eager, tc_eager, bytes_eager, pairs_eager, _ = \
+            min(runs_e, key=lambda r: r[0])
+        t_fast, tc_fast, bytes_fast, pairs_fast, regions = \
+            min(runs_s, key=lambda r: r[0])
+        assert set(pairs_fast) == set(pairs_eager), \
+            f"fast/eager pair mismatch at {layers} layers"
+
+        speedup = t_eager / max(t_fast, 1e-9)
+        results[layers] = t_fast
+        bench["configs"][str(nodes)] = {
+            "layers": layers,
+            "nodes": nodes,
+            "match_s_streaming": t_fast,
+            "match_s_eager": t_eager,
+            "capture_s_streaming": tc_fast,
+            "capture_s_eager": tc_eager,
+            "speedup": speedup,
+            "nodes_per_sec": nodes / max(t_fast, 1e-9),
+            "peak_captured_bytes_streaming": bytes_fast,
+            "peak_captured_bytes_eager": bytes_eager,
+            "regions": len(regions),
+            "pairs": len(pairs_fast),
+        }
+        emit(f"fig9/nodes={nodes}", t_fast * 1e6,
+             f"regions={len(regions)} time={t_fast*1e3:.0f}ms "
+             f"eager={t_eager*1e3:.0f}ms speedup={speedup:.1f}x "
+             f"capture={bytes_fast}B-vs-{bytes_eager}B")
+
+    # multi-sample peak memory at the deepest config: the eager pipeline
+    # holds every sample's full activation set on both sides for the whole
+    # match; the streaming pipeline keeps invariants only and materializes at
+    # most ONE sample's phase-2 survivors at a time.
+    fn = _deep_model(160)
+    ga, gb = trace(fn, x, w), trace(fn, x, w)
+    x2 = x * 1.1
+    vals_a = [capture_tensor_values(ga, x, w),
+              capture_tensor_values(ga, x2, w)]
+    vals_b = [capture_tensor_values(gb, x, w),
+              capture_tensor_values(gb, x2, w)]
+    eager_bytes = sum(v.nbytes for side in (vals_a, vals_b)
+                      for d in side for v in d.values())
+    pairs_eager = TensorMatcher().match_exhaustive(vals_a, vals_b)
+    m = TensorMatcher()
+    stats = [[capture_tensor_stats(g, xx, w)[1] for xx in (x, x2)]
+             for g in (ga, gb)]
+    pairs_fast = m.match_streamed(
+        stats[0], stats[1],
+        lambda k, tids: capture_tensor_values(ga, x if k == 0 else x2, w,
+                                              only_tids=tids),
+        lambda k, tids: capture_tensor_values(gb, x if k == 0 else x2, w,
+                                              only_tids=tids))
+    assert set(pairs_fast) == set(pairs_eager), "multi-sample pair mismatch"
+    peak = m.last_stats.peak_value_bytes
+    emit("fig9/peak_capture_2samples", 0.0,
+         f"streaming_peak={peak}B eager_resident={eager_bytes}B "
+         f"reduction={eager_bytes / max(peak, 1):.1f}x")
+    bench["peak_capture_2samples"] = {
+        "streaming_peak_bytes": peak,
+        "eager_resident_bytes": eager_bytes,
+    }
 
     # quadratic-vs-exponential check: strawman on the small graph only
     fn = _deep_model(10)
@@ -81,6 +185,8 @@ def main() -> dict:
     ratio = results[160] / max(results[10], 1e-9)
     emit("fig9/summary", 0.0,
          f"time(160L)/time(10L)={ratio:.1f}x (O(N^2) bound: 256x)")
+    bench["scaling_ratio_160L_over_10L"] = ratio
+    emit_json("BENCH_matcher.json", bench)
     return results
 
 

@@ -4,8 +4,10 @@ from repro.core.diff import DifferentialEnergyDebugger
 from repro.core.energy import AnalyticalEnergyModel, EnergyProfile, ReplayProfiler
 from repro.core.graph import OpGraph, extract_graph, trace
 from repro.core.report import Finding, Report
+from repro.core.interp import capture_tensor_stats, capture_tensor_values
 from repro.core.subgraph_match import MatchedRegion, match_subgraphs
-from repro.core.tensor_match import TensorMatcher, signature, signatures_match
+from repro.core.tensor_match import (MatchStats, TensorMatcher, signature,
+                                     signatures_match, stats_signature)
 
 __all__ = [
     "DifferentialEnergyDebugger",
@@ -20,6 +22,10 @@ __all__ = [
     "MatchedRegion",
     "match_subgraphs",
     "TensorMatcher",
+    "MatchStats",
     "signature",
     "signatures_match",
+    "stats_signature",
+    "capture_tensor_stats",
+    "capture_tensor_values",
 ]

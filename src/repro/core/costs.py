@@ -306,6 +306,7 @@ def _collective_rule(scale: float) -> CostRule:
 
 
 _RULES["psum"] = _collective_rule(2.0)          # ring all-reduce ≈ 2× data
+_RULES["psum2"] = _collective_rule(2.0)          # JAX 0.4.x shard_map name
 _RULES["psum_invariant"] = _collective_rule(2.0)  # JAX>=0.7 shard_map name
 _RULES["pmean"] = _collective_rule(2.0)
 _RULES["pmax"] = _collective_rule(2.0)
@@ -317,6 +318,7 @@ _RULES["all_to_all"] = _collective_rule(1.0)
 _RULES["ppermute"] = _collective_rule(1.0)
 _RULES["psum_scatter"] = _collective_rule(1.0)
 _RULES["pvary"] = _view_rule                     # replication annotation only
+_RULES["pbroadcast"] = _view_rule                # replication annotation only
 
 
 # --- higher-order ------------------------------------------------------------

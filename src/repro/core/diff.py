@@ -2,8 +2,14 @@
 
 Given two callables implementing the same task and identical example inputs:
   1. trace both to operator graphs (graph.py),
-  2. capture intermediate tensor values on n input samples (interp.py),
-  3. match semantically equivalent tensors (tensor_match.py, Hypothesis 1),
+  2. STREAM-capture per-tensor signatures on n input samples (interp.py):
+     one instrumented execution per side per sample reduces every
+     intermediate tensor to its cheap symmetric invariants and discards the
+     values — the sample-0 execution's outputs double as the functional
+     equivalence gate, so neither side is ever executed just for the gate,
+  3. match semantically equivalent tensors (tensor_match.py, Hypothesis 1)
+     with the lazy two-phase matcher: values are re-captured selectively
+     only for pairs that survive the cheap gate,
   4. match semantically equivalent subgraphs (subgraph_match.py, Algorithm 1),
   5. price every region with the energy model (energy.py),
   6. detect: regions whose energy differs by more than ``energy_threshold``
@@ -25,7 +31,7 @@ from repro.core.diagnose import diagnose_region
 from repro.core.energy import (AnalyticalEnergyModel, EnergyProfile,
                                ReplayProfiler, subgraph_energy, subgraph_time)
 from repro.core.graph import OpGraph, trace
-from repro.core.interp import capture_tensor_values
+from repro.core.interp import capture_tensor_stats, capture_tensor_values
 from repro.core.report import Finding, Report
 from repro.core.subgraph_match import MatchedRegion, match_subgraphs
 from repro.core.tensor_match import TensorMatcher
@@ -48,6 +54,42 @@ def _perturb(args, seed: int):
     return jax.tree_util.tree_map(one, args)
 
 
+def _max_abs(x: np.ndarray) -> float:
+    """max|x| as a float; 0.0 for zero-size leaves (np.max would raise)."""
+    return float(np.max(np.abs(x))) if x.size else 0.0
+
+
+def _check_same_task(out_a, out_b, output_rtol: float) -> None:
+    """Functional-equivalence gate (paper: <=1% element-wise rel. difference).
+
+    Handles scalar and zero-size output leaves; the max-norm relative
+    difference measures elementwise |a-b| against the magnitude of the
+    outputs, so near-zero elements don't produce spurious "different task"
+    verdicts.
+    """
+    leaves_a = jax.tree_util.tree_leaves(out_a)
+    leaves_b = jax.tree_util.tree_leaves(out_b)
+    if len(leaves_a) != len(leaves_b):
+        raise ValueError(
+            f"implementations disagree in output structure "
+            f"({len(leaves_a)} vs {len(leaves_b)} leaves); not the same task")
+    for xa, xb in zip(leaves_a, leaves_b):
+        xa64 = np.asarray(xa, dtype=np.float64)
+        xb64 = np.asarray(xb, dtype=np.float64)
+        if xa64.shape != xb64.shape:
+            raise ValueError(
+                f"implementations disagree in output shapes "
+                f"({xa64.shape} vs {xb64.shape}); not the same task")
+        if xa64.size == 0:
+            continue
+        scale = max(_max_abs(xa64), _max_abs(xb64), 1e-6)
+        rel = _max_abs(xa64 - xb64) / scale
+        if rel > output_rtol:
+            raise ValueError(
+                f"implementations disagree (max rel diff {rel:.3e} > "
+                f"{output_rtol}); not the same task")
+
+
 @dataclasses.dataclass
 class DifferentialEnergyDebugger:
     energy_threshold: float = 0.10       # paper default: 10% (robust down to 5%)
@@ -66,32 +108,35 @@ class DifferentialEnergyDebugger:
         graph_a = trace(fn_a, *args, name=name_a)
         graph_b = trace(fn_b, *args, name=name_b)
 
-        # -- functional equivalence gate (the two sides must do the same task;
-        #    paper enforces <=1% element-wise relative output difference)
-        out_a = jax.tree_util.tree_leaves(fn_a(*args))
-        out_b = jax.tree_util.tree_leaves(fn_b(*args))
-        for xa, xb in zip(out_a, out_b):
-            xa64 = np.asarray(xa, dtype=np.float64)
-            xb64 = np.asarray(xb, dtype=np.float64)
-            # max-norm relative difference: elementwise |a-b| measured against
-            # the magnitude of the outputs, so near-zero elements don't
-            # produce spurious "different task" verdicts.
-            scale = max(float(np.max(np.abs(xa64)), ),
-                        float(np.max(np.abs(xb64))), 1e-6)
-            rel = float(np.max(np.abs(xa64 - xb64))) / scale
-            if rel > output_rtol:
-                raise ValueError(
-                    f"implementations disagree (max rel diff {rel:.3e} > "
-                    f"{output_rtol}); not the same task")
-
-        # -- multi-sample tensor capture
+        # -- multi-sample STREAMING signature capture.  The sample-0
+        #    executions also produce each side's outputs, which feed the
+        #    functional equivalence gate below — no separate full execution
+        #    of either side just to compare outputs.
         samples = [args] + [_perturb(args, seed=17 + k)
                             for k in range(self.num_input_samples - 1)]
-        vals_a = [capture_tensor_values(graph_a, *s) for s in samples]
-        vals_b = [capture_tensor_values(graph_b, *s) for s in samples]
+        outs_a, st_a0 = capture_tensor_stats(graph_a, *samples[0])
+        outs_b, st_b0 = capture_tensor_stats(graph_b, *samples[0])
 
+        # -- functional equivalence gate (the two sides must do the same task;
+        #    paper enforces <=1% element-wise relative output difference).
+        #    Gate BEFORE capturing further samples so a mismatch fails fast.
+        _check_same_task(outs_a, outs_b, output_rtol)
+
+        stats_a, stats_b = [st_a0], [st_b0]
+        for s in samples[1:]:
+            stats_a.append(capture_tensor_stats(graph_a, *s)[1])
+            stats_b.append(capture_tensor_stats(graph_b, *s)[1])
+
+        # -- lazy two-phase tensor matching: values are re-captured
+        #    selectively, only for tensors whose pairs survive the cheap gate
         matcher = TensorMatcher(rtol=self.match_rtol)
-        eq_pairs = matcher.match(vals_a, vals_b)
+
+        def fetch(graph):
+            return lambda k, tids: capture_tensor_values(
+                graph, *samples[k], only_tids=tids)
+
+        eq_pairs = matcher.match_streamed(stats_a, stats_b,
+                                          fetch(graph_a), fetch(graph_b))
         regions = match_subgraphs(graph_a, graph_b, eq_pairs)
 
         # -- energy profiles

@@ -37,14 +37,46 @@ class OpEnergy:
 class EnergyProfile:
     graph_name: str
     ops: list[OpEnergy]
+    # node-indexed energy/time arrays, built lazily once so per-region
+    # queries (subgraph_energy/subgraph_time) are O(|region|) array gathers
+    # instead of a Python set rebuild + full scan per query.
+    _energy_by_node: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _time_by_node: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def _index(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._energy_by_node is None:
+            n = max((o.node_idx for o in self.ops), default=-1) + 1
+            e = np.zeros(n)
+            t = np.zeros(n)
+            for o in self.ops:
+                e[o.node_idx] += o.energy_j
+                t[o.node_idx] += o.time_s
+            self._energy_by_node = e
+            self._time_by_node = t
+        return self._energy_by_node, self._time_by_node
+
+    @staticmethod
+    def _gather(arr: np.ndarray, node_idxs: Sequence[int]) -> float:
+        idxs = np.unique(np.fromiter(node_idxs, dtype=np.int64))
+        # unknown idxs are ignored, matching the historical set-filter scan
+        idxs = idxs[(idxs >= 0) & (idxs < arr.size)]
+        return float(arr[idxs].sum()) if idxs.size else 0.0
+
+    def energy_of(self, node_idxs: Sequence[int]) -> float:
+        return self._gather(self._index()[0], node_idxs)
+
+    def time_of(self, node_idxs: Sequence[int]) -> float:
+        return self._gather(self._index()[1], node_idxs)
 
     @property
     def total_energy_j(self) -> float:
-        return sum(o.energy_j for o in self.ops)
+        return float(self._index()[0].sum())
 
     @property
     def total_time_s(self) -> float:
-        return sum(o.time_s for o in self.ops)
+        return float(self._index()[1].sum())
 
     def top_k(self, k: int = 5) -> list[OpEnergy]:
         return sorted(self.ops, key=lambda o: -o.energy_j)[:k]
@@ -68,35 +100,58 @@ class AnalyticalEnergyModel:
     def __init__(self, spec: HardwareSpec = TPU_V5E):
         self.spec = spec
 
+    def _price(self, costs: "list[costs_mod.OpCost]"):
+        """Roofline + energy math over a batch of OpCosts, as array ops.
+
+        Single implementation shared by op_energy and profile: returns
+        (flops, hbm, ici, energy, t_op, bound) arrays of len(costs).
+        """
+        s = self.spec
+        n = len(costs)
+        flops = np.fromiter((c.flops for c in costs), dtype=np.float64, count=n)
+        frac = np.fromiter((c.fp32_fraction for c in costs), dtype=np.float64,
+                           count=n)
+        hbm = np.fromiter((c.hbm_bytes for c in costs), dtype=np.float64,
+                          count=n)
+        ici = np.fromiter((c.ici_bytes for c in costs), dtype=np.float64,
+                          count=n)
+        fp32 = flops * frac
+        bf16 = flops - fp32
+        t_compute = (bf16 / s.peak_flops_bf16) + (fp32 / s.peak_flops_fp32)
+        t_mem = hbm / s.hbm_bw
+        t_coll = ici / (s.ici_bw_per_link * s.ici_links)
+        t_op = np.maximum(np.maximum(t_compute, t_mem),
+                          np.maximum(t_coll, 0.0))
+        bound = np.where((t_op == t_compute) & (t_compute > 0), "compute",
+                         np.where((t_op == t_coll) & (t_coll > 0),
+                                  "collective", "memory"))
+        energy = (bf16 * s.joules_per_flop
+                  + fp32 * 3.0 * s.joules_per_flop
+                  + hbm * s.joules_per_hbm_byte
+                  + ici * s.joules_per_ici_byte
+                  + s.idle_watts * t_op)
+        return flops, hbm, ici, energy, t_op, bound
+
     def op_energy(self, graph: OpGraph, node_idx: int) -> OpEnergy:
         node = graph.nodes[node_idx]
         c = costs_mod.node_cost(graph, node)
-        s = self.spec
-        fp32_flops = c.flops * c.fp32_fraction
-        bf16_flops = c.flops - fp32_flops
-        t_compute = s.compute_time(bf16_flops) + s.compute_time(fp32_flops, fp32=True)
-        t_mem = s.memory_time(c.hbm_bytes)
-        t_coll = s.collective_time(c.ici_bytes)
-        t_op = max(t_compute, t_mem, t_coll, 0.0)
-        if t_op == t_compute and t_compute > 0:
-            bound = "compute"
-        elif t_op == t_coll and t_coll > 0:
-            bound = "collective"
-        else:
-            bound = "memory"
-        energy = (bf16_flops * s.joules_per_flop
-                  + fp32_flops * 3.0 * s.joules_per_flop
-                  + c.hbm_bytes * s.joules_per_hbm_byte
-                  + c.ici_bytes * s.joules_per_ici_byte
-                  + s.idle_watts * t_op)
+        flops, hbm, ici, energy, t_op, bound = self._price([c])
         return OpEnergy(node_idx=node_idx, primitive=node.primitive,
-                        energy_j=energy, time_s=t_op, flops=c.flops,
-                        hbm_bytes=c.hbm_bytes, ici_bytes=c.ici_bytes, bound=bound)
+                        energy_j=float(energy[0]), time_s=float(t_op[0]),
+                        flops=float(flops[0]), hbm_bytes=float(hbm[0]),
+                        ici_bytes=float(ici[0]), bound=str(bound[0]))
 
     def profile(self, graph: OpGraph) -> EnergyProfile:
-        return EnergyProfile(graph_name=graph.name,
-                             ops=[self.op_energy(graph, i)
-                                  for i in range(len(graph.nodes))])
+        """Price every node, with the roofline/energy math batched over the
+        whole graph as array ops (one pass instead of per-node scalar math)."""
+        costs = [costs_mod.node_cost(graph, node) for node in graph.nodes]
+        flops, hbm, ici, energy, t_op, bound = self._price(costs)
+        ops = [OpEnergy(node_idx=i, primitive=graph.nodes[i].primitive,
+                        energy_j=float(energy[i]), time_s=float(t_op[i]),
+                        flops=float(flops[i]), hbm_bytes=float(hbm[i]),
+                        ici_bytes=float(ici[i]), bound=str(bound[i]))
+               for i in range(len(costs))]
+        return EnergyProfile(graph_name=graph.name, ops=ops)
 
 
 class ReplayProfiler:
@@ -139,10 +194,8 @@ class ReplayProfiler:
 
 
 def subgraph_energy(profile: EnergyProfile, node_idxs: Sequence[int]) -> float:
-    idxs = set(node_idxs)
-    return sum(o.energy_j for o in profile.ops if o.node_idx in idxs)
+    return profile.energy_of(node_idxs)
 
 
 def subgraph_time(profile: EnergyProfile, node_idxs: Sequence[int]) -> float:
-    idxs = set(node_idxs)
-    return sum(o.time_s for o in profile.ops if o.node_idx in idxs)
+    return profile.time_of(node_idxs)

@@ -82,6 +82,25 @@ class OpGraph:
     inputs: list[int]                   # tensor ids in call order
     outputs: list[int]
     closed_jaxpr: ClosedJaxpr | None = None
+    # Memoized flattened extraction of closed_jaxpr.  Graphs built by
+    # extract_graph ARE their own flattening, so repeated instrumented runs
+    # (multi-sample capture, ReplayProfiler) never re-extract.
+    _flat_cache: "OpGraph | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def flat_graph(self) -> "OpGraph":
+        """The flattened (inline_calls=True) extraction of this graph's jaxpr.
+
+        Memoized on the instance: extract_graph() seeds the cache with the
+        graph itself, and manually constructed OpGraphs pay the extraction
+        cost exactly once instead of on every instrumented run.
+        """
+        if self._flat_cache is None:
+            if self.closed_jaxpr is None:
+                raise ValueError("OpGraph was built without a ClosedJaxpr")
+            self._flat_cache = extract_graph(self.closed_jaxpr, name=self.name,
+                                             inline_calls=True)
+        return self._flat_cache
 
     # ---- structural helpers -------------------------------------------------
     def successors(self, node_idx: int) -> list[int]:
@@ -109,18 +128,14 @@ class OpGraph:
         further consumers that feed *another* sink (multi-output graphs), and
         those nodes belong to the region too.  Because the graph is a DAG,
         the fwd∩bwd intersection still yields exactly the between-set.
+
+        The backward sweep runs first (it is bounded by the src frontier) and
+        the forward sweep only expands inside the backward set: every node on
+        a src→dst path is backward-reachable from dst, so restricting the
+        forward frontier this way keeps each region query O(|region|) instead
+        of walking the whole downstream graph.
         """
-        # forward reachable from src
-        fwd: set[int] = set()
-        frontier = [c for t in src_tids for c in self.tensors[t].consumers]
-        while frontier:
-            n = frontier.pop()
-            if n in fwd:
-                continue
-            fwd.add(n)
-            for tid in self.nodes[n].outvars:
-                frontier.extend(self.tensors[tid].consumers)
-        # backward reachable from dst
+        # backward reachable from dst (stops at src tensors)
         bwd: set[int] = set()
         frontier = [self.tensors[t].producer for t in dst_tids
                     if self.tensors[t].producer is not None]
@@ -135,7 +150,19 @@ class OpGraph:
                 p = self.tensors[tid].producer
                 if p is not None:
                     frontier.append(p)
-        return sorted(fwd & bwd)
+        # forward reachable from src, restricted to the backward set
+        fwd: set[int] = set()
+        frontier = [c for t in src_tids for c in self.tensors[t].consumers
+                    if c in bwd]
+        while frontier:
+            n = frontier.pop()
+            if n in fwd:
+                continue
+            fwd.add(n)
+            for tid in self.nodes[n].outvars:
+                frontier.extend(c for c in self.tensors[tid].consumers
+                                if c in bwd)
+        return sorted(fwd)
 
 
 def _call_path(eqn, max_frames: int = 12) -> tuple[str, ...]:
@@ -266,8 +293,11 @@ def extract_graph(closed_jaxpr: ClosedJaxpr, *, name: str = "graph",
         tensors[t].is_output = True
         outputs.append(t)
 
-    return OpGraph(name=name, nodes=nodes, tensors=tensors, inputs=inputs,
-                   outputs=outputs, closed_jaxpr=closed_jaxpr)
+    g = OpGraph(name=name, nodes=nodes, tensors=tensors, inputs=inputs,
+                outputs=outputs, closed_jaxpr=closed_jaxpr)
+    if inline_calls:
+        g._flat_cache = g   # the extraction is its own flattening
+    return g
 
 
 def trace(fn: Callable, *example_args, name: str | None = None,

@@ -3,7 +3,13 @@
 The JAX analogue of the paper's CUPTI Callback tracing (§5.1): executes a
 traced program operator by operator, firing a callback with each operator's
 inputs/outputs.  Used for
-  * capturing intermediate tensor VALUES (tensor_match.py needs them),
+  * STREAMING tensor-signature capture (capture_tensor_stats): each operator's
+    outputs are reduced to their cheap symmetric invariants inside the on_op
+    callback and the values are discarded immediately, so multi-sample capture
+    holds O(tensors) scalars instead of O(activations x samples) float64
+    arrays — the default matching path,
+  * selective tensor-VALUE capture (capture_tensor_values with only_tids) for
+    the matcher's lazy phase-2 spectral checks,
   * replay-based per-operator wall-time measurement (energy.py ReplayProfiler,
     the paper's §5.2 software profiling mode),
   * runtime overhead benchmarking (Fig. 10 analogue).
@@ -26,7 +32,9 @@ from repro.core.graph import OpGraph
 class OpRecord:
     node_idx: int
     primitive: str
-    out_values: list[Any] | None      # only kept if capture_values
+    # kept if capture_values; with stream_values they are present only for
+    # the duration of the on_op callback and dropped right after
+    out_values: list[Any] | None
     wall_time_s: float | None          # only set if measure (replay) enabled
     replay_iters: int = 0
 
@@ -44,9 +52,10 @@ def _bind(eqn, invals):
 # axis has size 1, so each collective is semantically the identity (and
 # axis_index is 0).  Multi-shard interpretation is impossible off-cluster and
 # raises.
-_COLLECTIVES = {"psum", "pmax", "pmin", "pmean", "all_gather", "all_to_all",
-                "ppermute", "pbroadcast", "psum_scatter", "reduce_scatter",
-                "psum_invariant", "all_gather_invariant", "pvary"}
+_COLLECTIVES = {"psum", "psum2", "pmax", "pmin", "pmean", "all_gather",
+                "all_to_all", "ppermute", "pbroadcast", "psum_scatter",
+                "reduce_scatter", "psum_invariant", "all_gather_invariant",
+                "pvary"}
 
 
 def _collective_passthrough(eqn, invals, axis_sizes: dict[str, int]):
@@ -68,6 +77,7 @@ def run_instrumented(
     graph: OpGraph,
     *args,
     capture_values: bool = False,
+    stream_values: bool = False,
     measure: bool = False,
     min_replay_time_s: float = 5e-3,
     max_replay_iters: int = 64,
@@ -80,13 +90,20 @@ def run_instrumented(
     paper's §5.2 that averages out timer/counter noise for microsecond ops.
     Note the instrumented path executes the *unfused* operator stream, which
     is exactly the operator-level execution model priced by costs.py.
+
+    ``capture_values`` retains every operator's outputs on its OpRecord
+    (O(activations) extra memory, per sample).  ``stream_values`` instead
+    exposes the raw outputs to the ``on_op`` callback ONLY for the duration
+    of the call and drops them afterwards: the callback can reduce each
+    tensor to a signature so nothing beyond the interpreter's own live
+    values is ever retained, across however many samples are captured.
     """
     closed = graph.closed_jaxpr
     if closed is None:
         raise ValueError("OpGraph was built without a ClosedJaxpr; cannot execute")
-    # Re-extract with the same flattening used to build `graph` so node idxs line up.
-    from repro.core.graph import extract_graph
-    flat = extract_graph(closed, name=graph.name, inline_calls=True)
+    # Same flattening used to build `graph` so node idxs line up (memoized on
+    # the graph: repeated multi-sample/replay runs stop re-extracting).
+    flat = graph.flat_graph()
     if len(flat.nodes) != len(graph.nodes):
         raise ValueError("graph/node mismatch; rebuild graph with extract_graph")
 
@@ -163,16 +180,24 @@ def run_instrumented(
                 out = _bind(eqn, invals)
             for v, val in zip(eqn.outvars, out):
                 write_fn(v, val)
+            if capture_values:
+                out_values = [np.asarray(o) for o in out]
+            elif stream_values:
+                out_values = list(out)   # raw, handed to on_op then dropped
+            else:
+                out_values = None
             rec = OpRecord(
                 node_idx=node_idx,
                 primitive=eqn.primitive.name,
-                out_values=[np.asarray(o) for o in out] if capture_values else None,
+                out_values=out_values,
                 wall_time_s=wall,
                 replay_iters=iters,
             )
             records.append(rec)
             if on_op is not None:
                 on_op(rec)
+            if stream_values and not capture_values:
+                rec.out_values = None
             node_idx += 1
 
     exec_eqns(jaxpr.eqns, env, read, write, {})
@@ -180,15 +205,55 @@ def run_instrumented(
     return outs, records
 
 
-def capture_tensor_values(graph: OpGraph, *args) -> dict[int, np.ndarray]:
-    """Map tensor-id -> concrete value for every edge in the graph."""
+def capture_tensor_values(
+    graph: OpGraph, *args,
+    only_tids: "set[int] | Sequence[int] | None" = None,
+) -> dict[int, np.ndarray]:
+    """Map tensor-id -> concrete value for edges in the graph.
+
+    With ``only_tids`` the run retains ONLY the requested tensors (the
+    matcher's phase-2 selective fetch): every other operator output is
+    discarded as soon as its consumers have run, bounding peak memory by the
+    requested set instead of the whole activation footprint.
+    """
+    want = None if only_tids is None else set(only_tids)
     values: dict[int, np.ndarray] = {}
     flat_args = jax.tree_util.tree_leaves(args)
     for tid, val in zip(graph.inputs, flat_args):
-        values[tid] = np.asarray(val)
-    outs, records = run_instrumented(graph, *args, capture_values=True)
-    for rec in records:
+        if want is None or tid in want:
+            values[tid] = np.asarray(val)
+
+    def on_op(rec: OpRecord) -> None:
         node = graph.nodes[rec.node_idx]
         for tid, val in zip(node.outvars, rec.out_values or []):
-            values[tid] = val
+            if want is None or tid in want:
+                values[tid] = np.asarray(val)
+
+    run_instrumented(graph, *args, stream_values=True, on_op=on_op)
     return values
+
+
+def capture_tensor_stats(graph: OpGraph, *args):
+    """Streaming capture: outputs + tensor-id -> cheap symmetric invariants.
+
+    One instrumented execution computes each intermediate tensor's
+    entry-symmetric invariants (l1/l2/mean/amax/amin, via jitted fused
+    reductions for float tensors) in the on_op callback and discards the
+    values immediately.  Returns ``(graph_outputs, {tid: TensorSignature})``
+    so callers (diff.py's functional-equivalence gate) can reuse the same
+    execution's outputs instead of running the program again.
+    """
+    from repro.core.tensor_match import stats_signature
+
+    stats: dict[int, Any] = {}
+    flat_args = jax.tree_util.tree_leaves(args)
+    for tid, val in zip(graph.inputs, flat_args):
+        stats[tid] = stats_signature(val)
+
+    def on_op(rec: OpRecord) -> None:
+        node = graph.nodes[rec.node_idx]
+        for tid, val in zip(node.outvars, rec.out_values or []):
+            stats[tid] = stats_signature(val)
+
+    outs, _ = run_instrumented(graph, *args, stream_values=True, on_op=on_op)
+    return outs, stats

@@ -21,15 +21,21 @@ from typing import Sequence
 
 from repro.core.graph import OpGraph
 
-Vertex = tuple[str, int]   # ("op", node_idx) or ("t", tensor_id)
-_SRC: Vertex = ("src", -1)
-_SNK: Vertex = ("snk", -1)
+# Flow vertices are encoded as ints for dict/set speed: op node n -> 2n,
+# tensor t -> 2t+1 (odd), virtual source/sink -> negative sentinels.
+_SRC = -2
+_SNK = -4
 
 
 def _build_flow(graph: OpGraph, src_tids: Sequence[int],
-                snk_tids: Sequence[int]) -> dict[Vertex, list[Vertex]]:
-    """Adjacency of the op/tensor flow graph between given tensor frontiers."""
-    succ: dict[Vertex, list[Vertex]] = {_SRC: [], _SNK: []}
+                snk_tids: Sequence[int]
+                ) -> tuple[dict[int, list[int]], list[int]]:
+    """Adjacency of the op/tensor flow graph between given tensor frontiers.
+
+    Also returns the between-set node list so callers don't recompute the
+    (BFS-heavy) ``subgraph_nodes_between`` for the same frontier.
+    """
+    succ: dict[int, list[int]] = {_SRC: [], _SNK: []}
     src_set, snk_set = set(src_tids), set(snk_tids)
     nodes = graph.subgraph_nodes_between(src_set, snk_set)
     node_set = set(nodes)
@@ -41,32 +47,32 @@ def _build_flow(graph: OpGraph, src_tids: Sequence[int],
                 interior_tids.add(t)
 
     for t in src_set:
-        succ[_SRC].append(("t", t))
-        succ[("t", t)] = []
+        succ[_SRC].append(2 * t + 1)
+        succ[2 * t + 1] = []
     for t in snk_set:
-        succ.setdefault(("t", t), []).append(_SNK)
+        succ.setdefault(2 * t + 1, []).append(_SNK)
     for t in interior_tids:
-        succ.setdefault(("t", t), [])
+        succ.setdefault(2 * t + 1, [])
 
     for n in nodes:
-        v = ("op", n)
+        v = 2 * n
         succ[v] = []
         for t in graph.nodes[n].outvars:
             if t in snk_set or t in interior_tids:
-                succ[v].append(("t", t))
+                succ[v].append(2 * t + 1)
     for t in list(src_set) + list(interior_tids):
         for c in graph.tensors[t].consumers:
             if c in node_set:
-                succ[("t", t)].append(("op", c))
-    return succ
+                succ[2 * t + 1].append(2 * c)
+    return succ, nodes
 
 
-def _dominator_path(succ: dict[Vertex, list[Vertex]]) -> list[Vertex]:
+def _dominator_path(succ: dict[int, list[int]]) -> list[int]:
     """Vertices dominating _SNK, in order from _SRC to _SNK."""
     # reverse post-order from _SRC (iterative DFS)
-    visited: set[Vertex] = set()
-    post: list[Vertex] = []
-    stack: list[tuple[Vertex, int]] = [(_SRC, 0)]
+    visited: set[int] = set()
+    post: list[int] = []
+    stack: list[tuple[int, int]] = [(_SRC, 0)]
     visited.add(_SRC)
     while stack:
         v, i = stack.pop()
@@ -81,16 +87,16 @@ def _dominator_path(succ: dict[Vertex, list[Vertex]]) -> list[Vertex]:
             post.append(v)
     rpo = list(reversed(post))
     order = {v: i for i, v in enumerate(rpo)}
-    preds: dict[Vertex, list[Vertex]] = {v: [] for v in rpo}
+    preds: dict[int, list[int]] = {v: [] for v in rpo}
     for v in rpo:
         for k in succ.get(v, []):
             if k in order:
                 preds[k].append(v)
 
-    idom: dict[Vertex, Vertex | None] = {v: None for v in rpo}
+    idom: dict[int, int | None] = {v: None for v in rpo}
     idom[_SRC] = _SRC
 
-    def intersect(a: Vertex, b: Vertex) -> Vertex:
+    def intersect(a: int, b: int) -> int:
         while a != b:
             while order[a] > order[b]:
                 a = idom[a]  # type: ignore[assignment]
@@ -170,33 +176,37 @@ def match_subgraphs(
     from repro.core.tensor_match import bijective_pairs
     eq = bijective_pairs(eq_pairs)
     eq_a2b = dict(eq)
+    eq_b_tids = set(eq_a2b.values())
 
     def default_stream(graph: OpGraph, side_is_a: bool) -> list[int]:
         tids = []
         for t in graph.inputs:
             if side_is_a and t in eq_a2b:
                 tids.append(t)
-            elif not side_is_a and t in set(eq_a2b.values()):
+            elif not side_is_a and t in eq_b_tids:
                 tids.append(t)
         return tids or list(graph.inputs)
 
     src_a = list(stream_inputs_a) if stream_inputs_a else default_stream(graph_a, True)
-    src_b = list(stream_inputs_b) if stream_inputs_b else default_stream(graph_b, True is False)
+    src_b = list(stream_inputs_b) if stream_inputs_b else default_stream(graph_b, False)
 
     regions: list[MatchedRegion] = []
 
     def recurse(src_ta: list[int], snk_ta: list[int],
                 src_tb: list[int], snk_tb: list[int],
                 in_pair, out_pair, depth: int):
-        flow_a = _build_flow(graph_a, src_ta, snk_ta)
-        flow_b = _build_flow(graph_b, src_tb, snk_tb)
+        flow_a, na = _build_flow(graph_a, src_ta, snk_ta)
+        flow_b, nb = _build_flow(graph_b, src_tb, snk_tb)
         path_a = _dominator_path(flow_a)
         path_b = _dominator_path(flow_b)
-        # interior tensor vertices on the dominator paths (exclude frontiers)
+        # interior tensor vertices on the dominator paths (exclude frontiers);
+        # tensor vertices are the odd-encoded ints (2*t + 1)
         ends_a = set(src_ta) | set(snk_ta)
         ends_b = set(src_tb) | set(snk_tb)
-        dom_a = [t for (kind, t) in path_a if kind == "t" and t not in ends_a]
-        dom_b = [t for (kind, t) in path_b if kind == "t" and t not in ends_b]
+        dom_a = [v >> 1 for v in path_a if v > 0 and v & 1
+                 and (v >> 1) not in ends_a]
+        dom_b = [v >> 1 for v in path_b if v > 0 and v & 1
+                 and (v >> 1) not in ends_b]
         dom_b_order = {t: i for i, t in enumerate(dom_b)}
         # ordered, order-consistent cut pairs (strictly increasing in B)
         cuts: list[tuple[int, int]] = []
@@ -209,8 +219,6 @@ def match_subgraphs(
                 cuts.append((ta, tb))
                 last_b = dom_b_order[tb]
         if not cuts:  # |E| = 1 base case: the whole region matches
-            na = graph_a.subgraph_nodes_between(set(src_ta), set(snk_ta))
-            nb = graph_b.subgraph_nodes_between(set(src_tb), set(snk_tb))
             if na or nb:
                 regions.append(MatchedRegion(nodes_a=na, nodes_b=nb,
                                              in_pair=in_pair, out_pair=out_pair,
@@ -240,9 +248,10 @@ def match_subgraphs(
     if (degenerate and stream_inputs_a is None and len(src_a) > 1
             and n_nodes >= 20):
         best = regions
+        src_b_set = set(src_b)
         for ta in src_a:
             tb = eq_a2b.get(ta)
-            if tb is None or tb not in set(src_b):
+            if tb is None or tb not in src_b_set:
                 continue
             regions = []
             recurse([ta], list(graph_a.outputs), [tb],

@@ -1,0 +1,12 @@
+"""Version shims for the Pallas TPU API surface.
+
+jax >= 0.7 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+the container may carry either generation.  Kernels import the name from
+here so they compile against both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

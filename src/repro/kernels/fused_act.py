@@ -17,6 +17,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 _C = float(np.sqrt(2.0 / np.pi))
 
 
@@ -44,7 +46,7 @@ def _tiled_elementwise(kernel, args, out_dtype, *, block_rows: int,
         in_specs=[spec] * len(args),
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((rows, d), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*args)

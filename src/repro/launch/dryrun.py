@@ -141,15 +141,26 @@ def _compile_bundle(bundle, mesh):
 
 def _cost_dict(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jaxlib < 0.5: one dict per program
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0))}
 
 
 def _memory_dict(compiled) -> dict:
     ma = compiled.memory_analysis()
-    return {k: int(getattr(ma, k)) for k in
-            ("argument_size_in_bytes", "output_size_in_bytes",
-             "temp_size_in_bytes", "peak_memory_in_bytes", "alias_size_in_bytes")}
+    out = {k: int(getattr(ma, k)) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes")}
+    # jaxlib < 0.5 has no peak_memory_in_bytes; args + outputs + temps -
+    # aliased is the live-set upper bound XLA reports as peak on newer
+    # releases.
+    peak = getattr(ma, "peak_memory_in_bytes", None)
+    if peak is None:
+        peak = (out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+                + out["temp_size_in_bytes"] - out["alias_size_in_bytes"])
+    out["peak_memory_in_bytes"] = int(peak)
+    return out
 
 
 def model_flops(cfg, shape) -> float:

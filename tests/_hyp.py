@@ -1,0 +1,42 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+The container image does not ship hypothesis; importing it unguarded used to
+abort collection of every test in the file (the seed suite's tier-1 failure).
+Property-based tests import ``given/settings/st`` from here instead: when the
+real package is absent they are individually skipped while the deterministic
+tests in the same file keep running.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Anything:
+        """Stands in for any strategy object/decorator at collection time."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _Anything()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

@@ -58,11 +58,15 @@ def test_dynamic_update_slice_cheaper_than_concat():
 
 def test_collective_priced_in_ici_bytes():
     from jax.sharding import Mesh, PartitionSpec as P
+    try:  # JAX >= 0.6 exposes shard_map at top level
+        shard_map = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
     mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
 
     def f(x):
-        return jax.shard_map(lambda y: jax.lax.psum(y, "dp"), mesh=mesh,
-                             in_specs=P(), out_specs=P())(x)
+        return shard_map(lambda y: jax.lax.psum(y, "dp"), mesh=mesh,
+                         in_specs=P(), out_specs=P())(x)
     g = _graph(f, jnp.ones((128, 128)))
     c = graph_cost(g)
     assert c.ici_bytes >= 2 * 128 * 128 * 4

@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # skips property tests w/o hypothesis
 
 from repro.kernels import ops, ref
 

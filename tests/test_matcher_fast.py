@@ -1,0 +1,176 @@
+"""Equivalence of the bucketed+lazy matcher with the exhaustive oracle.
+
+The fast two-phase matcher (phase 1: (numel, quantized-l2) buckets + cheap
+symmetric gate; phase 2: lazy memoized unfolding SVDs on survivors) must
+return the identical (tid_a, tid_b) pair set as the seed's eager exhaustive
+matcher on the pipeline workloads, whether it is fed materialized values or
+streamed signatures with selective re-capture.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.diff import DifferentialEnergyDebugger, _perturb
+from repro.core.graph import trace
+from repro.core.interp import capture_tensor_stats, capture_tensor_values
+from repro.core.tensor_match import TensorMatcher, signature, stats_signature
+from repro.zoo import cases
+
+PARITY_CASES = ["c1-precision-prefill", "c6-matpow", "n1-gelu-backend"]
+
+
+def _captures(case, n_samples=2):
+    args = tuple(case.make_args())
+    ga = trace(case.inefficient, *args, name="a")
+    gb = trace(case.efficient, *args, name="b")
+    samples = [args] + [_perturb(args, seed=17 + k)
+                        for k in range(n_samples - 1)]
+    vals_a = [capture_tensor_values(ga, *s) for s in samples]
+    vals_b = [capture_tensor_values(gb, *s) for s in samples]
+    return ga, gb, samples, vals_a, vals_b
+
+
+@pytest.mark.parametrize("cid", PARITY_CASES)
+def test_fast_matcher_matches_oracle_on_pipeline_workloads(cid):
+    case = cases.by_id(cid)
+    _, _, _, vals_a, vals_b = _captures(case)
+    m = TensorMatcher()
+    fast = m.match(vals_a, vals_b)
+    oracle = m.match_exhaustive(vals_a, vals_b)
+    assert set(fast) == set(oracle)
+
+
+@pytest.mark.parametrize("cid", PARITY_CASES)
+def test_streamed_matcher_matches_oracle(cid):
+    case = cases.by_id(cid)
+    ga, gb, samples, vals_a, vals_b = _captures(case)
+    stats_a = [capture_tensor_stats(ga, *s)[1] for s in samples]
+    stats_b = [capture_tensor_stats(gb, *s)[1] for s in samples]
+    m = TensorMatcher()
+    streamed = m.match_streamed(
+        stats_a, stats_b,
+        lambda k, tids: capture_tensor_values(ga, *samples[k], only_tids=tids),
+        lambda k, tids: capture_tensor_values(gb, *samples[k], only_tids=tids))
+    oracle = m.match_exhaustive(vals_a, vals_b)
+    assert set(streamed) == set(oracle)
+
+
+def test_streaming_capture_parity_with_materialized():
+    """Streamed invariants agree with signatures of materialized values."""
+    def fn(x, w):
+        y = jnp.tanh(x @ w)
+        return (y * 1.01 + x).sum(axis=0)
+
+    x = jax.random.normal(jax.random.key(0), (32, 128))
+    w = jax.random.normal(jax.random.key(1), (128, 128)) * 0.2
+    g = trace(fn, x, w)
+    values = capture_tensor_values(g, x, w)
+    _, stats = capture_tensor_stats(g, x, w)
+    assert set(stats) == set(values)
+    for tid, sig in stats.items():
+        ref = signature(values[tid])
+        assert sig.numel == ref.numel
+        assert sig.shape == tuple(values[tid].shape)
+        for a, b in ((sig.l1, ref.l1), (sig.l2, ref.l2), (sig.mean, ref.mean),
+                     (sig.amax, ref.amax), (sig.amin, ref.amin)):
+            assert a == pytest.approx(b, rel=1e-5, abs=1e-12)
+
+
+def test_streamed_capture_returns_graph_outputs():
+    """capture_tensor_stats's outputs equal a direct execution (the reuse
+    that lets diff.compare skip the third full run)."""
+    def fn(x):
+        return jnp.tanh(x) * 2.0, x.sum()
+
+    x = jax.random.normal(jax.random.key(2), (8, 8))
+    g = trace(fn, x)
+    outs, _ = capture_tensor_stats(g, x)
+    want = jax.tree_util.tree_leaves(fn(x))
+    for o, wv in zip(outs, want):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(wv), rtol=1e-6)
+
+
+def test_selective_capture_only_tids():
+    def fn(x):
+        return jnp.tanh(x @ x) + 1.0
+
+    x = jax.random.normal(jax.random.key(3), (16, 16))
+    g = trace(fn, x)
+    full = capture_tensor_values(g, x)
+    want = sorted(full)[:3]
+    part = capture_tensor_values(g, x, only_tids=want)
+    assert sorted(part) == want
+    for t in want:
+        np.testing.assert_array_equal(part[t], full[t])
+
+
+def test_sketch_rejects_shuffled_large_tensor():
+    """Tensors above max_svd_numel get a randomized-sketch spectral test:
+    an entry permutation preserves every symmetric invariant but destroys
+    the spectrum, so the fast matcher must reject it (the seed's
+    invariants-only fallback could not)."""
+    rng = np.random.default_rng(0)
+    u = rng.standard_normal((40, 1)).astype(np.float32)
+    v = rng.standard_normal((1, 30)).astype(np.float32)
+    a = (u @ v)                       # rank-1, numel 1200
+    b = np.ascontiguousarray(a.T)     # layout transform: must match
+    c = rng.permutation(a.ravel()).reshape(a.shape)  # same multiset: reject
+    m = TensorMatcher(max_svd_numel=1000)
+    assert m.match([{0: a}], [{0: b}]) == [(0, 0)]
+    assert m.match([{0: a}], [{0: c}]) == []
+    # the invariants-only oracle cannot tell the shuffle apart
+    assert m.match_exhaustive([{0: a}], [{0: c}]) == [(0, 0)]
+
+
+def test_stats_signature_jit_path_matches_numpy():
+    x = jax.random.normal(jax.random.key(4), (64, 128))  # numel >= 4096
+    jit_sig = stats_signature(x)
+    np_sig = stats_signature(np.asarray(x), use_jit=False)
+    for a, b in ((jit_sig.l1, np_sig.l1), (jit_sig.l2, np_sig.l2),
+                 (jit_sig.mean, np_sig.mean), (jit_sig.amax, np_sig.amax),
+                 (jit_sig.amin, np_sig.amin)):
+        assert a == pytest.approx(b, rel=1e-5)
+
+
+def test_diff_gate_handles_scalar_and_empty_outputs():
+    """The functional-equivalence gate must not raise on zero-size or scalar
+    output leaves (np.max on an empty array raises)."""
+    def fa(x):
+        return x.sum(), jnp.zeros((0,)), x * 2.0
+
+    def fb(x):
+        return x.sum(), jnp.zeros((0,)), (x + x)
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)),
+                    jnp.float32)
+    rep = DifferentialEnergyDebugger().compare(fa, fb, (x,))
+    assert rep.findings is not None
+
+
+def test_diff_gate_rejects_different_tasks():
+    def fa(x):
+        return x * 2.0
+
+    def fb(x):
+        return x * 3.0
+
+    x = jnp.ones((4, 4))
+    with pytest.raises(ValueError, match="not the same task"):
+        DifferentialEnergyDebugger().compare(fa, fb, (x,))
+
+
+def test_energy_profile_indexed_queries():
+    from repro.core.energy import (AnalyticalEnergyModel, subgraph_energy,
+                                   subgraph_time)
+    g = trace(lambda a, b: jnp.tanh(a @ b) + 1.0,
+              jnp.ones((32, 32)), jnp.ones((32, 32)))
+    p = AnalyticalEnergyModel().profile(g)
+    idxs = [0, 1, 1, 2]   # duplicates must count once (set semantics)
+    want_e = sum(o.energy_j for o in p.ops if o.node_idx in set(idxs))
+    want_t = sum(o.time_s for o in p.ops if o.node_idx in set(idxs))
+    assert subgraph_energy(p, idxs) == pytest.approx(want_e)
+    assert subgraph_time(p, idxs) == pytest.approx(want_t)
+    assert subgraph_energy(p, []) == 0.0
+    assert p.total_energy_j == pytest.approx(sum(o.energy_j for o in p.ops))

@@ -7,7 +7,8 @@ equivalence, and genuinely different tensors must not match.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # skips property tests w/o hypothesis
 
 from repro.core.tensor_match import (TensorMatcher, bijective_pairs,
                                      signature, signatures_match)

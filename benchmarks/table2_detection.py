@@ -1,9 +1,13 @@
 """Table 2 analogue: detection + diagnosis over the full case zoo.
 
-For every case: whether Magneton detects the waste, the region-level energy
-difference, end-to-end dE, and the diagnosis kind.  The paper diagnoses
-15/16 known cases (c11 is the documented miss); this harness must reproduce
-that score on the JAX adaptations.
+For every registered case: whether Magneton detects the waste, the
+region-level energy difference, end-to-end dE, and the diagnosis kind.  The
+paper diagnoses 15/16 known cases (c11 is the documented miss); this harness
+must reproduce that score on the JAX adaptations.
+
+Runs on the Session/artifact API: each side is captured once and the
+comparison runs from artifacts, so the per-case wall time now separates
+capture cost from compare cost.
 """
 
 from __future__ import annotations
@@ -11,23 +15,25 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import emit
-from repro.core.diff import DifferentialEnergyDebugger
-from repro.zoo import cases
+from repro.core.session import Session
+from repro.zoo.cases import list_cases
 
 
 def main() -> dict:
-    dbg = DifferentialEnergyDebugger()
+    session = Session()
     detected_known = 0
     total_known = 0
     detected_new = 0
     rows = []
-    for c in cases.CASES:
+    for c in list_cases():
         t0 = time.perf_counter()
         try:
-            rep = dbg.compare(c.inefficient, c.efficient, c.make_args(),
-                              name_a=c.id + "-ineff", name_b=c.id + "-eff",
-                              config_a=c.config_a, config_b=c.config_b,
-                              output_rtol=c.output_rtol)
+            art_a = session.capture(c.inefficient, c.make_args(),
+                                    name=c.id + "-ineff", config=c.config_a)
+            art_b = session.capture(c.efficient, c.make_args(),
+                                    name=c.id + "-eff", config=c.config_b)
+            t_cap = time.perf_counter() - t0
+            rep = session.compare(art_a, art_b, output_rtol=c.output_rtol)
             waste = [f for f in rep.findings
                      if f.classification == "energy_waste"
                      and f.wasteful_side == "A"]
@@ -41,6 +47,7 @@ def main() -> dict:
                              for f in waste), default=0.0)
         except Exception as e:          # pragma: no cover
             det, de, kind, region_de = False, 0.0, f"ERROR:{type(e).__name__}", 0.0
+            t_cap = 0.0
         dt = (time.perf_counter() - t0) * 1e6
         if c.known:
             total_known += 1
@@ -51,7 +58,7 @@ def main() -> dict:
         rows.append((c.id, c.paper_id, c.category, det, de, kind, ok))
         emit(f"table2/{c.id}", dt,
              f"detected={det} dE={de:+.1f}% region_dE={region_de:+.1f}% "
-             f"kind={kind} {ok}")
+             f"kind={kind} capture={t_cap:.2f}s {ok}")
     emit("table2/summary", 0.0,
          f"known {detected_known}/{total_known} detected "
          f"(paper: 15/16); new {detected_new}/4")

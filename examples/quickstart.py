@@ -1,7 +1,9 @@
-"""Quickstart: differential energy debugging in 30 lines.
+"""Quickstart: capture-once differential energy debugging.
 
-Compare two implementations of the same computation; Magneton detects which
-one wastes energy and explains why.
+Capture each candidate implementation once into a content-addressed artifact
+store, then compare the artifacts — re-running the script (or re-comparing
+later, even from another process) hits the store and skips every
+instrumented execution.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +11,8 @@ one wastes energy and explains why.
 import jax
 import jax.numpy as jnp
 
-from repro.core.diff import DifferentialEnergyDebugger
+from repro.core.artifact import ArtifactStore
+from repro.core.session import Session
 
 VOCAB = 8192
 
@@ -32,10 +35,24 @@ def main():
     logits = jax.random.normal(key, (8, 128, VOCAB))
     labels = jax.random.randint(jax.random.key(1), (8, 128), 0, VOCAB)
 
-    debugger = DifferentialEnergyDebugger()
-    report = debugger.compare(
-        cross_entropy_onehot, cross_entropy_gather, (logits, labels),
-        name_a="onehot-CE", name_b="gather-CE")
+    # the per-user default store ($MAGNETON_STORE or ~/.cache/magneton/...):
+    # RE-RUNNING this script hits the store and skips every re-execution
+    store = ArtifactStore()
+    session = Session(store=store)
+
+    # -- capture once: trace + streamed signature capture + energy pricing.
+    #    Each artifact is serializable and content-addressed in the store.
+    art_onehot = session.capture(cross_entropy_onehot, (logits, labels),
+                                 name="onehot-CE")
+    art_gather = session.capture(cross_entropy_gather, (logits, labels),
+                                 name="gather-CE")
+    how = ("loaded from store (cache hit, no instrumented execution)"
+           if art_onehot.meta.get("cache_hit") else "captured fresh")
+    print(f"artifacts {art_onehot.key} / {art_gather.key} {how} "
+          f"-> {store.root}")
+
+    # -- compare runs matching + classification + diagnosis from artifacts
+    report = session.compare(art_onehot, art_gather)
     print(report.render())
 
     waste = [f for f in report.findings if f.classification == "energy_waste"]
@@ -44,6 +61,19 @@ def main():
           f"the one-hot materialization costs "
           f"{report.total_energy_a_j / report.total_energy_b_j:.2f}x "
           "the gather implementation.")
+
+    # -- re-compare entirely from the store: fresh session, cache-hit
+    #    captures (no instrumented execution), identical findings.
+    session2 = Session(store=store)
+    art_onehot2 = session2.capture(cross_entropy_onehot, (logits, labels),
+                                   name="onehot-CE")
+    assert art_onehot2.meta.get("cache_hit"), "expected a store cache hit"
+    art_gather2 = session2.capture(cross_entropy_gather, (logits, labels),
+                                   name="gather-CE")
+    report2 = session2.compare(art_onehot2, art_gather2)
+    assert report2.to_json() == report.to_json(), "store round-trip changed findings"
+    print("--> re-compare from the artifact store reproduced the report "
+          "bit-identically (cache hit, no re-execution).")
 
 
 if __name__ == "__main__":

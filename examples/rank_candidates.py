@@ -1,0 +1,63 @@
+"""N-way ranking: price N candidate implementations with N captures.
+
+Three implementations of the same LayerNorm-style normalization are
+captured once each; ``session.rank`` then builds the full pairwise waste
+matrix from the artifacts — 3 captures + 3 artifact-level compares instead
+of 3 end-to-end differential pipelines (the gap widens quadratically with
+more candidates).
+
+  PYTHONPATH=src python examples/rank_candidates.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.session import Session
+
+
+def ln_nonminor(x, w):
+    """Reduces over the non-minor axis through a transpose round-trip
+    (the c12 / pytorch-76012 waste pattern)."""
+    xt = x.T
+    mu = jnp.mean(xt, axis=0, keepdims=True)
+    var = jnp.mean((xt - mu) ** 2, axis=0, keepdims=True)
+    return ((xt - mu) / jnp.sqrt(var + 1e-5)).T * w
+
+
+def ln_moments(x, w):
+    """Minor-axis reduction via E[x²]−E[x]²: never materializes a centered
+    copy just for the variance."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(x * x, axis=-1, keepdims=True) - mu * mu
+    return (x - mu) / jnp.sqrt(var + 1e-5) * w
+
+
+def ln_centered(x, w):
+    """Minor-axis reduction over an explicitly centered tensor."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * w
+
+
+def main():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2048, 1024)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((1024,)), jnp.float32)
+
+    session = Session()
+    candidates = [ln_nonminor, ln_moments, ln_centered]
+    artifacts = [session.capture(fn, (x, w), name=fn.__name__)
+                 for fn in candidates]
+
+    result = session.rank(artifacts, output_rtol=2e-2)
+    print(result.render())
+    print(f"\n--> best candidate: {result.best}")
+
+    # the same matrix embeds into a regular report for rendering/JSON reuse
+    print()
+    print(result.summary_report().render())
+
+
+if __name__ == "__main__":
+    main()

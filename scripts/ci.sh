@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + CLI smoke + overhead benchmark.
+#
+#   scripts/ci.sh          # tier-1 (fast) tests + CLI smoke
+#   scripts/ci.sh --full   # also the slow zoo cases and the overhead bench
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+FULL=0
+[[ "${1:-}" == "--full" ]] && FULL=1
+
+echo "== tier-1 tests =="
+if [[ "$FULL" == 1 ]]; then
+    python -m pytest -x -q
+else
+    python -m pytest -x -q -m "not slow"
+fi
+
+echo "== CLI smoke =="
+STORE="$(mktemp -d)"
+trap 'rm -rf "$STORE"' EXIT
+export MAGNETON_STORE="$STORE"
+python -m repro.cli cases > /dev/null
+python -m repro.cli capture c6-matpow:ineff c6-matpow:eff
+python -m repro.cli compare c6-matpow:ineff c6-matpow:eff \
+    --json "$STORE/rep.json" --expect-waste > /dev/null
+# compare by bare artifact key (zoo provenance re-attach path)
+mapfile -t KEYS < <(cd "$STORE" && ls ./*.npz | sed 's|^\./||; s|\.npz$||')
+python -m repro.cli compare "${KEYS[0]}" "${KEYS[1]}" \
+    --output-rtol 0.05 > /dev/null
+python -m repro.cli report "$STORE/rep.json" > /dev/null
+python -m repro.cli rank c6-matpow:ineff c6-matpow:eff \
+    --json "$STORE/rank.json" > /dev/null
+python -m repro.cli report "$STORE/rank.json" > /dev/null
+python -m repro.cli artifacts > /dev/null
+echo "CLI smoke OK"
+
+if [[ "$FULL" == 1 ]]; then
+    echo "== overhead benchmark (BENCH_overhead.json) =="
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/fig10_overhead.py
+fi
+
+echo "CI OK"

@@ -1,0 +1,253 @@
+"""Magneton command-line interface.
+
+Drives the Session/artifact API (core/session.py) from the shell::
+
+  python -m repro.cli cases                         # list the case zoo
+  python -m repro.cli capture c6-matpow:ineff       # capture one candidate
+  python -m repro.cli compare c6-matpow:ineff c6-matpow:eff --json out.json
+  python -m repro.cli rank c6-matpow:ineff c6-matpow:eff [SPEC ...]
+  python -m repro.cli report out.json               # re-render stored JSON
+  python -m repro.cli artifacts                     # list the store
+
+Candidate SPECs are either zoo references ``<case-id>:<ineff|eff>``
+(resolved through the registry in zoo/cases.py and captured on the case's
+canonical inputs — repeated invocations hit the content-addressed store and
+skip re-execution) or artifact keys / ``.npz`` paths produced by an earlier
+``capture``.  The store root comes from ``--store``, ``$MAGNETON_STORE``, or
+``~/.cache/magneton/artifacts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+from repro.core.artifact import (ArtifactStore, ArtifactValueError,
+                                 CandidateArtifact)
+from repro.core.energy import backend_from_name
+from repro.core.report import Report
+from repro.core.session import RankResult, Session
+from repro.zoo import cases as zoo
+
+_SIDES = {"ineff": "inefficient", "inefficient": "inefficient",
+          "a": "inefficient",
+          "eff": "efficient", "efficient": "efficient", "b": "efficient"}
+
+
+@dataclasses.dataclass
+class _Resolved:
+    artifact: CandidateArtifact
+    output_rtol: float = 1e-2
+    in_store: bool = True
+
+
+def _maybe_attach_zoo(art: CandidateArtifact, session: Session
+                      ) -> CandidateArtifact:
+    """Re-attach a zoo-born loaded artifact to its case function so lazy
+    phase-2 value fetches work (compare-by-key after a bare `capture`).
+
+    Only when the session's backend matches the artifact's recorded one:
+    re-capturing under a different backend would both ignore the stored
+    pricing and pollute the store with a mismatched artifact.
+    """
+    case_id = art.meta.get("zoo_case")
+    side = art.meta.get("zoo_side")
+    if (art.is_live or not case_id or side not in _SIDES
+            or session.backend.id != art.backend_id):
+        return art
+    try:
+        case = zoo.get_case(case_id)
+    except KeyError:
+        return art
+    fn = getattr(case, _SIDES[side])
+    fresh = session.capture(fn, case.make_args(), name=art.name,
+                            config=art.config,
+                            sample_seeds=art.sample_seeds,
+                            extra_meta={"zoo_case": case_id,
+                                        "zoo_side": side})
+    return fresh if fresh.key == art.key else art
+
+
+def _resolve_spec(spec: str, session: Session) -> _Resolved:
+    """Resolve a candidate SPEC to an artifact (capturing zoo cases)."""
+    if ":" in spec and not spec.endswith(".npz"):
+        case_id, _, side = spec.rpartition(":")
+        if side not in _SIDES:
+            raise SystemExit(
+                f"bad spec {spec!r}: side must be one of {sorted(_SIDES)}")
+        try:
+            case = zoo.get_case(case_id)
+        except KeyError as e:
+            raise SystemExit(f"error: {e.args[0]}") from None
+        fn = getattr(case, _SIDES[side])
+        config = case.config_a if _SIDES[side] == "inefficient" else case.config_b
+        art = session.capture(fn, case.make_args(),
+                              name=f"{case.id}-{side}", config=config,
+                              extra_meta={"zoo_case": case.id,
+                                          "zoo_side": side})
+        return _Resolved(art, output_rtol=case.output_rtol)
+    if spec.endswith(".npz"):
+        art = CandidateArtifact.load(Path(spec))
+        return _Resolved(_maybe_attach_zoo(art, session), in_store=False)
+    if session.store is not None and session.store.has(spec):
+        art = session.store.load(spec)
+        return _Resolved(_maybe_attach_zoo(art, session))
+    raise SystemExit(
+        f"cannot resolve {spec!r}: not a '<case>:<side>' zoo reference, "
+        "an .npz path, or a key in the artifact store "
+        f"({session.store.root if session.store else 'no store'})")
+
+
+def _make_session(args) -> Session:
+    return Session(backend=backend_from_name(args.backend),
+                   store=ArtifactStore(args.store) if args.store
+                   else ArtifactStore(),
+                   num_input_samples=args.samples)
+
+
+def _add_common(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--store", default=None,
+                   help="artifact store root (default: $MAGNETON_STORE or "
+                        "~/.cache/magneton/artifacts)")
+    p.add_argument("--backend", default="analytic",
+                   choices=("analytic", "replay", "hlo"))
+    p.add_argument("--samples", type=int, default=2,
+                   help="input samples per capture (Hypothesis 1 probes)")
+
+
+def cmd_cases(args) -> int:
+    listed = zoo.list_cases(category=args.category,
+                            known=True if args.known else None)
+    for c in listed:
+        print(f"{c.id:24} {c.paper_id:16} {c.category:18} "
+              f"{'known' if c.known else 'new':5}  {c.description}")
+    print(f"{len(listed)} cases")
+    return 0
+
+
+def cmd_capture(args) -> int:
+    session = _make_session(args)
+    for spec in args.spec:
+        res = _resolve_spec(spec, session)
+        art = res.artifact
+        hit = "cache-hit" if art.meta.get("cache_hit") else "captured"
+        where = (session.store.path_for(art.key)
+                 if res.in_store and session.store.has(art.key) else spec)
+        print(f"{hit} {art.name}: key={art.key} nodes={len(art.graph.nodes)} "
+              f"samples={art.num_samples} "
+              f"energy={art.profile.total_energy_j:.4e} J -> {where}")
+    return 0
+
+
+def cmd_compare(args) -> int:
+    session = _make_session(args)
+    ra = _resolve_spec(args.spec_a, session)
+    rb = _resolve_spec(args.spec_b, session)
+    rtol = (args.output_rtol if args.output_rtol is not None
+            else max(ra.output_rtol, rb.output_rtol))
+    report = session.compare(ra.artifact, rb.artifact, output_rtol=rtol)
+    print(report.render())
+    if args.json:
+        Path(args.json).write_text(report.to_json())
+        print(f"wrote {args.json}")
+    return 0 if not args.expect_waste or report.waste_findings else 1
+
+
+def cmd_rank(args) -> int:
+    session = _make_session(args)
+    resolved = [_resolve_spec(s, session) for s in args.spec]
+    if len(resolved) < 2:
+        raise SystemExit("rank needs at least two candidate SPECs")
+    rtol = (args.output_rtol if args.output_rtol is not None
+            else max(r.output_rtol for r in resolved))
+    result = session.rank([r.artifact for r in resolved], output_rtol=rtol)
+    print(result.render())
+    if args.json:
+        Path(args.json).write_text(result.to_json())
+        print(f"wrote {args.json}")
+    return 0
+
+
+def cmd_report(args) -> int:
+    data = json.loads(Path(args.path).read_text())
+    if data.get("kind") == "rank":
+        print(RankResult.from_json(data).render())
+    else:
+        print(Report.from_json(data).render(max_findings=args.max_findings))
+    return 0
+
+
+def cmd_artifacts(args) -> int:
+    store = ArtifactStore(args.store) if args.store else ArtifactStore()
+    entries = store.entries()
+    for e in entries:
+        print(f"{e['key']:22} {e['name']:28} backend={e['backend']:12} "
+              f"nodes={e['nodes']:5} samples={e['samples']} "
+              f"values={e['cached_values']:4} {e['bytes'] / 1024:.1f} KiB")
+    print(f"{len(entries)} artifacts in {store.root}")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.cli",
+        description="Magneton differential energy debugging CLI")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pc = sub.add_parser("cases", help="list the energy-waste case zoo")
+    pc.add_argument("--category", default=None)
+    pc.add_argument("--known", action="store_true",
+                    help="only Table-1 (known) cases")
+    pc.set_defaults(fn=cmd_cases)
+
+    pcap = sub.add_parser("capture",
+                          help="capture candidate artifacts into the store")
+    pcap.add_argument("spec", nargs="+", metavar="SPEC")
+    _add_common(pcap)
+    pcap.set_defaults(fn=cmd_capture)
+
+    pcm = sub.add_parser("compare", help="compare two candidate artifacts")
+    pcm.add_argument("spec_a", metavar="SPEC_A")
+    pcm.add_argument("spec_b", metavar="SPEC_B")
+    pcm.add_argument("--json", default=None, help="also write Report JSON")
+    pcm.add_argument("--output-rtol", type=float, default=None)
+    pcm.add_argument("--expect-waste", action="store_true",
+                     help="exit 1 if no energy-waste region is found")
+    _add_common(pcm)
+    pcm.set_defaults(fn=cmd_compare)
+
+    pr = sub.add_parser("rank", help="N-way differential ranking")
+    pr.add_argument("spec", nargs="+", metavar="SPEC")
+    pr.add_argument("--json", default=None, help="also write RankResult JSON")
+    pr.add_argument("--output-rtol", type=float, default=None)
+    _add_common(pr)
+    pr.set_defaults(fn=cmd_rank)
+
+    prp = sub.add_parser("report",
+                         help="re-render a stored compare/rank JSON")
+    prp.add_argument("path")
+    prp.add_argument("--max-findings", type=int, default=10)
+    prp.set_defaults(fn=cmd_report)
+
+    pa = sub.add_parser("artifacts", help="list the artifact store")
+    pa.add_argument("--store", default=None)
+    pa.set_defaults(fn=cmd_artifacts)
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except BrokenPipeError:      # e.g. `... | head` closed stdout
+        return 0
+    except ArtifactValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,33 @@
 """Magneton core: differential energy debugging for JAX programs."""
 
+from repro.core.artifact import (ArtifactStore, ArtifactValueError,
+                                 CandidateArtifact, artifact_key)
 from repro.core.diff import DifferentialEnergyDebugger
-from repro.core.energy import AnalyticalEnergyModel, EnergyProfile, ReplayProfiler
+from repro.core.energy import (AnalyticalBackend, AnalyticalEnergyModel,
+                               EnergyBackend, EnergyProfile, HloCostBackend,
+                               ReplayBackend, ReplayProfiler,
+                               backend_from_name)
 from repro.core.graph import OpGraph, extract_graph, trace
-from repro.core.report import Finding, Report
+from repro.core.report import Finding, Report, render_rank_matrix
 from repro.core.interp import capture_tensor_stats, capture_tensor_values
+from repro.core.session import RankResult, Session
 from repro.core.subgraph_match import MatchedRegion, match_subgraphs
 from repro.core.tensor_match import (MatchStats, TensorMatcher, signature,
                                      signatures_match, stats_signature)
 
 __all__ = [
     "DifferentialEnergyDebugger",
+    "Session",
+    "RankResult",
+    "CandidateArtifact",
+    "ArtifactStore",
+    "ArtifactValueError",
+    "artifact_key",
+    "EnergyBackend",
+    "AnalyticalBackend",
+    "ReplayBackend",
+    "HloCostBackend",
+    "backend_from_name",
     "AnalyticalEnergyModel",
     "ReplayProfiler",
     "EnergyProfile",
@@ -19,6 +36,7 @@ __all__ = [
     "trace",
     "Finding",
     "Report",
+    "render_rank_matrix",
     "MatchedRegion",
     "match_subgraphs",
     "TensorMatcher",

@@ -1,0 +1,417 @@
+"""Capture-once candidate artifacts and their content-addressed store.
+
+A :class:`CandidateArtifact` is the persistent product of one
+``Session.capture`` run (the paper's capture→match→price pipeline decomposed,
+MLPerf-Power-style, into standardized measurement artifacts): the operator
+graph, per-sample streamed tensor invariants, the sample-0 outputs (the
+functional-equivalence gate's evidence), the energy profile, and provenance
+metadata.  ``Session.compare`` / ``Session.rank`` run matching +
+classification + diagnosis *from artifacts only* — comparing N candidates
+costs N captures, not N² end-to-end pipelines.
+
+Artifacts round-trip through :class:`ArtifactStore`, a content-addressed
+on-disk store keyed by ``sha256(jaxpr ‖ input shapes/dtypes ‖ sample seeds ‖
+backend id)``; re-capturing an identical (function, inputs, seeds, backend)
+combination is a cache hit that skips every instrumented execution.
+
+Lazy phase-2 values: the streaming matcher re-captures concrete tensor
+values only for pairs surviving the cheap invariant gate.  A *live* artifact
+(fresh capture, or cache hit re-attached to its traced jaxpr) serves those
+fetches by selective re-execution; every fetched value is memoized on the
+artifact and persisted on save, so artifacts *loaded* from the store can
+re-run past comparisons offline — entirely from disk, bit-identically.  A
+loaded artifact asked for a value it has never materialized raises
+:class:`ArtifactValueError` (re-attach the callable via ``Session.capture``
+or ``CandidateArtifact.attach`` to extend it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.energy import EnergyProfile, OpEnergy
+from repro.core.graph import OpGraph, OpNode, TensorEdge
+from repro.core.tensor_match import TensorSignature
+
+ARTIFACT_FORMAT_VERSION = 1
+
+_STORE_ENV = "MAGNETON_STORE"
+_DEFAULT_STORE = "~/.cache/magneton/artifacts"
+
+
+class ArtifactValueError(RuntimeError):
+    """A loaded artifact was asked for tensor values it never materialized."""
+
+
+class _ReprStr(str):
+    """A string whose repr() is itself.
+
+    Jaxpr equation params survive serialization only as their repr strings.
+    Diagnosis (core/diagnose.py) compares params via ``repr(...)``; wrapping
+    loaded params in _ReprStr makes a loaded artifact's param reprs compare
+    equal to a live artifact's, so mixed live/loaded comparisons diagnose
+    identically to live/live ones.
+    """
+
+    def __repr__(self) -> str:  # noqa: D105
+        return str.__str__(self)
+
+
+def _param_payload(params: Mapping[str, Any]) -> dict[str, str]:
+    from repro.core.diagnose import _param_repr
+    return {k: _param_repr(v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# cache keys
+# ---------------------------------------------------------------------------
+
+def artifact_key(graph: OpGraph, args: Sequence[Any],
+                 sample_seeds: Sequence[int], backend_id: str) -> str:
+    """Content address of one capture: jaxpr ‖ inputs ‖ seeds ‖ backend.
+
+    The jaxpr pretty-print is deterministic for a given trace, so two
+    processes capturing the same function on the same inputs agree on the
+    key.  Input *values* (not just shapes/dtypes) are part of the address:
+    the captured outputs and per-sample invariants depend on them, so
+    same-shaped captures on different data must never alias in the store.
+    """
+    import jax
+
+    def hash_arr(leaf) -> None:
+        try:
+            arr = np.asarray(leaf)
+        except Exception:
+            arr = None
+        if arr is None or arr.dtype == object:   # non-numeric const
+            h.update(repr(leaf).encode())
+            return
+        h.update(f"{arr.shape}:{arr.dtype}".encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+
+    h = hashlib.sha256()
+    h.update(f"v{ARTIFACT_FORMAT_VERSION}".encode())
+    h.update(str(graph.closed_jaxpr).encode())
+    # str(jaxpr) prints constvars by NAME only — closed-over constant VALUES
+    # (e.g. model weights captured by a lambda) must be hashed explicitly or
+    # two models with identical architecture would alias in the store.
+    for const in graph.closed_jaxpr.consts:
+        hash_arr(const)
+    for leaf in jax.tree_util.tree_leaves(tuple(args)):
+        hash_arr(leaf)
+    h.update(f"seeds={tuple(int(s) for s in sample_seeds)}".encode())
+    h.update(backend_id.encode())
+    return h.hexdigest()[:20]
+
+
+# ---------------------------------------------------------------------------
+# (de)serialization helpers
+# ---------------------------------------------------------------------------
+
+def _graph_payload(g: OpGraph) -> dict[str, Any]:
+    return {
+        "name": g.name,
+        "nodes": [{
+            "idx": n.idx, "primitive": n.primitive,
+            "params": _param_payload(n.params),
+            "invars": list(n.invars), "outvars": list(n.outvars),
+            "call_path": list(n.call_path), "scope": list(n.scope),
+        } for n in g.nodes],
+        "tensors": [{
+            "tid": t.tid, "shape": list(t.shape), "dtype": t.dtype,
+            "producer": t.producer, "consumers": list(t.consumers),
+            "is_input": t.is_input, "is_output": t.is_output,
+            "is_const": t.is_const,
+        } for t in g.tensors.values()],
+        "inputs": list(g.inputs),
+        "outputs": list(g.outputs),
+    }
+
+
+def _graph_from_payload(d: Mapping[str, Any]) -> OpGraph:
+    nodes = [OpNode(idx=n["idx"], primitive=n["primitive"],
+                    params={k: _ReprStr(v) for k, v in n["params"].items()},
+                    invars=list(n["invars"]), outvars=list(n["outvars"]),
+                    call_path=tuple(n["call_path"]), scope=tuple(n["scope"]))
+             for n in d["nodes"]]
+    tensors = {t["tid"]: TensorEdge(
+        tid=t["tid"], shape=tuple(t["shape"]), dtype=t["dtype"],
+        producer=t["producer"], consumers=list(t["consumers"]),
+        is_input=t["is_input"], is_output=t["is_output"],
+        is_const=t["is_const"]) for t in d["tensors"]}
+    return OpGraph(name=d["name"], nodes=nodes, tensors=tensors,
+                   inputs=list(d["inputs"]), outputs=list(d["outputs"]),
+                   closed_jaxpr=None)
+
+
+def _stats_payload(stats: Sequence[Mapping[int, TensorSignature]]
+                   ) -> list[list[list[Any]]]:
+    out = []
+    for table in stats:
+        rows = []
+        for tid in sorted(table):
+            s = table[tid]
+            rows.append([tid, s.numel, s.dtype, s.l1, s.l2, s.mean,
+                         s.amax, s.amin,
+                         list(s.shape) if s.shape is not None else None])
+        out.append(rows)
+    return out
+
+
+def _stats_from_payload(payload: Sequence[Sequence[Sequence[Any]]]
+                        ) -> list[dict[int, TensorSignature]]:
+    out: list[dict[int, TensorSignature]] = []
+    for rows in payload:
+        table: dict[int, TensorSignature] = {}
+        for tid, numel, dtype, l1, l2, mean, amax, amin, shape in rows:
+            table[tid] = TensorSignature(
+                numel=numel, dtype=dtype, l1=l1, l2=l2, mean=mean,
+                amax=amax, amin=amin, spectra=None,
+                shape=tuple(shape) if shape is not None else None)
+        out.append(table)
+    return out
+
+
+def _profile_payload(p: EnergyProfile) -> dict[str, Any]:
+    return {"graph_name": p.graph_name,
+            "ops": [[o.node_idx, o.primitive, o.energy_j, o.time_s, o.flops,
+                     o.hbm_bytes, o.ici_bytes, o.bound] for o in p.ops]}
+
+
+def _profile_from_payload(d: Mapping[str, Any]) -> EnergyProfile:
+    ops = [OpEnergy(node_idx=r[0], primitive=r[1], energy_j=r[2], time_s=r[3],
+                    flops=r[4], hbm_bytes=r[5], ici_bytes=r[6], bound=r[7])
+           for r in d["ops"]]
+    return EnergyProfile(graph_name=d["graph_name"], ops=ops)
+
+
+def _array_buffer(arr: np.ndarray) -> np.ndarray:
+    """Raw little-endian-agnostic byte view (handles ml_dtypes like bf16 that
+    np.save cannot describe without pickling)."""
+    return np.frombuffer(np.ascontiguousarray(arr).tobytes(), dtype=np.uint8)
+
+
+def _array_from_buffer(buf: np.ndarray, dtype: str,
+                       shape: Sequence[int]) -> np.ndarray:
+    return np.frombuffer(buf.tobytes(), dtype=np.dtype(dtype)).reshape(
+        tuple(shape))
+
+
+# ---------------------------------------------------------------------------
+# the artifact
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CandidateArtifact:
+    """One captured candidate implementation, comparable after the fact."""
+
+    name: str
+    key: str
+    graph: OpGraph
+    sample_stats: list[dict[int, TensorSignature]]
+    outputs: list[np.ndarray]            # flat sample-0 output leaves
+    profile: EnergyProfile
+    backend_id: str
+    backend_label: str
+    sample_seeds: tuple[int, ...]        # perturbation seeds for samples 1..n-1
+    config: dict[str, Any] | None = None
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # phase-2 value memo, persisted on save: (sample_idx, tid) -> value
+    values: dict[tuple[int, int], np.ndarray] = dataclasses.field(
+        default_factory=dict, repr=False)
+    # runtime-only: concrete input samples for selective re-execution
+    _samples: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _dirty: bool = dataclasses.field(default=False, repr=False, compare=False)
+
+    @property
+    def num_samples(self) -> int:
+        return len(self.sample_stats)
+
+    @property
+    def is_live(self) -> bool:
+        """Whether phase-2 values can still be fetched by re-execution."""
+        return (self.graph.closed_jaxpr is not None
+                and self._samples is not None)
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.profile.total_energy_j
+
+    def attach(self, graph: OpGraph, args: Sequence[Any]) -> None:
+        """Re-attach a freshly traced graph + capture inputs to a loaded
+        artifact so lazy phase-2 fetches can execute again (cache-hit path)."""
+        if graph.closed_jaxpr is None:
+            raise ValueError("attach() needs a graph with a ClosedJaxpr")
+        if len(graph.nodes) != len(self.graph.nodes):
+            raise ValueError(
+                f"attach(): graph has {len(graph.nodes)} nodes, artifact "
+                f"recorded {len(self.graph.nodes)}; not the same program")
+        from repro.core.session import make_samples
+        self.graph = graph
+        self._samples = make_samples(tuple(args), self.sample_seeds)
+
+    def fetcher(self) -> Callable[[int, Sequence[int]], dict[int, np.ndarray]]:
+        """``fetch(sample_idx, tids)`` for the lazy two-phase matcher.
+
+        Serves memoized values first; misses trigger one selective
+        re-execution (live artifacts only) and are memoized + marked dirty so
+        the store can persist them for offline re-comparison.
+        """
+        def fetch(k: int, tids: Sequence[int]) -> dict[int, np.ndarray]:
+            out: dict[int, np.ndarray] = {}
+            missing = [t for t in tids if (k, t) not in self.values]
+            for t in tids:
+                if (k, t) in self.values:
+                    out[t] = self.values[(k, t)]
+            if missing:
+                if not self.is_live:
+                    raise ArtifactValueError(
+                        f"artifact {self.name!r} ({self.key}) has no stored "
+                        f"values for tensors {sorted(missing)[:8]} on sample "
+                        f"{k} and no attached program to re-execute; "
+                        "re-capture via Session.capture (cache hit "
+                        "re-attaches) or call CandidateArtifact.attach")
+                from repro.core import interp
+                got = interp.capture_tensor_values(
+                    self.graph, *self._samples[k], only_tids=missing)
+                for t in missing:
+                    v = np.asarray(got[t])
+                    self.values[(k, t)] = v
+                    out[t] = v
+                self._dirty = True
+            return out
+        return fetch
+
+    # -- serialization ------------------------------------------------------
+    def save(self, path: str | Path) -> Path:
+        path = Path(path)
+        meta = {
+            "format_version": ARTIFACT_FORMAT_VERSION,
+            "name": self.name,
+            "key": self.key,
+            "backend_id": self.backend_id,
+            "backend_label": self.backend_label,
+            "sample_seeds": list(self.sample_seeds),
+            "config": self.config,
+            "meta": self.meta,
+            "graph": _graph_payload(self.graph),
+            "stats": _stats_payload(self.sample_stats),
+            "profile": _profile_payload(self.profile),
+            "outputs": [{"dtype": str(o.dtype), "shape": list(o.shape)}
+                        for o in self.outputs],
+            "values": [{"k": k, "tid": t, "dtype": str(v.dtype),
+                        "shape": list(v.shape)}
+                       for (k, t), v in sorted(self.values.items())],
+        }
+        arrays: dict[str, np.ndarray] = {
+            "meta": np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)}
+        for i, o in enumerate(self.outputs):
+            arrays[f"o{i}"] = _array_buffer(o)
+        for (k, t), v in self.values.items():
+            arrays[f"v{k}_{t}"] = _array_buffer(v)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".npz.tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self._dirty = False
+        return path
+
+    @classmethod
+    def load(cls, path: str | Path) -> "CandidateArtifact":
+        with np.load(Path(path), allow_pickle=False) as z:
+            meta = json.loads(z["meta"].tobytes().decode())
+            if meta["format_version"] != ARTIFACT_FORMAT_VERSION:
+                raise ValueError(
+                    f"artifact {path} has format v{meta['format_version']}, "
+                    f"this build reads v{ARTIFACT_FORMAT_VERSION}")
+            outputs = [_array_from_buffer(z[f"o{i}"], d["dtype"], d["shape"])
+                       for i, d in enumerate(meta["outputs"])]
+            values = {(d["k"], d["tid"]): _array_from_buffer(
+                z[f"v{d['k']}_{d['tid']}"], d["dtype"], d["shape"])
+                for d in meta["values"]}
+        return cls(
+            name=meta["name"], key=meta["key"],
+            graph=_graph_from_payload(meta["graph"]),
+            sample_stats=_stats_from_payload(meta["stats"]),
+            outputs=outputs,
+            profile=_profile_from_payload(meta["profile"]),
+            backend_id=meta["backend_id"],
+            backend_label=meta["backend_label"],
+            sample_seeds=tuple(meta["sample_seeds"]),
+            config=meta["config"], meta=meta["meta"], values=values)
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+class ArtifactStore:
+    """Content-addressed on-disk artifact store (one ``<key>.npz`` per
+    capture).  The root defaults to ``$MAGNETON_STORE`` or
+    ``~/.cache/magneton/artifacts``."""
+
+    def __init__(self, root: str | Path | None = None):
+        if root is None:
+            root = os.environ.get(_STORE_ENV, _DEFAULT_STORE)
+        self.root = Path(root).expanduser()
+
+    def path_for(self, key: str) -> Path:
+        return self.root / f"{key}.npz"
+
+    def has(self, key: str) -> bool:
+        return self.path_for(key).exists()
+
+    def save(self, artifact: CandidateArtifact) -> Path:
+        return artifact.save(self.path_for(artifact.key))
+
+    def load(self, key: str) -> CandidateArtifact:
+        path = self.path_for(key)
+        if not path.exists():
+            raise KeyError(f"no artifact {key!r} in store {self.root}")
+        return CandidateArtifact.load(path)
+
+    def keys(self) -> list[str]:
+        if not self.root.exists():
+            return []
+        return sorted(p.stem for p in self.root.glob("*.npz"))
+
+    def delete(self, key: str) -> None:
+        self.path_for(key).unlink(missing_ok=True)
+
+    def entries(self) -> list[dict[str, Any]]:
+        """Lightweight listing (name/key/backend/size) without full loads."""
+        out = []
+        for key in self.keys():
+            path = self.path_for(key)
+            try:
+                size = path.stat().st_size
+            except OSError:                  # deleted since keys() globbed
+                continue
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    meta = json.loads(z["meta"].tobytes().decode())
+                out.append({"key": key, "name": meta["name"],
+                            "backend": meta["backend_label"],
+                            "nodes": len(meta["graph"]["nodes"]),
+                            "samples": len(meta["stats"]),
+                            "cached_values": len(meta["values"]),
+                            "bytes": size})
+            except Exception as e:           # corrupt entry: list, don't die
+                out.append({"key": key, "name": f"<unreadable: {e}>",
+                            "backend": "?", "nodes": 0, "samples": 0,
+                            "cached_values": 0, "bytes": size})
+        return out

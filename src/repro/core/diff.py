@@ -1,22 +1,30 @@
-"""DifferentialEnergyDebugger — the end-to-end Magneton pipeline.
+"""DifferentialEnergyDebugger — legacy one-shot facade over the Session API.
 
-Given two callables implementing the same task and identical example inputs:
+Historically this module WAS the end-to-end Magneton pipeline; PR 2 moved
+the pipeline into ``core/session.py`` (capture-once artifacts, pluggable
+energy backends, N-way ranking) and left this class as a thin compatibility
+wrapper: ``compare(fn_a, fn_b, args)`` captures both sides into an
+in-memory (store-less) session and compares the two artifacts, reproducing
+the historical behavior and report bytes exactly.
+
+Pipeline (now in session.py):
   1. trace both to operator graphs (graph.py),
   2. STREAM-capture per-tensor signatures on n input samples (interp.py):
-     one instrumented execution per side per sample reduces every
-     intermediate tensor to its cheap symmetric invariants and discards the
-     values — the sample-0 execution's outputs double as the functional
-     equivalence gate, so neither side is ever executed just for the gate,
+     the sample-0 execution's outputs double as the functional equivalence
+     gate, so neither side is ever executed just for the gate,
   3. match semantically equivalent tensors (tensor_match.py, Hypothesis 1)
-     with the lazy two-phase matcher: values are re-captured selectively
-     only for pairs that survive the cheap gate,
+     with the lazy two-phase matcher,
   4. match semantically equivalent subgraphs (subgraph_match.py, Algorithm 1),
-  5. price every region with the energy model (energy.py),
+  5. price every region with the selected energy backend (energy.py),
   6. detect: regions whose energy differs by more than ``energy_threshold``
      while performance stays within ``perf_tolerance`` are software energy
-     waste (paper §6.1: 10% energy threshold, 1% perf tolerance); regions
-     where the cheaper side is also slower are performance-energy trade-offs,
+     waste (paper §6.1: 10% energy threshold, 1% perf tolerance),
   7. diagnose each waste region (diagnose.py, Algorithm 2).
+
+Energy backends: prefer constructing a :class:`~repro.core.session.Session`
+with an explicit ``EnergyBackend`` (``AnalyticalBackend(spec)``,
+``ReplayBackend()``, ``HloCostBackend(spec)``); the ``use_replay`` flag here
+survives only for legacy callers and maps onto ``ReplayBackend()``.
 """
 
 from __future__ import annotations
@@ -24,70 +32,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Mapping, Sequence
 
-import jax
-import numpy as np
-
-from repro.core.diagnose import diagnose_region
-from repro.core.energy import (AnalyticalEnergyModel, EnergyProfile,
-                               ReplayProfiler, subgraph_energy, subgraph_time)
-from repro.core.graph import OpGraph, trace
-from repro.core.interp import capture_tensor_stats, capture_tensor_values
-from repro.core.report import Finding, Report
-from repro.core.subgraph_match import MatchedRegion, match_subgraphs
-from repro.core.tensor_match import TensorMatcher
+from repro.core.energy import (AnalyticalBackend, EnergyBackend,
+                               ReplayBackend)
+from repro.core.report import Report
+# Re-exported for back-compat: these helpers lived here before the Session
+# refactor and are imported by tests/benchmarks.
+from repro.core.session import (Session, _check_same_task,  # noqa: F401
+                                _perturb)
 from repro.hw.specs import TPU_V5E, HardwareSpec
-
-
-def _perturb(args, seed: int):
-    """Fresh input sample with the same pytree structure/shapes/dtypes."""
-    rng = np.random.default_rng(seed)
-
-    def one(x):
-        x = np.asarray(x)
-        if x.dtype.kind in "f":
-            return (rng.standard_normal(x.shape) * (np.std(x) + 0.1)
-                    + np.mean(x)).astype(x.dtype)
-        if x.dtype.kind in "iu":
-            lo, hi = int(x.min()), int(x.max()) + 1
-            return rng.integers(lo, max(hi, lo + 1), size=x.shape).astype(x.dtype)
-        return x
-    return jax.tree_util.tree_map(one, args)
-
-
-def _max_abs(x: np.ndarray) -> float:
-    """max|x| as a float; 0.0 for zero-size leaves (np.max would raise)."""
-    return float(np.max(np.abs(x))) if x.size else 0.0
-
-
-def _check_same_task(out_a, out_b, output_rtol: float) -> None:
-    """Functional-equivalence gate (paper: <=1% element-wise rel. difference).
-
-    Handles scalar and zero-size output leaves; the max-norm relative
-    difference measures elementwise |a-b| against the magnitude of the
-    outputs, so near-zero elements don't produce spurious "different task"
-    verdicts.
-    """
-    leaves_a = jax.tree_util.tree_leaves(out_a)
-    leaves_b = jax.tree_util.tree_leaves(out_b)
-    if len(leaves_a) != len(leaves_b):
-        raise ValueError(
-            f"implementations disagree in output structure "
-            f"({len(leaves_a)} vs {len(leaves_b)} leaves); not the same task")
-    for xa, xb in zip(leaves_a, leaves_b):
-        xa64 = np.asarray(xa, dtype=np.float64)
-        xb64 = np.asarray(xb, dtype=np.float64)
-        if xa64.shape != xb64.shape:
-            raise ValueError(
-                f"implementations disagree in output shapes "
-                f"({xa64.shape} vs {xb64.shape}); not the same task")
-        if xa64.size == 0:
-            continue
-        scale = max(_max_abs(xa64), _max_abs(xb64), 1e-6)
-        rel = _max_abs(xa64 - xb64) / scale
-        if rel > output_rtol:
-            raise ValueError(
-                f"implementations disagree (max rel diff {rel:.3e} > "
-                f"{output_rtol}); not the same task")
 
 
 @dataclasses.dataclass
@@ -97,98 +49,37 @@ class DifferentialEnergyDebugger:
     match_rtol: float = 1e-3
     num_input_samples: int = 2           # Hypothesis 1: "across all model inputs"
     spec: HardwareSpec = TPU_V5E
-    use_replay: bool = False             # measure real host wall time instead
+    use_replay: bool = False             # legacy alias for ReplayBackend()
+    backend: EnergyBackend | None = None  # explicit backend wins over use_replay
+    sample_seeds: tuple[int, ...] | None = None   # perturbation seeds, recorded
+
+    def _session(self) -> Session:
+        backend = self.backend
+        if backend is None:
+            backend = (ReplayBackend() if self.use_replay
+                       else AnalyticalBackend(self.spec))
+        return Session(backend=backend, store=None,
+                       energy_threshold=self.energy_threshold,
+                       perf_tolerance=self.perf_tolerance,
+                       match_rtol=self.match_rtol,
+                       num_input_samples=self.num_input_samples)
 
     def compare(self, fn_a: Callable, fn_b: Callable, args: Sequence[Any],
                 *, name_a: str = "A", name_b: str = "B",
                 config_a: Mapping[str, Any] | None = None,
                 config_b: Mapping[str, Any] | None = None,
                 output_rtol: float = 1e-2) -> Report:
-        args = tuple(args)
-        graph_a = trace(fn_a, *args, name=name_a)
-        graph_b = trace(fn_b, *args, name=name_b)
+        """One-shot comparison: capture both sides, compare the artifacts.
 
-        # -- multi-sample STREAMING signature capture.  The sample-0
-        #    executions also produce each side's outputs, which feed the
-        #    functional equivalence gate below — no separate full execution
-        #    of either side just to compare outputs.
-        samples = [args] + [_perturb(args, seed=17 + k)
-                            for k in range(self.num_input_samples - 1)]
-        outs_a, st_a0 = capture_tensor_stats(graph_a, *samples[0])
-        outs_b, st_b0 = capture_tensor_stats(graph_b, *samples[0])
-
-        # -- functional equivalence gate (the two sides must do the same task;
-        #    paper enforces <=1% element-wise relative output difference).
-        #    Gate BEFORE capturing further samples so a mismatch fails fast.
-        _check_same_task(outs_a, outs_b, output_rtol)
-
-        stats_a, stats_b = [st_a0], [st_b0]
-        for s in samples[1:]:
-            stats_a.append(capture_tensor_stats(graph_a, *s)[1])
-            stats_b.append(capture_tensor_stats(graph_b, *s)[1])
-
-        # -- lazy two-phase tensor matching: values are re-captured
-        #    selectively, only for tensors whose pairs survive the cheap gate
-        matcher = TensorMatcher(rtol=self.match_rtol)
-
-        def fetch(graph):
-            return lambda k, tids: capture_tensor_values(
-                graph, *samples[k], only_tids=tids)
-
-        eq_pairs = matcher.match_streamed(stats_a, stats_b,
-                                          fetch(graph_a), fetch(graph_b))
-        regions = match_subgraphs(graph_a, graph_b, eq_pairs)
-
-        # -- energy profiles
-        if self.use_replay:
-            profiler = ReplayProfiler()
-            prof_a = profiler.profile(graph_a, *args)
-            prof_b = profiler.profile(graph_b, *args)
-        else:
-            model = AnalyticalEnergyModel(self.spec)
-            prof_a = model.profile(graph_a)
-            prof_b = model.profile(graph_b)
-
-        findings = [self._classify(i, r, graph_a, graph_b, prof_a, prof_b,
-                                   config_a, config_b)
-                    for i, r in enumerate(regions)]
-        return Report(name_a=name_a, name_b=name_b, findings=findings,
-                      total_energy_a_j=prof_a.total_energy_j,
-                      total_energy_b_j=prof_b.total_energy_j,
-                      meta={"regions": len(regions),
-                            "eq_tensor_pairs": len(eq_pairs),
-                            "nodes_a": len(graph_a.nodes),
-                            "nodes_b": len(graph_b.nodes),
-                            "energy_model": "replay" if self.use_replay
-                            else self.spec.name})
-
-    # ------------------------------------------------------------------
-    def _classify(self, idx: int, region: MatchedRegion,
-                  graph_a: OpGraph, graph_b: OpGraph,
-                  prof_a: EnergyProfile, prof_b: EnergyProfile,
-                  config_a, config_b) -> Finding:
-        e_a = subgraph_energy(prof_a, region.nodes_a)
-        e_b = subgraph_energy(prof_b, region.nodes_b)
-        t_a = subgraph_time(prof_a, region.nodes_a)
-        t_b = subgraph_time(prof_b, region.nodes_b)
-        lo, hi = min(e_a, e_b), max(e_a, e_b)
-        delta = (hi - lo) / lo if lo > 0 else (0.0 if hi <= 0 else float("inf"))
-        wasteful = "A" if e_a > e_b else ("B" if e_b > e_a else "-")
-        if delta <= self.energy_threshold:
-            cls = "comparable"
-        else:
-            # efficient side must not be slower by more than perf_tolerance
-            t_waste, t_eff = (t_a, t_b) if wasteful == "A" else (t_b, t_a)
-            if t_eff <= t_waste * (1.0 + self.perf_tolerance):
-                cls = "energy_waste"
-            else:
-                cls = "tradeoff"
-        diag = None
-        if cls == "energy_waste":
-            diag = diagnose_region(graph_a, region.nodes_a,
-                                   graph_b, region.nodes_b,
-                                   config_a=config_a, config_b=config_b)
-        return Finding(region_idx=idx, energy_a_j=e_a, energy_b_j=e_b,
-                       time_a_s=t_a, time_b_s=t_b,
-                       nodes_a=list(region.nodes_a), nodes_b=list(region.nodes_b),
-                       classification=cls, wasteful_side=wasteful, diagnosis=diag)
+        Side A is captured in full first (the capture-once model); the
+        functional-equivalence gate then runs as soon as side B's sample-0
+        outputs exist, so a different-task mismatch raises before B's
+        remaining samples are captured or B is energy-priced.
+        """
+        session = self._session()
+        art_a = session.capture(fn_a, args, name=name_a, config=config_a,
+                                sample_seeds=self.sample_seeds)
+        art_b = session.capture(fn_b, args, name=name_b, config=config_b,
+                                sample_seeds=self.sample_seeds,
+                                gate_against=art_a, output_rtol=output_rtol)
+        return session.compare(art_a, art_b, output_rtol=output_rtol)

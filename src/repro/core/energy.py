@@ -1,4 +1,4 @@
-"""Energy models: analytic (roofline-timed) and replay-measured.
+"""Energy models: analytic (roofline-timed), replay-measured, HLO-calibrated.
 
 Mirrors the paper's modular profiler (§5.2): a physical power meter when you
 have one, replay-based software profiling when you don't.  On this CPU-only
@@ -7,12 +7,21 @@ container the 'physical meter' role is played by the analytic TPU-v5e model
 host and converts it through the host power model, preserving orderings and
 relative differences that can be cross-checked against the analytic numbers
 (benchmarks/bench_energy_accuracy.py, Table-4 analogue).
+
+Sessions (core/session.py) select between these through the ``EnergyBackend``
+protocol: an object with an ``id`` (feeds the artifact cache key), a ``label``
+(the ``Report.meta['energy_model']`` string) and a ``profile(graph, args)``
+method returning an :class:`EnergyProfile`.  ``AnalyticalBackend`` wraps
+:class:`AnalyticalEnergyModel`, ``ReplayBackend`` wraps
+:class:`ReplayProfiler`, and ``HloCostBackend`` calibrates the analytic
+per-operator breakdown against XLA's compiled cost analysis
+(core/hlo_costs.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Any, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
@@ -199,3 +208,166 @@ def subgraph_energy(profile: EnergyProfile, node_idxs: Sequence[int]) -> float:
 
 def subgraph_time(profile: EnergyProfile, node_idxs: Sequence[int]) -> float:
     return profile.time_of(node_idxs)
+
+
+# ---------------------------------------------------------------------------
+# pluggable backends (the session-level replacement for `use_replay: bool`)
+# ---------------------------------------------------------------------------
+
+def _spec_digest(spec: HardwareSpec) -> str:
+    """Stable digest of a spec's coefficients, folded into backend ids so
+    artifact cache keys change when pricing constants change (a renamed-only
+    or retuned spec must never serve stale cached energy profiles)."""
+    import hashlib
+    payload = repr(sorted(dataclasses.asdict(spec).items()))
+    return hashlib.sha256(payload.encode()).hexdigest()[:8]
+
+
+@runtime_checkable
+class EnergyBackend(Protocol):
+    """Per-session energy pricing strategy.
+
+    * ``id`` — stable identifier mixed into artifact cache keys, so captures
+      priced by different backends never alias in the store;
+    * ``label`` — human-readable name surfaced as
+      ``Report.meta['energy_model']`` (the analytic backend keeps the legacy
+      hardware-spec name, the replay backend the legacy ``"replay"``);
+    * ``profile(graph, args)`` — price one traced graph.  ``args`` are the
+      concrete capture inputs; analytic backends ignore them, measuring
+      backends (replay) execute on them.
+    """
+
+    @property
+    def id(self) -> str: ...
+
+    @property
+    def label(self) -> str: ...
+
+    def profile(self, graph: OpGraph,
+                args: Sequence[Any] = ()) -> EnergyProfile: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticalBackend:
+    """Roofline/analytic pricing on a hardware spec (no execution)."""
+
+    spec: HardwareSpec = TPU_V5E
+
+    @property
+    def id(self) -> str:
+        return f"analytic:{self.spec.name}:{_spec_digest(self.spec)}"
+
+    @property
+    def label(self) -> str:
+        return self.spec.name
+
+    def profile(self, graph: OpGraph,
+                args: Sequence[Any] = ()) -> EnergyProfile:
+        return AnalyticalEnergyModel(self.spec).profile(graph)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayBackend:
+    """Replay-measured wall time on the host, converted through its power
+    model (the paper's software-profiling fallback)."""
+
+    spec: HardwareSpec = CPU_HOST
+    min_replay_time_s: float = 5e-3
+    max_replay_iters: int = 64
+
+    @property
+    def id(self) -> str:
+        return (f"replay:{self.spec.name}:{_spec_digest(self.spec)}"
+                f":{self.min_replay_time_s}:{self.max_replay_iters}")
+
+    @property
+    def label(self) -> str:
+        return "replay"
+
+    def profile(self, graph: OpGraph,
+                args: Sequence[Any] = ()) -> EnergyProfile:
+        profiler = ReplayProfiler(self.spec,
+                                  min_replay_time_s=self.min_replay_time_s,
+                                  max_replay_iters=self.max_replay_iters)
+        return profiler.profile(graph, *args)
+
+
+@dataclasses.dataclass(frozen=True)
+class HloCostBackend:
+    """Analytic pricing calibrated against XLA's compiled cost analysis.
+
+    ``compiled.cost_analysis()`` reports whole-module FLOPs/bytes (and the
+    post-optimization HLO text yields collective traffic — hlo_costs.py) but
+    no per-operator breakdown, while the analytic model has the opposite
+    strength.  This backend compiles the captured jaxpr, extracts the module
+    totals, and rescales the analytic per-operator FLOP/HBM/ICI columns so
+    they sum to the compiled truth before repricing — per-region comparisons
+    keep operator resolution while absolute totals follow the XLA compiler's
+    accounting of fusion and layout effects.
+    """
+
+    spec: HardwareSpec = TPU_V5E
+
+    @property
+    def id(self) -> str:
+        return f"hlo:{self.spec.name}:{_spec_digest(self.spec)}"
+
+    @property
+    def label(self) -> str:
+        return f"hlo+{self.spec.name}"
+
+    def profile(self, graph: OpGraph,
+                args: Sequence[Any] = ()) -> EnergyProfile:
+        import jax
+
+        try:
+            from jax.core import jaxpr_as_fun
+        except ImportError:                      # moved across jax versions
+            from jax._src.core import jaxpr_as_fun
+
+        from repro.core import hlo_costs
+
+        closed = graph.closed_jaxpr
+        if closed is None:
+            raise ValueError(
+                "HloCostBackend needs a live graph (with a ClosedJaxpr); "
+                "loaded artifacts carry their capture-time profile instead")
+        flat_args = jax.tree_util.tree_leaves(tuple(args))
+        compiled = jax.jit(jaxpr_as_fun(closed)).lower(*flat_args).compile()
+        cc = hlo_costs.extract_costs(compiled)
+
+        costs = [costs_mod.node_cost(graph, node) for node in graph.nodes]
+
+        def ratio(total: float, parts: float) -> float:
+            return total / parts if total > 0 and parts > 0 else 1.0
+
+        k_flops = ratio(cc.flops, sum(c.flops for c in costs))
+        k_hbm = ratio(cc.bytes_accessed, sum(c.hbm_bytes for c in costs))
+        k_ici = ratio(cc.collectives.total_traffic_bytes,
+                      sum(c.ici_bytes for c in costs))
+        scaled = [dataclasses.replace(c, flops=c.flops * k_flops,
+                                      hbm_bytes=c.hbm_bytes * k_hbm,
+                                      ici_bytes=c.ici_bytes * k_ici)
+                  for c in costs]
+
+        model = AnalyticalEnergyModel(self.spec)
+        flops, hbm, ici, energy, t_op, bound = model._price(scaled)
+        ops = [OpEnergy(node_idx=i, primitive=graph.nodes[i].primitive,
+                        energy_j=float(energy[i]), time_s=float(t_op[i]),
+                        flops=float(flops[i]), hbm_bytes=float(hbm[i]),
+                        ici_bytes=float(ici[i]), bound=str(bound[i]))
+               for i in range(len(scaled))]
+        return EnergyProfile(graph_name=graph.name, ops=ops)
+
+
+def backend_from_name(name: str, *, spec: HardwareSpec = TPU_V5E
+                      ) -> EnergyBackend:
+    """Resolve a CLI-style backend name ('analytic' | 'replay' | 'hlo')."""
+    if name in ("analytic", "analytical"):
+        return AnalyticalBackend(spec)
+    if name == "replay":
+        return ReplayBackend()
+    if name == "hlo":
+        return HloCostBackend(spec)
+    raise ValueError(f"unknown energy backend {name!r} "
+                     "(expected 'analytic', 'replay' or 'hlo')")

@@ -107,6 +107,8 @@ class CompiledCosts:
 
 def extract_costs(compiled) -> CompiledCosts:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jaxlib < 0.5: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     text = compiled.as_text()
     colls = parse_collectives(text)

@@ -1,10 +1,17 @@
-"""Findings data model and rendering for the differential energy debugger."""
+"""Findings data model and rendering for the differential energy debugger.
+
+Reports round-trip through JSON (``to_json`` / ``from_json``) so stored
+comparisons — e.g. those written by ``python -m repro.cli compare --json``
+— can be re-rendered later without re-running any pipeline.  N-way ranking
+results (``Session.rank``) embed their waste matrix under
+``meta['rank_matrix']``; ``Report.render`` picks it up automatically.
+"""
 
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any
+from typing import Any, Mapping, Sequence
 
 from repro.core.diagnose import Diagnosis
 
@@ -39,6 +46,24 @@ class Finding:
         if lo <= 0:
             return 0.0
         return (hi - lo) / lo * 100.0
+
+    @classmethod
+    def from_json(cls, data: str | Mapping[str, Any]) -> "Finding":
+        d = json.loads(data) if isinstance(data, str) else dict(data)
+        diag = d.get("diagnosis")
+        if diag is not None:
+            diag = Diagnosis(kind=diag["kind"],
+                             deviation_point=diag["deviation_point"],
+                             detail=diag["detail"],
+                             key_variables=list(diag["key_variables"]),
+                             ops_a=list(diag["ops_a"]),
+                             ops_b=list(diag["ops_b"]))
+        return cls(region_idx=d["region_idx"],
+                   energy_a_j=d["energy_a_j"], energy_b_j=d["energy_b_j"],
+                   time_a_s=d["time_a_s"], time_b_s=d["time_b_s"],
+                   nodes_a=list(d["nodes_a"]), nodes_b=list(d["nodes_b"]),
+                   classification=d["classification"],
+                   wasteful_side=d["wasteful_side"], diagnosis=diag)
 
 
 @dataclasses.dataclass
@@ -76,6 +101,11 @@ class Report:
                 lines.append(f"    {d.detail}")
                 for kv in d.key_variables[:6]:
                     lines.append(f"    key variable: {kv}")
+        rank = self.meta.get("rank_matrix")
+        if rank:
+            lines.extend(render_rank_matrix(rank["names"],
+                                            rank["total_energy_j"],
+                                            rank["waste_matrix"]))
         return "\n".join(lines)
 
     def _total_delta(self) -> float:
@@ -89,3 +119,32 @@ class Report:
                 return dataclasses.asdict(o)
             raise TypeError(type(o))
         return json.dumps(dataclasses.asdict(self), default=enc, indent=2)
+
+    @classmethod
+    def from_json(cls, data: str | Mapping[str, Any]) -> "Report":
+        d = json.loads(data) if isinstance(data, str) else dict(data)
+        return cls(name_a=d["name_a"], name_b=d["name_b"],
+                   findings=[Finding.from_json(f) for f in d["findings"]],
+                   total_energy_a_j=d["total_energy_a_j"],
+                   total_energy_b_j=d["total_energy_b_j"],
+                   meta=dict(d.get("meta", {})))
+
+
+def render_rank_matrix(names: Sequence[str], totals: Sequence[float],
+                       waste: Sequence[Sequence[float]]) -> list[str]:
+    """Render an N-way waste matrix (``waste[i][j]`` = Joules candidate i
+    wastes vs candidate j) as report lines, best candidate first."""
+    n = len(names)
+    order = sorted(range(n), key=lambda i: totals[i])
+    tag = [f"[{k}]" for k in range(n)]
+    lines = ["--- N-way waste matrix (J wasted by row candidate vs column; "
+             "rows sorted best-first) ---"]
+    for rank, i in enumerate(order):
+        lines.append(f"    {tag[rank]} {names[i]}  "
+                     f"(total {totals[i]:.4e} J)")
+    header = "    waste[J]  " + " ".join(f"{tag[k]:>10}" for k in range(n))
+    lines.append(header)
+    for rank, i in enumerate(order):
+        cells = " ".join(f"{waste[i][j]:>10.3e}" for j in order)
+        lines.append(f"    {tag[rank]:>9} {cells}")
+    return lines

@@ -1,0 +1,419 @@
+"""Session API: capture-once differential energy debugging.
+
+The public entry point for Magneton-style analysis, decomposed so that
+expensive work happens exactly once per candidate (capture) and comparisons
+are cheap post-hoc queries over persistent artifacts:
+
+  * ``session.capture(fn, args, name=...)`` — trace, stream per-sample
+    tensor-signature capture, and energy-price ONE candidate implementation;
+    returns a serializable :class:`~repro.core.artifact.CandidateArtifact`.
+    With a store attached the capture is content-addressed (jaxpr hash +
+    input shapes/dtypes/values + sample seeds + backend id) and an
+    identical re-capture is a cache hit that skips every instrumented
+    execution.
+  * ``session.compare(art_a, art_b)`` — functional-equivalence gate, lazy
+    two-phase tensor matching, subgraph matching, classification and
+    diagnosis, all from the artifacts; no end-to-end re-execution.
+  * ``session.rank([art_1..art_N])`` — N-way waste matrix from N captures
+    (N·(N-1)/2 artifact-level compares) instead of N² full pipelines.
+
+Energy pricing is pluggable through the ``EnergyBackend`` protocol
+(core/energy.py): an object with ``id`` (mixed into cache keys), ``label``
+(the ``Report.meta['energy_model']`` string) and ``profile(graph, args)``.
+Ship-with backends: ``AnalyticalBackend(spec)`` (roofline model, the
+default), ``ReplayBackend()`` (replay-measured host wall time), and
+``HloCostBackend(spec)`` (analytic breakdown calibrated to XLA's compiled
+cost analysis).  The legacy boolean (``DifferentialEnergyDebugger(
+use_replay=True)``) maps onto ``ReplayBackend`` for back-compat.
+
+The classic one-shot flow survives as ``DifferentialEnergyDebugger.compare``
+(core/diff.py), now a thin wrapper over a store-less session.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import interp
+from repro.core.artifact import (ArtifactStore, CandidateArtifact,
+                                 artifact_key)
+from repro.core.diagnose import diagnose_region
+from repro.core.energy import (AnalyticalBackend, EnergyBackend,
+                               EnergyProfile, subgraph_energy, subgraph_time)
+from repro.core.graph import OpGraph, trace
+from repro.core.report import Finding, Report
+from repro.core.subgraph_match import MatchedRegion, match_subgraphs
+from repro.core.tensor_match import TensorMatcher
+
+DEFAULT_SEED_BASE = 17     # legacy perturbation seeds: 17, 18, ...
+
+
+def _perturb(args, seed: int):
+    """Fresh input sample with the same pytree structure/shapes/dtypes.
+
+    Integer leaves that cannot be meaningfully resampled — zero-size arrays
+    (``min()`` raises) and constant arrays (``min == max`` would regenerate
+    the same constant while still consuming RNG draws) — pass through
+    unchanged; non-degenerate leaves keep the historical distribution.
+    """
+    rng = np.random.default_rng(seed)
+
+    def one(x):
+        x = np.asarray(x)
+        if x.dtype.kind in "f":
+            return (rng.standard_normal(x.shape) * (np.std(x) + 0.1)
+                    + np.mean(x)).astype(x.dtype)
+        if x.dtype.kind in "iu":
+            if x.size == 0:
+                return x
+            lo, hi = int(x.min()), int(x.max()) + 1
+            if hi - lo <= 1:       # constant integer leaf: nothing to vary
+                return x
+            return rng.integers(lo, hi, size=x.shape).astype(x.dtype)
+        return x
+    return jax.tree_util.tree_map(one, args)
+
+
+def default_sample_seeds(num_input_samples: int) -> tuple[int, ...]:
+    """Perturbation seeds for samples 1..n-1 (sample 0 is the given args)."""
+    return tuple(DEFAULT_SEED_BASE + k
+                 for k in range(max(num_input_samples - 1, 0)))
+
+
+def make_samples(args: tuple, sample_seeds: Sequence[int]) -> tuple:
+    """Concrete input samples: the given args plus one perturbation per seed."""
+    return (args,) + tuple(_perturb(args, seed=int(s)) for s in sample_seeds)
+
+
+def _max_abs(x: np.ndarray) -> float:
+    """max|x| as a float; 0.0 for zero-size leaves (np.max would raise)."""
+    return float(np.max(np.abs(x))) if x.size else 0.0
+
+
+def _check_same_task(out_a, out_b, output_rtol: float) -> None:
+    """Functional-equivalence gate (paper: <=1% element-wise rel. difference).
+
+    Handles scalar and zero-size output leaves; the max-norm relative
+    difference measures elementwise |a-b| against the magnitude of the
+    outputs, so near-zero elements don't produce spurious "different task"
+    verdicts.
+    """
+    leaves_a = jax.tree_util.tree_leaves(out_a)
+    leaves_b = jax.tree_util.tree_leaves(out_b)
+    if len(leaves_a) != len(leaves_b):
+        raise ValueError(
+            f"implementations disagree in output structure "
+            f"({len(leaves_a)} vs {len(leaves_b)} leaves); not the same task")
+    for xa, xb in zip(leaves_a, leaves_b):
+        xa64 = np.asarray(xa, dtype=np.float64)
+        xb64 = np.asarray(xb, dtype=np.float64)
+        if xa64.shape != xb64.shape:
+            raise ValueError(
+                f"implementations disagree in output shapes "
+                f"({xa64.shape} vs {xb64.shape}); not the same task")
+        if xa64.size == 0:
+            continue
+        scale = max(_max_abs(xa64), _max_abs(xb64), 1e-6)
+        rel = _max_abs(xa64 - xb64) / scale
+        if rel > output_rtol:
+            raise ValueError(
+                f"implementations disagree (max rel diff {rel:.3e} > "
+                f"{output_rtol}); not the same task")
+
+
+# ---------------------------------------------------------------------------
+# N-way ranking result
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RankResult:
+    """N-way differential ranking built from N capture artifacts.
+
+    ``waste_matrix[i][j]`` is the total Joules candidate *i* wastes in
+    regions where it is the confirmed-wasteful side against candidate *j*
+    (0 on the diagonal and wherever *i* is the efficient side).  Pairwise
+    reports are kept for drill-down; ``order()`` ranks candidates by total
+    modeled energy, cheapest first.
+    """
+
+    names: list[str]
+    keys: list[str]
+    total_energy_j: list[float]
+    waste_matrix: list[list[float]]
+    reports: dict[tuple[int, int], Report]   # (i, j) with i < j
+
+    def order(self) -> list[int]:
+        return sorted(range(len(self.names)),
+                      key=lambda i: self.total_energy_j[i])
+
+    @property
+    def best(self) -> str:
+        return self.names[self.order()[0]]
+
+    def render(self) -> str:
+        from repro.core.report import render_rank_matrix
+        lines = [f"=== Magneton N-way ranking: {len(self.names)} candidates, "
+                 f"{len(self.reports)} artifact-level compares ==="]
+        lines.extend(render_rank_matrix(self.names, self.total_energy_j,
+                                        self.waste_matrix))
+        for rank, i in enumerate(self.order(), start=1):
+            waste_vs = sum(self.waste_matrix[i])
+            lines.append(f"#{rank} {self.names[i]}: "
+                         f"{self.total_energy_j[i]:.4e} J total, "
+                         f"{waste_vs:.4e} J wasted vs the field")
+        return "\n".join(lines)
+
+    def summary_report(self) -> Report:
+        """The best-vs-worst pairwise report with the full N-way matrix
+        embedded under ``meta['rank_matrix']`` (Report.render shows it)."""
+        order = self.order()
+        i, j = order[0], order[-1]
+        base = self.reports[(min(i, j), max(i, j))]
+        meta = dict(base.meta)
+        meta["rank_matrix"] = {"names": self.names,
+                               "total_energy_j": self.total_energy_j,
+                               "waste_matrix": self.waste_matrix}
+        return Report(name_a=base.name_a, name_b=base.name_b,
+                      findings=base.findings,
+                      total_energy_a_j=base.total_energy_a_j,
+                      total_energy_b_j=base.total_energy_b_j, meta=meta)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "kind": "rank",
+            "names": self.names,
+            "keys": self.keys,
+            "total_energy_j": self.total_energy_j,
+            "waste_matrix": self.waste_matrix,
+            "reports": [{"i": i, "j": j, "report": json.loads(rep.to_json())}
+                        for (i, j), rep in sorted(self.reports.items())],
+        }, indent=2)
+
+    @classmethod
+    def from_json(cls, data: str | Mapping[str, Any]) -> "RankResult":
+        d = json.loads(data) if isinstance(data, str) else data
+        reports = {(int(r["i"]), int(r["j"])): Report.from_json(r["report"])
+                   for r in d["reports"]}
+        return cls(names=list(d["names"]), keys=list(d["keys"]),
+                   total_energy_j=list(d["total_energy_j"]),
+                   waste_matrix=[list(row) for row in d["waste_matrix"]],
+                   reports=reports)
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Session:
+    """Capture-once differential energy debugging session.
+
+    Detection thresholds follow the paper (§6.1): regions whose modeled
+    energy differs by more than ``energy_threshold`` while the efficient
+    side is no more than ``perf_tolerance`` slower are software energy
+    waste; cheaper-but-slower regions are trade-offs.
+    """
+
+    backend: EnergyBackend = dataclasses.field(
+        default_factory=AnalyticalBackend)
+    store: ArtifactStore | str | None = None
+    energy_threshold: float = 0.10
+    perf_tolerance: float = 0.01
+    match_rtol: float = 1e-3
+    num_input_samples: int = 2
+
+    def __post_init__(self):
+        if isinstance(self.store, (str, Path)):
+            self.store = ArtifactStore(self.store)
+
+    # -- capture ------------------------------------------------------------
+    def capture(self, fn: Callable, args: Sequence[Any], *,
+                name: str | None = None,
+                config: Mapping[str, Any] | None = None,
+                sample_seeds: Sequence[int] | None = None,
+                use_cache: bool = True,
+                gate_against: CandidateArtifact | None = None,
+                output_rtol: float = 1e-2,
+                extra_meta: Mapping[str, Any] | None = None
+                ) -> CandidateArtifact:
+        """Run trace + streaming signature capture + energy pricing once.
+
+        ``sample_seeds`` are the perturbation seeds for input samples
+        1..n-1 (sample 0 is ``args`` itself) and are recorded on the
+        artifact — they are part of its content address, so captures probed
+        on different samples never alias in the store.  On a store cache
+        hit no instrumented execution happens at all; the loaded artifact
+        is re-attached to the fresh trace so lazy phase-2 value fetches
+        keep working.
+
+        ``gate_against`` runs the functional-equivalence gate against an
+        earlier capture as soon as this side's sample-0 outputs exist —
+        failing fast BEFORE further samples are captured, the graph is
+        energy-priced, or anything is persisted (the historical one-shot
+        pipeline's gate ordering).
+        """
+        args = tuple(args)
+        if sample_seeds is None:
+            sample_seeds = default_sample_seeds(self.num_input_samples)
+        sample_seeds = tuple(int(s) for s in sample_seeds)
+        name = name or getattr(fn, "__name__", "candidate")
+
+        graph = trace(fn, *args, name=name)
+        key = artifact_key(graph, args, sample_seeds, self.backend.id)
+
+        if use_cache and self.store is not None and self.store.has(key):
+            art = self.store.load(key)
+            art.name = name            # names are labels, not identity
+            art.config = dict(config) if config is not None else art.config
+            art.attach(graph, args)
+            art.meta["cache_hit"] = True
+            if gate_against is not None:
+                _check_same_task(gate_against.outputs, art.outputs,
+                                 output_rtol)
+            return art
+
+        samples = make_samples(args, sample_seeds)
+        outs0, stats0 = interp.capture_tensor_stats(graph, *samples[0])
+        if gate_against is not None:
+            _check_same_task(gate_against.outputs, outs0, output_rtol)
+        sample_stats = [stats0]
+        for s in samples[1:]:
+            sample_stats.append(interp.capture_tensor_stats(graph, *s)[1])
+        outputs = [np.asarray(o) for o in jax.tree_util.tree_leaves(outs0)]
+
+        profile = self.backend.profile(graph, args)
+
+        art = CandidateArtifact(
+            name=name, key=key, graph=graph, sample_stats=sample_stats,
+            outputs=outputs, profile=profile,
+            backend_id=self.backend.id, backend_label=self.backend.label,
+            sample_seeds=sample_seeds,
+            config=dict(config) if config is not None else None,
+            meta={"nodes": len(graph.nodes),
+                  "num_samples": len(samples),
+                  **(dict(extra_meta) if extra_meta else {})})
+        art._samples = samples
+        if self.store is not None:
+            self.store.save(art)
+        return art
+
+    def load(self, key: str) -> CandidateArtifact:
+        if self.store is None:
+            raise ValueError("session has no artifact store")
+        return self.store.load(key)
+
+    # -- compare ------------------------------------------------------------
+    def compare(self, art_a: CandidateArtifact, art_b: CandidateArtifact, *,
+                output_rtol: float = 1e-2) -> Report:
+        """Match + classify + diagnose two artifacts; no re-capture.
+
+        Works on any mix of live and loaded artifacts.  Phase-2 tensor
+        values fetched during matching are memoized on the artifacts and
+        persisted back to the store, so a comparison once run live can be
+        re-run offline from disk bit-identically.
+        """
+        if art_a.backend_id != art_b.backend_id:
+            raise ValueError(
+                f"artifacts were priced by different energy backends "
+                f"({art_a.backend_id} vs {art_b.backend_id}); energies are "
+                "not comparable — re-capture one side")
+        if art_a.sample_seeds != art_b.sample_seeds:
+            raise ValueError(
+                f"artifacts were captured on different sample seeds "
+                f"({art_a.sample_seeds} vs {art_b.sample_seeds}); "
+                "Hypothesis-1 matching needs identical probes")
+
+        _check_same_task(art_a.outputs, art_b.outputs, output_rtol)
+
+        matcher = TensorMatcher(rtol=self.match_rtol)
+        eq_pairs = matcher.match_streamed(
+            art_a.sample_stats, art_b.sample_stats,
+            art_a.fetcher(), art_b.fetcher())
+        regions = match_subgraphs(art_a.graph, art_b.graph, eq_pairs)
+
+        findings = [self._classify(i, r, art_a.graph, art_b.graph,
+                                   art_a.profile, art_b.profile,
+                                   art_a.config, art_b.config)
+                    for i, r in enumerate(regions)]
+        report = Report(
+            name_a=art_a.name, name_b=art_b.name, findings=findings,
+            total_energy_a_j=art_a.profile.total_energy_j,
+            total_energy_b_j=art_b.profile.total_energy_j,
+            meta={"regions": len(regions),
+                  "eq_tensor_pairs": len(eq_pairs),
+                  "nodes_a": len(art_a.graph.nodes),
+                  "nodes_b": len(art_b.graph.nodes),
+                  "energy_model": art_a.backend_label})
+        if self.store is not None:
+            for art in (art_a, art_b):
+                if art._dirty:
+                    self.store.save(art)
+        return report
+
+    # -- rank ---------------------------------------------------------------
+    def rank(self, artifacts: Sequence[CandidateArtifact], *,
+             output_rtol: float = 1e-2) -> RankResult:
+        """N-way waste matrix from N captures (not N² end-to-end runs).
+
+        Every unordered candidate pair is compared at the artifact level;
+        ``waste_matrix[i][j]`` accumulates the energy candidate *i* wastes
+        in regions where it is the confirmed-wasteful side vs candidate *j*.
+        """
+        arts = list(artifacts)
+        n = len(arts)
+        if n < 2:
+            raise ValueError("rank() needs at least two artifacts")
+        waste = [[0.0] * n for _ in range(n)]
+        reports: dict[tuple[int, int], Report] = {}
+        for i in range(n):
+            for j in range(i + 1, n):
+                rep = self.compare(arts[i], arts[j], output_rtol=output_rtol)
+                reports[(i, j)] = rep
+                for f in rep.waste_findings:
+                    if f.wasteful_side == "A":
+                        waste[i][j] += f.energy_a_j - f.energy_b_j
+                    elif f.wasteful_side == "B":
+                        waste[j][i] += f.energy_b_j - f.energy_a_j
+        return RankResult(
+            names=[a.name for a in arts],
+            keys=[a.key for a in arts],
+            total_energy_j=[a.profile.total_energy_j for a in arts],
+            waste_matrix=waste,
+            reports=reports)
+
+    # -- classification (paper §6.1) ----------------------------------------
+    def _classify(self, idx: int, region: MatchedRegion,
+                  graph_a: OpGraph, graph_b: OpGraph,
+                  prof_a: EnergyProfile, prof_b: EnergyProfile,
+                  config_a, config_b) -> Finding:
+        e_a = subgraph_energy(prof_a, region.nodes_a)
+        e_b = subgraph_energy(prof_b, region.nodes_b)
+        t_a = subgraph_time(prof_a, region.nodes_a)
+        t_b = subgraph_time(prof_b, region.nodes_b)
+        lo, hi = min(e_a, e_b), max(e_a, e_b)
+        delta = (hi - lo) / lo if lo > 0 else (0.0 if hi <= 0 else float("inf"))
+        wasteful = "A" if e_a > e_b else ("B" if e_b > e_a else "-")
+        if delta <= self.energy_threshold:
+            cls = "comparable"
+        else:
+            # efficient side must not be slower by more than perf_tolerance
+            t_waste, t_eff = (t_a, t_b) if wasteful == "A" else (t_b, t_a)
+            if t_eff <= t_waste * (1.0 + self.perf_tolerance):
+                cls = "energy_waste"
+            else:
+                cls = "tradeoff"
+        diag = None
+        if cls == "energy_waste":
+            diag = diagnose_region(graph_a, region.nodes_a,
+                                   graph_b, region.nodes_b,
+                                   config_a=config_a, config_b=config_b)
+        return Finding(region_idx=idx, energy_a_j=e_a, energy_b_j=e_b,
+                       time_a_s=t_a, time_b_s=t_b,
+                       nodes_a=list(region.nodes_a), nodes_b=list(region.nodes_b),
+                       classification=cls, wasteful_side=wasteful, diagnosis=diag)

@@ -29,18 +29,25 @@ from repro.train.train_step import TrainConfig
 from repro.train.checkpoint import PreemptionGuard
 
 
-def energy_audit(cfg) -> None:
-    """Differential audit: the model's unfused GELU/attention twins."""
-    from repro.core.diff import DifferentialEnergyDebugger
-    from repro.zoo import cases
+def energy_audit(cfg, *, store: str | None = None) -> None:
+    """Differential audit: the model's unfused GELU/attention twins.
+
+    Session-based; pass ``store`` (CLI: ``--audit-store DIR``) to make the
+    captures content-addressed, so re-running the audit on later launches
+    hits the store instead of re-executing the instrumented pipeline.
+    """
+    from repro.core.session import Session
+    from repro.zoo.cases import get_case
     print("=== Magneton energy audit (launcher feature) ===")
+    session = Session(store=store)
     for cid in ("n1-gelu-backend", "c13-ce-onehot", "c4-gqa-repeat"):
-        c = cases.by_id(cid)
-        dbg = DifferentialEnergyDebugger()
-        rep = dbg.compare(c.inefficient, c.efficient, c.make_args(),
-                          name_a=c.id + "-current", name_b=c.id + "-fix",
-                          output_rtol=c.output_rtol)
-        print(rep.render())
+        c = get_case(cid)
+        art_cur = session.capture(c.inefficient, c.make_args(),
+                                  name=c.id + "-current", config=c.config_a)
+        art_fix = session.capture(c.efficient, c.make_args(),
+                                  name=c.id + "-fix", config=c.config_b)
+        print(session.compare(art_cur, art_fix,
+                              output_rtol=c.output_rtol).render())
 
 
 def main() -> None:
@@ -56,6 +63,9 @@ def main() -> None:
     p.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
     p.add_argument("--checkpoint-every", type=int, default=25)
     p.add_argument("--energy-audit", action="store_true")
+    p.add_argument("--audit-store", default=None,
+                   help="artifact store dir for the energy audit (cache "
+                        "hits across launches)")
     p.add_argument("--compress-grads", action="store_true")
     p.add_argument("--attn-impl", default="xla", choices=("xla", "pallas"))
     p.add_argument("--metrics-out", default=None)
@@ -74,7 +84,7 @@ def main() -> None:
                             kind="train")
 
     if args.energy_audit:
-        energy_audit(cfg)
+        energy_audit(cfg, store=args.audit_store)
 
     mesh = make_host_mesh() if len(jax.devices()) > 1 else None
     guard = PreemptionGuard()

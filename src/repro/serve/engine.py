@@ -120,11 +120,16 @@ class ServeEngine:
         self.stats["tokens_generated"] += sum(len(r.generated) for r in wave)
 
     # -- Magneton audit --------------------------------------------------------
-    def energy_report(self, *, prompt_len: int = 32):
+    def energy_report(self, *, prompt_len: int = 32, session=None):
         """Differential energy audit of this engine's decode step against the
         all-position-logits wasteful twin (hf-38977) — the profiler as a
-        serving feature."""
-        from repro.core.diff import DifferentialEnergyDebugger
+        serving feature.
+
+        Runs on the Session/artifact API: pass a store-backed
+        :class:`repro.core.session.Session` to persist the decode-step
+        capture and make repeated audits of an unchanged engine cache hits.
+        """
+        from repro.core.session import Session
         cfg = self.cfg
         B = self.ecfg.batch_size
         key = jax.random.key(0)
@@ -145,6 +150,7 @@ class ServeEngine:
             return pad[:, -1:, :].astype(jnp.float32)
 
         tok = jnp.zeros((B, 1), jnp.int32)
-        dbg = DifferentialEnergyDebugger()
-        return dbg.compare(wasteful, efficient, (tok,),
-                           name_a="lmhead-all", name_b="lmhead-last")
+        session = session or Session()
+        art_waste = session.capture(wasteful, (tok,), name="lmhead-all")
+        art_eff = session.capture(efficient, (tok,), name="lmhead-last")
+        return session.compare(art_waste, art_eff)

@@ -47,11 +47,62 @@ class Case:
     notes: str = ""
 
 
+# Registry: case id -> Case, insertion-ordered.  ``CASES`` is kept as the
+# live list view for back-compat (existing callers iterate it directly).
+_REGISTRY: dict[str, Case] = {}
 CASES: list[Case] = []
 
 
+def register_case(case):
+    """Register a :class:`Case` in the zoo registry.
+
+    Usable directly (``register_case(Case(...))``) or as a decorator over a
+    zero-argument factory returning a Case::
+
+        @register_case
+        def _my_case() -> Case:
+            return Case(id="c99-...", ...)
+
+    The CLI (``python -m repro.cli cases``) and the Table-2 harness iterate
+    :func:`list_cases` instead of hand-maintained lists, so registering here
+    is all it takes to make a new case addressable everywhere.
+    """
+    made = case() if callable(case) and not isinstance(case, Case) else case
+    if not isinstance(made, Case):
+        raise TypeError(f"register_case expects a Case or a zero-arg factory "
+                        f"returning one, got {type(made).__name__}")
+    if made.id in _REGISTRY:
+        raise ValueError(f"duplicate case id {made.id!r}")
+    _REGISTRY[made.id] = made
+    CASES.append(made)
+    return case
+
+
+def list_cases(*, category: str | None = None,
+               known: bool | None = None) -> list[Case]:
+    """All registered cases, optionally filtered by category / known flag."""
+    out = list(_REGISTRY.values())
+    if category is not None:
+        out = [c for c in out if c.category == category]
+    if known is not None:
+        out = [c for c in out if c.known == known]
+    return out
+
+
+def get_case(name: str) -> Case:
+    """Look up a case by our id or the paper's issue id."""
+    c = _REGISTRY.get(name)
+    if c is not None:
+        return c
+    for c in _REGISTRY.values():
+        if c.paper_id == name:
+            return c
+    raise KeyError(f"unknown case {name!r}; known ids: "
+                   f"{', '.join(sorted(_REGISTRY))}")
+
+
 def _case(**kw):
-    CASES.append(Case(**kw))
+    register_case(Case(**kw))
 
 
 # ===========================================================================
@@ -592,12 +643,15 @@ def _gelu_fused(x):
     return kops.fused_gelu(x)
 
 
-_case(id="n1-gelu-backend", paper_id="hf-39073", category="misconfiguration",
-      description="Default GELU backend launches 5 unfused kernels; the "
-                  "fused Pallas kernel is one HBM pass (paper: -77.4% op "
-                  "energy, -12% end-to-end).",
-      inefficient=_gelu_unfused, efficient=_gelu_fused,
-      make_args=_mk_gelu_args, known=False)
+@register_case
+def _n1_gelu_backend() -> Case:
+    return Case(id="n1-gelu-backend", paper_id="hf-39073",
+                category="misconfiguration",
+                description="Default GELU backend launches 5 unfused kernels; "
+                            "the fused Pallas kernel is one HBM pass (paper: "
+                            "-77.4% op energy, -12% end-to-end).",
+                inefficient=_gelu_unfused, efficient=_gelu_fused,
+                make_args=_mk_gelu_args, known=False)
 
 
 _N2_V = 32000
@@ -697,15 +751,13 @@ _case(id="n4-moe-dispatch", paper_id="ours-moe", category="api_misuse",
 # ===========================================================================
 
 def by_id(case_id: str) -> Case:
-    for c in CASES:
-        if c.id == case_id or c.paper_id == case_id:
-            return c
-    raise KeyError(case_id)
+    """Back-compat alias for :func:`get_case`."""
+    return get_case(case_id)
 
 
 def known_cases() -> list[Case]:
-    return [c for c in CASES if c.known]
+    return list_cases(known=True)
 
 
 def new_cases() -> list[Case]:
-    return [c for c in CASES if not c.known]
+    return list_cases(known=False)

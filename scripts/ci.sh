@@ -1,14 +1,19 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + CLI smoke + overhead benchmark.
+# CI entry point: tier-1 tests + CLI smoke + baseline drift gate + benches.
 #
-#   scripts/ci.sh          # tier-1 (fast) tests + CLI smoke
-#   scripts/ci.sh --full   # also the slow zoo cases and the overhead bench
+#   scripts/ci.sh          # fast tests + CLI smoke + baseline-check (subset)
+#   scripts/ci.sh --full   # everything: slow tests, all 20 baselines, bench
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 FULL=0
 [[ "${1:-}" == "--full" ]] && FULL=1
+
+# fast-lane subset for the baseline drift gate (cheap, structurally varied:
+# matmul algorithm, redundant recompute, layout, collective); --full replays
+# every committed baseline
+BASELINE_CASES=(c6-matpow c15-expm c12-ln-layout c9-join-psum)
 
 echo "== tier-1 tests =="
 if [[ "$FULL" == 1 ]]; then
@@ -34,7 +39,23 @@ python -m repro.cli rank c6-matpow:ineff c6-matpow:eff \
     --json "$STORE/rank.json" > /dev/null
 python -m repro.cli report "$STORE/rank.json" > /dev/null
 python -m repro.cli artifacts > /dev/null
+python -m repro.cli artifacts prune --keep-latest 2 > /dev/null
 echo "CLI smoke OK"
+
+echo "== baseline-check (golden artifact replay) =="
+# Copy the COMMITTED expectations aside, record fresh golden artifacts next
+# to them, then (1) the live check diffs fresh findings against the
+# committed JSONs and (2) the offline check replays matching+classification+
+# diagnosis purely from the persisted artifacts — zero instrumented
+# execution — and must also be drift-free.
+BDIR="$(mktemp -d)"
+trap 'rm -rf "$STORE" "$BDIR"' EXIT
+cp tests/baselines/*.json "$BDIR"/
+ARGS=()
+[[ "$FULL" == 1 ]] || ARGS=("${BASELINE_CASES[@]}")
+python -m repro.cli baseline check --dir "$BDIR" "${ARGS[@]}"
+python -m repro.cli baseline check --dir "$BDIR" --offline "${ARGS[@]}"
+echo "baseline-check OK"
 
 if [[ "$FULL" == 1 ]]; then
     echo "== overhead benchmark (BENCH_overhead.json) =="

@@ -32,9 +32,7 @@ from repro.core.report import Report
 from repro.core.session import RankResult, Session
 from repro.zoo import cases as zoo
 
-_SIDES = {"ineff": "inefficient", "inefficient": "inefficient",
-          "a": "inefficient",
-          "eff": "efficient", "efficient": "efficient", "b": "efficient"}
+_SIDES = zoo.SIDE_ALIASES
 
 
 @dataclasses.dataclass
@@ -62,7 +60,7 @@ def _maybe_attach_zoo(art: CandidateArtifact, session: Session
         case = zoo.get_case(case_id)
     except KeyError:
         return art
-    fn = getattr(case, _SIDES[side])
+    fn, _ = case.side(side)
     fresh = session.capture(fn, case.make_args(), name=art.name,
                             config=art.config,
                             sample_seeds=art.sample_seeds,
@@ -82,8 +80,7 @@ def _resolve_spec(spec: str, session: Session) -> _Resolved:
             case = zoo.get_case(case_id)
         except KeyError as e:
             raise SystemExit(f"error: {e.args[0]}") from None
-        fn = getattr(case, _SIDES[side])
-        config = case.config_a if _SIDES[side] == "inefficient" else case.config_b
+        fn, config = case.side(side)
         art = session.capture(fn, case.make_args(),
                               name=f"{case.id}-{side}", config=config,
                               extra_meta={"zoo_case": case.id,
@@ -180,8 +177,29 @@ def cmd_report(args) -> int:
     return 0
 
 
+def _parse_bytes(text: str) -> int:
+    """'500K' / '10M' / '1G' / plain integer byte counts."""
+    t = text.strip().upper()
+    mult = {"K": 1024, "M": 1024 ** 2, "G": 1024 ** 3}.get(t[-1:], 1)
+    return int(float(t[:-1] if mult > 1 else t) * mult)
+
+
 def cmd_artifacts(args) -> int:
     store = ArtifactStore(args.store) if args.store else ArtifactStore()
+    if getattr(args, "action", None) == "prune":
+        try:
+            deleted = store.prune(
+                max_bytes=(_parse_bytes(args.max_bytes)
+                           if args.max_bytes is not None else None),
+                keep_latest=args.keep_latest, dry_run=args.dry_run)
+        except ValueError as e:
+            raise SystemExit(f"error: {e}") from None
+        verb = "would delete" if args.dry_run else "deleted"
+        for key in deleted:
+            print(f"{verb} {key}")
+        print(f"{verb} {len(deleted)} artifacts; store {store.root} now "
+              f"{store.total_bytes() / 1024:.1f} KiB")
+        return 0
     entries = store.entries()
     for e in entries:
         print(f"{e['key']:22} {e['name']:28} backend={e['backend']:12} "
@@ -189,6 +207,66 @@ def cmd_artifacts(args) -> int:
               f"values={e['cached_values']:4} {e['bytes'] / 1024:.1f} KiB")
     print(f"{len(entries)} artifacts in {store.root}")
     return 0
+
+
+def _baseline_cases(names) -> list:
+    if not names:
+        return zoo.list_cases()
+    try:
+        return [zoo.get_case(n) for n in names]
+    except KeyError as e:
+        raise SystemExit(f"error: {e.args[0]}") from None
+
+
+def cmd_baseline(args) -> int:
+    from repro.testing.baselines import (DEFAULT_ENERGY_RTOL, BaselineError,
+                                         BaselineStore)
+
+    # the golden artifacts ALWAYS live in <dir>/store (BaselineStore pins
+    # the session's store there), so `baseline` takes no --store flag
+    session = Session(backend=backend_from_name(args.backend),
+                      num_input_samples=args.samples)
+    store = BaselineStore(args.dir, session=session)
+    cases = _baseline_cases(args.case)
+    if args.action == "record":
+        rtol = (args.energy_rtol if args.energy_rtol is not None
+                else DEFAULT_ENERGY_RTOL)
+        for case in cases:
+            res = store.record(case, energy_rtol=rtol)
+            b = res.baseline
+            kinds = sorted({w.kind for w in b.waste if w.kind}) or ["-"]
+            print(f"recorded {case.id}: detected={b.detected} "
+                  f"waste={len(b.waste)} kind={','.join(kinds)} "
+                  f"E_A={b.total_energy_a_j:.4e} J "
+                  f"E_B={b.total_energy_b_j:.4e} J")
+        print(f"{len(cases)} baselines -> {store.root}")
+        return 0
+    # check: always visit every case — one missing/corrupt golden must not
+    # mask the drift status of the cases after it
+    drifted = errors = 0
+    for case in cases:
+        try:
+            drifts = store.check(case, offline=args.offline)
+        except BaselineError as e:
+            errors += 1
+            print(f"ERROR {case.id}: {e}", file=sys.stderr)
+            continue
+        except Exception as e:                # corrupt JSON/.npz and the like
+            errors += 1
+            print(f"ERROR {case.id}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            continue
+        if drifts:
+            drifted += 1
+            print(f"DRIFT {case.id}: {len(drifts)} fields")
+            for d in drifts:
+                print(f"    {d}")
+        else:
+            print(f"ok    {case.id}")
+    mode = "offline replay" if args.offline else "live"
+    print(f"baseline check ({mode}): "
+          f"{len(cases) - drifted - errors}/{len(cases)} cases clean")
+    return 2 if errors else (1 if drifted else 0)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -232,9 +310,44 @@ def build_parser() -> argparse.ArgumentParser:
     prp.add_argument("--max-findings", type=int, default=10)
     prp.set_defaults(fn=cmd_report)
 
-    pa = sub.add_parser("artifacts", help="list the artifact store")
+    pa = sub.add_parser("artifacts",
+                        help="list or garbage-collect the artifact store")
     pa.add_argument("--store", default=None)
-    pa.set_defaults(fn=cmd_artifacts)
+    pa.set_defaults(fn=cmd_artifacts, action=None)
+    pasub = pa.add_subparsers(dest="action")
+    pap = pasub.add_parser("prune", help="GC the store, oldest first")
+    # SUPPRESS: when --store is not given after `prune`, the subparser must
+    # not plant its own default over a value parsed at the `artifacts` level
+    # (`artifacts --store X prune` would otherwise GC the DEFAULT store)
+    pap.add_argument("--store", default=argparse.SUPPRESS)
+    pap.add_argument("--max-bytes", default=None, metavar="N[K|M|G]",
+                     help="prune oldest artifacts until the store fits")
+    pap.add_argument("--keep-latest", type=int, default=0,
+                     help="never prune the N most recent artifacts")
+    pap.add_argument("--dry-run", action="store_true")
+    pap.set_defaults(fn=cmd_artifacts)
+
+    pb = sub.add_parser(
+        "baseline", help="golden energy baselines: record / check drift")
+    pbsub = pb.add_subparsers(dest="action", required=True)
+    for action in ("record", "check"):
+        px = pbsub.add_parser(action)
+        px.add_argument("case", nargs="*", metavar="CASE",
+                        help="zoo case ids (default: every registered case)")
+        px.add_argument("--dir", default="tests/baselines",
+                        help="baseline root (JSON expectations + store/; "
+                             "golden artifacts always live in <dir>/store)")
+        px.add_argument("--backend", default="analytic",
+                        choices=("analytic", "replay", "hlo"))
+        px.add_argument("--samples", type=int, default=2,
+                        help="input samples per capture (Hypothesis 1 probes)")
+        px.set_defaults(fn=cmd_baseline)
+    pbsub.choices["record"].add_argument(
+        "--energy-rtol", type=float, default=None,
+        help="declared tolerance for the recorded energy fields")
+    pbsub.choices["check"].add_argument(
+        "--offline", action="store_true",
+        help="replay from golden artifacts only; no instrumented execution")
     return p
 
 
@@ -245,6 +358,11 @@ def main(argv: list[str] | None = None) -> int:
     except BrokenPipeError:      # e.g. `... | head` closed stdout
         return 0
     except ArtifactValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    except ValueError as e:
+        # predictable user errors from compare/rank (backend or sample-seed
+        # mismatch, not-the-same-task gate) — message, not a traceback
         print(f"error: {e}", file=sys.stderr)
         return 2
 

@@ -291,6 +291,29 @@ class CandidateArtifact:
             return out
         return fetch
 
+    def materialize(self, *, sample_idxs: Sequence[int] | None = None,
+                    tids: Sequence[int] | None = None) -> int:
+        """Fetch + memoize concrete tensor values (default: every tensor on
+        every sample) so the saved artifact replays *any* future comparison
+        offline — not just the pairs a past compare happened to touch.
+
+        Used by pytest-plugin baseline recording (repro.testing): a gate
+        baseline must serve phase-2 fetches against candidate captures that
+        do not exist yet, so its fetch set is unknowable at record time.
+        Costs one selective re-execution per sample; requires a live
+        artifact.  Returns the number of values now memoized.
+        """
+        fetch = self.fetcher()
+        for k in (sample_idxs if sample_idxs is not None
+                  else range(self.num_samples)):
+            # default to the streamed-signature key set: exactly the tensors
+            # the instrumented run exposes (inputs + op outputs; closure
+            # constants are not part of the stream and cannot be fetched)
+            want = (sorted(tids) if tids is not None
+                    else sorted(self.sample_stats[int(k)]))
+            fetch(int(k), want)
+        return len(self.values)
+
     # -- serialization ------------------------------------------------------
     def save(self, path: str | Path) -> Path:
         path = Path(path)
@@ -391,6 +414,52 @@ class ArtifactStore:
 
     def delete(self, key: str) -> None:
         self.path_for(key).unlink(missing_ok=True)
+
+    def total_bytes(self) -> int:
+        return sum(self.path_for(k).stat().st_size for k in self.keys()
+                   if self.path_for(k).exists())
+
+    def prune(self, *, max_bytes: int | None = None, keep_latest: int = 0,
+              keep: Sequence[str] = (), dry_run: bool = False) -> list[str]:
+        """Garbage-collect the store, oldest artifacts first.
+
+        Deletes least-recently-written artifacts until the store holds at
+        most ``max_bytes`` (``None``: no size bound — everything unprotected
+        goes, i.e. ``prune(keep_latest=n)`` keeps exactly the ``n`` newest).
+        The ``keep_latest`` most recent artifacts and any key in ``keep``
+        are never deleted.  Content addressing makes pruning always safe:
+        a pruned capture is simply re-captured on next use, and surviving
+        keys keep hitting the cache.  Returns the deleted (or, with
+        ``dry_run``, would-be-deleted) keys, oldest first.
+        """
+        if max_bytes is None and keep_latest <= 0:
+            raise ValueError("prune() needs max_bytes and/or keep_latest; "
+                             "refusing to silently empty the store")
+        entries = []
+        for key in self.keys():
+            try:
+                st = self.path_for(key).stat()
+            except OSError:
+                continue
+            # ns resolution: same-second writes (coarse-mtime filesystems,
+            # rapid captures) must not fall through to hash-ordered ties
+            entries.append((st.st_mtime_ns, key, st.st_size))
+        entries.sort()                       # oldest first
+        protected = set(keep)
+        if keep_latest > 0:
+            protected.update(key for _, key, _ in entries[-keep_latest:])
+        total = sum(size for _, _, size in entries)
+        deleted: list[str] = []
+        for _, key, size in entries:
+            if max_bytes is not None and total <= max_bytes:
+                break
+            if key in protected:
+                continue
+            if not dry_run:
+                self.delete(key)
+            deleted.append(key)
+            total -= size
+        return deleted
 
     def entries(self) -> list[dict[str, Any]]:
         """Lightweight listing (name/key/backend/size) without full loads."""

@@ -21,15 +21,28 @@ from typing import Any, Mapping, Sequence
 
 from repro.core.graph import OpGraph, OpNode
 
+# The closed root-cause taxonomy.  Everything downstream — report
+# serialization, golden baselines (repro.testing.baselines), and the
+# mutation engine's expected-classification table (repro.testing.mutate) —
+# validates against this tuple instead of re-spelling the strings.
+DIAGNOSIS_KINDS = ("api_difference", "param_difference", "config_difference")
+
 
 @dataclasses.dataclass
 class Diagnosis:
-    kind: str                       # 'api_difference' | 'param_difference' | 'config_difference'
+    kind: str                       # one of DIAGNOSIS_KINDS
     deviation_point: str            # last common call frame
     detail: str
     key_variables: list[str]        # differing eqn params / config keys
     ops_a: list[str]
     ops_b: list[str]
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Diagnosis":
+        return cls(kind=d["kind"], deviation_point=d["deviation_point"],
+                   detail=d["detail"],
+                   key_variables=list(d["key_variables"]),
+                   ops_a=list(d["ops_a"]), ops_b=list(d["ops_b"]))
 
 
 def _common_prefix(p1: Sequence[str], p2: Sequence[str]) -> int:

@@ -52,12 +52,7 @@ class Finding:
         d = json.loads(data) if isinstance(data, str) else dict(data)
         diag = d.get("diagnosis")
         if diag is not None:
-            diag = Diagnosis(kind=diag["kind"],
-                             deviation_point=diag["deviation_point"],
-                             detail=diag["detail"],
-                             key_variables=list(diag["key_variables"]),
-                             ops_a=list(diag["ops_a"]),
-                             ops_b=list(diag["ops_b"]))
+            diag = Diagnosis.from_dict(diag)
         return cls(region_idx=d["region_idx"],
                    energy_a_j=d["energy_a_j"], energy_b_j=d["energy_b_j"],
                    time_a_s=d["time_a_s"], time_b_s=d["time_b_s"],

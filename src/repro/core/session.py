@@ -91,6 +91,52 @@ def make_samples(args: tuple, sample_seeds: Sequence[int]) -> tuple:
     return (args,) + tuple(_perturb(args, seed=int(s)) for s in sample_seeds)
 
 
+def _raise_uncapturable(fn: Callable, args: tuple, name: str,
+                        err: Exception) -> None:
+    """Re-raise a trace failure, upgrading it to an actionable TypeError when
+    ``fn``'s return value is not a pytree of arrays.
+
+    Tracing a candidate that returns a generator (or any non-array leaf)
+    fails deep inside JAX's pytree/aval machinery with a traceback that
+    never mentions the candidate.  The probe re-traces ``fn`` abstractly
+    (eval_shape: no FLOPs, no buffers) with the raw return value smuggled
+    out before JAX flattens it, so even a huge model is diagnosed for free;
+    if ``fn`` itself raises under tracing, the original error was genuine
+    and is re-raised untouched.
+    """
+    import inspect
+    from collections.abc import Iterator
+
+    seen: dict[str, Any] = {}
+
+    def probe_fn(*a):
+        seen["out"] = fn(*a)
+        return 0
+
+    try:
+        jax.eval_shape(probe_fn, *args)
+    except Exception:
+        raise err
+    probe = seen.get("out")
+    if inspect.isgenerator(probe) or isinstance(probe, Iterator):
+        raise TypeError(
+            f"Session.capture: candidate {name!r} returned a "
+            f"{type(probe).__name__}, which cannot be traced; capture needs "
+            "a function returning arrays (or pytrees of arrays) — "
+            "materialize the iterator first, e.g. `return tuple(...)`"
+        ) from None
+    bad = sorted({type(leaf).__name__
+                  for leaf in jax.tree_util.tree_leaves(probe)
+                  if not (hasattr(leaf, "shape") and hasattr(leaf, "dtype"))
+                  and not isinstance(leaf, (int, float, complex, bool))})
+    if bad:
+        raise TypeError(
+            f"Session.capture: candidate {name!r} returned non-array leaves "
+            f"of type {', '.join(bad)}; capture needs a function returning "
+            "arrays (or pytrees of arrays)") from None
+    raise err
+
+
 def _max_abs(x: np.ndarray) -> float:
     """max|x| as a float; 0.0 for zero-size leaves (np.max would raise)."""
     return float(np.max(np.abs(x))) if x.size else 0.0
@@ -264,7 +310,10 @@ class Session:
         sample_seeds = tuple(int(s) for s in sample_seeds)
         name = name or getattr(fn, "__name__", "candidate")
 
-        graph = trace(fn, *args, name=name)
+        try:
+            graph = trace(fn, *args, name=name)
+        except Exception as e:
+            _raise_uncapturable(fn, args, name, e)
         key = artifact_key(graph, args, sample_seeds, self.backend.id)
 
         if use_cache and self.store is not None and self.store.has(key):

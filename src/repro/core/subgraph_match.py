@@ -246,7 +246,7 @@ def match_subgraphs(
     n_nodes = max(len(graph_a.nodes), len(graph_b.nodes))
     degenerate = len(regions) <= max(2, n_nodes // 50)
     if (degenerate and stream_inputs_a is None and len(src_a) > 1
-            and n_nodes >= 20):
+            and n_nodes >= 10):
         best = regions
         src_b_set = set(src_b)
         for ta in src_a:

@@ -1,0 +1,56 @@
+"""Energy-regression testing subsystem (built on Session/CandidateArtifact).
+
+Magneton's value claim is detection *quality*: waste pinpointed at operator
+level with a correct root cause.  This package turns that claim into an
+automated, repeatable harness (MLPerf-Power-style) with three legs:
+
+* **Golden baselines** (:mod:`repro.testing.baselines`): every zoo case is
+  captured once into a content-addressed artifact store plus a committed
+  JSON expectation (detected?, waste sign, root-cause class, energies with
+  declared tolerances).  ``python -m repro.cli baseline record/check``
+  records and replays them; ``check --offline`` re-runs the comparison from
+  the persisted artifacts with zero instrumented execution, so finding
+  drift is caught even on machines that cannot run the candidates.
+
+* **A pytest plugin** (:mod:`repro.testing.pytest_plugin`): exposes
+  :func:`assert_no_energy_regression` and an ``energy_regression`` marker so
+  any model/kernel in ``src/repro`` can be gated in-suite against a recorded
+  baseline artifact.
+
+* **A mutation engine** (:mod:`repro.testing.mutate`): programmatically
+  injects the paper's waste patterns (dtype upcast, redundant recompute,
+  sync-in-loop, oversized padding, eager-vs-fused op splits) into clean
+  jaxprs from ``models/`` and ``kernels/`` and asserts the debugger detects
+  and correctly classifies each injected mutant — detector validation over a
+  *generated* scenario space instead of 20 fixed twins.
+"""
+
+from repro.testing.baselines import (Baseline, BaselineError, BaselineStore,
+                                     Drift, MissingBaselineError,
+                                     diff_baselines)
+from repro.testing.mutate import (MUTATIONS, CleanProgram, DtypeUpcast,
+                                  Mutation, OpSplit, OversizedPadding,
+                                  RedundantRecompute, Scenario, SyncInLoop,
+                                  ValidationResult, clean_programs,
+                                  generate_scenarios, make_mutant,
+                                  validate_detector)
+
+
+def __getattr__(name):
+    # pytest_plugin imports pytest at module scope; load it lazily so
+    # pytest-free consumers (the CLI's `baseline` commands, library users of
+    # the baseline/mutation APIs) never pay that dependency
+    if name == "assert_no_energy_regression":
+        from repro.testing.pytest_plugin import assert_no_energy_regression
+        return assert_no_energy_regression
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "Baseline", "BaselineError", "BaselineStore", "Drift",
+    "MissingBaselineError", "diff_baselines",
+    "MUTATIONS", "CleanProgram", "DtypeUpcast", "Mutation", "OpSplit",
+    "OversizedPadding", "RedundantRecompute", "Scenario", "SyncInLoop",
+    "ValidationResult", "clean_programs", "generate_scenarios", "make_mutant",
+    "validate_detector",
+    "assert_no_energy_regression",
+]

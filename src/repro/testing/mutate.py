@@ -1,0 +1,528 @@
+"""Mutation-based detector validation: inject waste patterns into clean jaxprs.
+
+The zoo (zoo/cases.py) validates detection on 20 hand-written twins; a
+matcher or diagnosis regression that only shows up elsewhere would slip
+through.  This module generates the twins instead: it traces a *clean*
+program from ``models/`` / ``kernels/`` to its jaxpr, then replays that
+jaxpr through a mutating interpreter that rewrites selected equations into a
+semantically-equivalent-but-wasteful form — the paper's waste taxonomy as
+executable mutations:
+
+=====================  =====================================================
+mutation class         injected pattern (expected diagnosis)
+=====================  =====================================================
+``dtype_upcast``       matmuls rebound with ``precision=HIGHEST`` — the
+                       c1/c8 MXU-fast-path misconfiguration
+                       (``param_difference``)
+``redundant_recompute``  matmuls executed twice and averaged — c15-style
+                       recomputation (``api_difference``)
+``sync_in_loop``       an all-reduce inserted after every matmul — the c9
+                       per-microbatch collective (``api_difference``)
+``oversized_padding``  matmul operands zero-padded to 2x and the result
+                       sliced back — dead rows through the MXU
+                       (``api_difference``)
+``op_split``           fused transcendentals (tanh/logistic/rsqrt/exp)
+                       re-expressed as multi-op eager formulas — the n1
+                       unfused-GELU pattern (``api_difference``)
+=====================  =====================================================
+
+Because the mutant is an ordinary Python callable replaying the clean jaxpr
+with rewritten binds, ``Session.capture`` traces it like any other candidate
+— the mutation materializes as real operators in the captured graph, and the
+differential pipeline must (1) gate it as the same task, (2) localize the
+injected region, and (3) diagnose the planted root cause.
+:func:`validate_detector` runs the full scenario matrix and reports
+detections and misclassifications per mutation class.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.diagnose import DIAGNOSIS_KINDS
+
+# Call-like higher-order primitives whose bodies the replay inlines so
+# mutations can see the equations inside (jnp.einsum / jnp.matmul are jitted
+# and would otherwise hide their dot_general behind a pjit eqn).  shard_map
+# is NOT inlined: its collectives need the mesh context, so it is re-bound
+# as-is, matching graph.py's treatment of scan/while/cond super-nodes.
+_INLINE_PRIMITIVES = ("pjit", "jit", "closed_call", "custom_jvp_call",
+                      "custom_vjp_call", "remat", "checkpoint",
+                      "custom_vjp_call_jaxpr")
+
+
+def _nested_jaxpr(eqn):
+    from repro.core.graph import _nested_jaxpr as nj
+    return nj(eqn)
+
+
+def _bind(eqn, invals):
+    subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+    out = eqn.primitive.bind(*subfuns, *invals, **bind_params)
+    return out if eqn.primitive.multiple_results else [out]
+
+
+def _bind_with_params(eqn, invals, params):
+    subfuns, bind_params = eqn.primitive.get_bind_params(params)
+    out = eqn.primitive.bind(*subfuns, *invals, **bind_params)
+    return out if eqn.primitive.multiple_results else [out]
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.result_type(x), jnp.floating)
+
+
+# ---------------------------------------------------------------------------
+# mutations
+# ---------------------------------------------------------------------------
+
+class Mutation:
+    """One waste pattern, applied at replay time.
+
+    Subclasses override :meth:`rewrite` to return replacement output values
+    for an equation (or ``None`` to leave it untouched).  ``max_sites``
+    bounds how many applicable sites are mutated (default: all);
+    ``applied`` counts the sites actually rewritten in the last trace.
+    """
+
+    name: str = "?"
+    expected_kinds: tuple[str, ...] = ()
+
+    def __init__(self, max_sites: int | None = None):
+        self.max_sites = max_sites
+        self.applied = 0
+
+    def reset(self) -> None:
+        self.applied = 0
+
+    def _take(self) -> bool:
+        if self.max_sites is not None and self.applied >= self.max_sites:
+            return False
+        self.applied += 1
+        return True
+
+    def rewrite(self, eqn, invals) -> list[Any] | None:
+        raise NotImplementedError
+
+    def on_eqn(self, eqn, invals) -> list[Any] | None:
+        out = self.rewrite(eqn, invals)
+        if out is not None and not isinstance(out, (list, tuple)):
+            out = [out]
+        return list(out) if out is not None else None
+
+
+class DtypeUpcast(Mutation):
+    """Rebind matmuls with ``precision=HIGHEST`` (3-pass fp32 emulation on
+    the MXU) — the c1/c8 misconfiguration.  Same operator multiset, one
+    diverging equation param, so the correct diagnosis is a
+    ``param_difference`` on ``dot_general.precision``."""
+
+    name = "dtype_upcast"
+    expected_kinds = ("param_difference", "config_difference")
+
+    def rewrite(self, eqn, invals):
+        if eqn.primitive.name != "dot_general":
+            return None
+        if "HIGHEST" in str(eqn.params.get("precision")).upper():
+            return None                      # already running upcast
+        if not self._take():
+            return None
+        params = dict(eqn.params)
+        params["precision"] = (jax.lax.Precision.HIGHEST,
+                               jax.lax.Precision.HIGHEST)
+        return _bind_with_params(eqn, invals, params)
+
+
+class RedundantRecompute(Mutation):
+    """Execute every matmul twice and average the (identical) results — the
+    c15 recompute-instead-of-share pattern.  ``0.5*a + 0.5*a`` is bitwise
+    ``a`` for finite floats, so outputs still match exactly."""
+
+    name = "redundant_recompute"
+    expected_kinds = ("api_difference",)
+
+    def rewrite(self, eqn, invals):
+        if eqn.primitive.name != "dot_general" or not _is_float(invals[0]):
+            return None                      # 0.5-averaging an int dot would
+        if not self._take():                 # promote its dtype
+            return None
+        (o1,) = _bind(eqn, invals)
+        (o2,) = _bind(eqn, invals)
+        return [o1 * 0.5 + o2 * 0.5]
+
+
+class SyncInLoop(Mutation):
+    """Insert an all-reduce after every matmul — the c9 per-microbatch
+    collective.  On the single-device mesh the psum is semantically the
+    identity, but the jaxpr carries a genuine collective that costs.py
+    prices as interconnect traffic."""
+
+    name = "sync_in_loop"
+    expected_kinds = ("api_difference",)
+
+    @staticmethod
+    def _all_reduce(x):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh
+        from jax.sharding import PartitionSpec as P
+        mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
+        return shard_map(lambda y: jax.lax.psum(y, "dp"), mesh=mesh,
+                         in_specs=P(), out_specs=P())(x)
+
+    def rewrite(self, eqn, invals):
+        if eqn.primitive.name != "dot_general" or not self._take():
+            return None
+        (out,) = _bind(eqn, invals)
+        return [self._all_reduce(out)] if _is_float(out) else [out]
+
+
+class OversizedPadding(Mutation):
+    """Zero-pad the lhs of every matmul to twice its leading free dimension
+    and slice the dead rows back off the result — over-allocated sequence /
+    batch padding pushed through the MXU."""
+
+    name = "oversized_padding"
+    expected_kinds = ("api_difference",)
+
+    def rewrite(self, eqn, invals):
+        if eqn.primitive.name != "dot_general":
+            return None
+        lhs, rhs = invals
+        (lc, _rc), (lb, _rb) = eqn.params["dimension_numbers"]
+        free = [d for d in range(lhs.ndim) if d not in set(lc) | set(lb)]
+        if not free or not self._take():
+            return None
+        d0, n = free[0], lhs.shape[free[0]]
+        cfg = [(0, n, 0) if d == d0 else (0, 0, 0) for d in range(lhs.ndim)]
+        padded = jax.lax.pad(lhs, jnp.zeros((), lhs.dtype), cfg)
+        (out,) = _bind(eqn, [padded, rhs])
+        out_axis = len(lb)                   # out dims: batch, lhs free, rhs free
+        return [jax.lax.slice_in_dim(out, 0, n, axis=out_axis)]
+
+
+class OpSplit(Mutation):
+    """Re-express fused transcendentals as eager multi-op formulas (one HBM
+    round-trip per op) — the n1 unfused-GELU backend pattern."""
+
+    name = "op_split"
+    expected_kinds = ("api_difference",)
+
+    def rewrite(self, eqn, invals):
+        # rsqrt is deliberately not split: it only ever runs on the (rows, 1)
+        # reduced statistics, a region too small for a 10% energy delta
+        prim = eqn.primitive.name
+        if prim not in ("tanh", "logistic", "exp"):
+            return None
+        (x,) = invals
+        if not _is_float(x) or not self._take():
+            return None
+        if prim == "tanh":
+            xc = jnp.clip(x, -20.0, 20.0)    # exp(2x) stays finite
+            t = jnp.exp(2.0 * xc)
+            return [(t - 1.0) / (t + 1.0)]
+        if prim == "logistic":
+            return [1.0 / (1.0 + jnp.exp(-x))]
+        h = jnp.exp(x * 0.5)                 # exp: split into two half-exps
+        return [h * h]
+
+
+MUTATIONS: dict[str, type[Mutation]] = {
+    m.name: m for m in (DtypeUpcast, RedundantRecompute, SyncInLoop,
+                        OversizedPadding, OpSplit)
+}
+
+assert all(k in DIAGNOSIS_KINDS for m in MUTATIONS.values()
+           for k in m.expected_kinds)
+
+
+def default_mutations() -> list[Mutation]:
+    return [cls() for cls in MUTATIONS.values()]
+
+
+# ---------------------------------------------------------------------------
+# jaxpr replay with mutation hooks
+# ---------------------------------------------------------------------------
+
+def _replay(closed, flat_args: Sequence[Any], mutation: Mutation) -> list[Any]:
+    from jax._src.core import Literal
+
+    jaxpr = closed.jaxpr
+    if len(flat_args) != len(jaxpr.invars):
+        raise ValueError(f"mutant expected {len(jaxpr.invars)} input leaves, "
+                         f"got {len(flat_args)}")
+
+    def run(eqns, env):
+        def read(v):
+            return v.val if isinstance(v, Literal) else env[v]
+
+        for eqn in eqns:
+            inner = _nested_jaxpr(eqn)
+            if inner is not None and eqn.primitive.name in _INLINE_PRIMITIVES:
+                sub_env = dict(zip(inner.jaxpr.constvars, inner.consts))
+                sub_env.update(zip(inner.jaxpr.invars,
+                                   [read(v) for v in eqn.invars]))
+                run(inner.jaxpr.eqns, sub_env)
+                for ov, iv in zip(eqn.outvars, inner.jaxpr.outvars):
+                    env[ov] = (iv.val if isinstance(iv, Literal)
+                               else sub_env[iv])
+                continue
+            invals = [read(v) for v in eqn.invars]
+            out = mutation.on_eqn(eqn, invals)
+            if out is None:
+                out = _bind(eqn, invals)
+            for v, val in zip(eqn.outvars, out):
+                if type(v).__name__ != "DropVar":
+                    env[v] = val
+        return env
+
+    env = dict(zip(jaxpr.constvars, closed.consts))
+    env.update(zip(jaxpr.invars, flat_args))
+    run(jaxpr.eqns, env)
+    return [v.val if isinstance(v, Literal) else env[v]
+            for v in jaxpr.outvars]
+
+
+def make_mutant(fn: Callable, mutation: Mutation, example_args: Sequence[Any],
+                *, name: str | None = None) -> tuple[Callable, int]:
+    """Build the mutated twin of ``fn`` and count its mutated sites.
+
+    Returns ``(mutant, sites)``; ``sites == 0`` means the mutation found no
+    applicable equation in ``fn``'s jaxpr (scenario not generated).  The
+    mutant is an ordinary callable over the same argument pytree, so it can
+    be captured, jitted, or compared like any hand-written candidate.
+    """
+    example_args = tuple(example_args)
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
+    out_tree = jax.tree_util.tree_structure(out_shape)
+
+    def mutant(*args):
+        mutation.reset()
+        outs = _replay(closed, jax.tree_util.tree_leaves(args), mutation)
+        return jax.tree_util.tree_unflatten(out_tree, outs)
+
+    mutant.__name__ = name or (f"{getattr(fn, '__name__', 'fn')}"
+                               f"__{mutation.name}")
+    mutation.reset()
+    jax.eval_shape(mutant, *example_args)
+    return mutant, mutation.applied
+
+
+# ---------------------------------------------------------------------------
+# clean programs (models/ + kernels/)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CleanProgram:
+    """A small, fast, waste-free program drawn from the real model zoo."""
+
+    name: str
+    fn: Callable
+    make_args: Callable[[], tuple]
+
+
+def clean_programs() -> list[CleanProgram]:
+    """Clean programs spanning matmul, attention, norm, and activation ops.
+
+    Sizes are small (fast through the instrumenting interpreter) but the
+    matmul contraction dims stay >= 64 so the dots have enough arithmetic
+    intensity for a flop-side mutation (dtype_upcast's 3x fp32 emulation)
+    to clear the 10% region-energy detection threshold over the
+    memory-access energy floor.
+    """
+    from repro.kernels import ref
+    from repro.models import layers
+
+    k = jax.random.key(20260801)
+    ks = list(jax.random.split(k, 8))
+
+    mlp_params = layers.init_params(layers.mlp_schema(128, 256, "float32"),
+                                    ks[0])
+
+    def mlp_block(x):
+        return layers.mlp_apply(mlp_params, x)
+
+    scale = jax.random.normal(ks[1], (128,), jnp.float32) * 0.1 + 1.0
+    w_norm = jax.random.normal(ks[2], (128, 128), jnp.float32) * 0.1
+    w_gelu = jax.random.normal(ks[3], (128, 128), jnp.float32) * 0.1
+
+    def rmsnorm_linear(x):
+        return layers.rms_norm(x, scale) @ w_norm
+
+    def gelu_dense(x):
+        return ref.gelu_tanh(x @ w_gelu)
+
+    def attention_block(q, k_, v):
+        return ref.attention(q, k_, v, causal=False)
+
+    def _qkv():
+        kq, kk, kv = jax.random.split(ks[4], 3)
+        shape = (1, 2, 64, 128)   # head_dim 128: the score matmul's 3x fp32
+        # flop term must outweigh its memory-access + idle energy floor
+        return (jax.random.normal(kq, shape, jnp.float32),
+                jax.random.normal(kk, shape, jnp.float32),
+                jax.random.normal(kv, shape, jnp.float32))
+
+    return [
+        CleanProgram("mlp_swiglu", mlp_block,
+                     lambda: (jax.random.normal(ks[5], (2, 32, 128),
+                                                jnp.float32),)),
+        CleanProgram("attention_ref", attention_block, _qkv),
+        CleanProgram("rmsnorm_linear", rmsnorm_linear,
+                     lambda: (jax.random.normal(ks[6], (64, 128),
+                                                jnp.float32),)),
+        CleanProgram("gelu_dense", gelu_dense,
+                     lambda: (jax.random.normal(ks[7], (64, 128),
+                                                jnp.float32),)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# scenario generation + detector validation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Scenario:
+    program: CleanProgram
+    mutation: Mutation
+    mutant: Callable
+    sites: int
+
+    @property
+    def id(self) -> str:
+        return f"{self.mutation.name}:{self.program.name}"
+
+
+def generate_scenarios(programs: Sequence[CleanProgram] | None = None,
+                       mutation_names: Sequence[str] | None = None
+                       ) -> list[Scenario]:
+    """The cross product of clean programs x mutations, minus inapplicable
+    pairs (mutations that found no site in a program's jaxpr)."""
+    programs = list(programs) if programs is not None else clean_programs()
+    names = list(mutation_names) if mutation_names is not None \
+        else list(MUTATIONS)
+    out: list[Scenario] = []
+    for prog in programs:
+        args = prog.make_args()
+        for mname in names:
+            mutation = MUTATIONS[mname]()
+            mutant, sites = make_mutant(prog.fn, mutation, args)
+            if sites == 0:
+                continue
+            out.append(Scenario(program=prog, mutation=mutation,
+                                mutant=mutant, sites=sites))
+    return out
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    scenario_id: str
+    program: str
+    mutation: str
+    sites: int
+    detected: bool
+    kinds: list[str]             # diagnosis kinds of the waste findings
+    kind_ok: bool                # some kind matches the mutation's expectation
+    expected_kinds: tuple[str, ...]
+    energy_clean_j: float
+    energy_mutant_j: float
+    error: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.detected and self.kind_ok and self.error is None
+
+
+@dataclasses.dataclass
+class ValidationResult:
+    """Detector validation over the generated scenario space."""
+
+    results: list[ScenarioResult]
+
+    def by_class(self) -> dict[str, list[ScenarioResult]]:
+        out: dict[str, list[ScenarioResult]] = {}
+        for r in self.results:
+            out.setdefault(r.mutation, []).append(r)
+        return out
+
+    def misclassified(self) -> dict[str, list[ScenarioResult]]:
+        """Per mutation class: scenarios detected but with a wrong root
+        cause, or not detected at all."""
+        return {cls: bad for cls, rs in self.by_class().items()
+                if (bad := [r for r in rs if not r.ok])}
+
+    def validated_classes(self, min_programs: int = 2) -> set[str]:
+        """Mutation classes detected AND correctly classified on at least
+        ``min_programs`` distinct clean programs."""
+        return {cls for cls, rs in self.by_class().items()
+                if len({r.program for r in rs if r.ok}) >= min_programs}
+
+    def summary(self) -> str:
+        lines = ["=== mutation-based detector validation ==="]
+        for cls, rs in sorted(self.by_class().items()):
+            ok = [r for r in rs if r.ok]
+            lines.append(
+                f"{cls:22} detected+classified on "
+                f"{len({r.program for r in ok})}/{len({r.program for r in rs})}"
+                f" programs ({len(ok)}/{len(rs)} scenarios)")
+            for r in rs:
+                if not r.ok:
+                    why = (r.error or
+                           ("not detected" if not r.detected else
+                            f"misclassified: got {r.kinds or ['<none>']}, "
+                            f"expected one of {list(r.expected_kinds)}"))
+                    lines.append(f"    MISS {r.scenario_id}: {why}")
+        return "\n".join(lines)
+
+
+def validate_detector(scenarios: Sequence[Scenario] | None = None,
+                      session=None, *, output_rtol: float = 1e-2
+                      ) -> ValidationResult:
+    """Capture each mutant against its clean twin and score the debugger.
+
+    For every scenario the mutant is candidate A and the clean program
+    candidate B; success means (1) at least one confirmed energy-waste
+    region with the mutant on the wasteful side and (2) a diagnosis whose
+    kind matches the mutation class's expectation.  Clean programs are
+    captured once and reused across their scenarios.
+    """
+    from repro.core.session import Session
+
+    session = session or Session()
+    scenarios = list(scenarios) if scenarios is not None \
+        else generate_scenarios()
+    clean_arts: dict[str, Any] = {}
+    clean_args: dict[str, tuple] = {}
+    results: list[ScenarioResult] = []
+    for sc in scenarios:
+        pname = sc.program.name
+        if pname not in clean_arts:
+            clean_args[pname] = sc.program.make_args()
+            clean_arts[pname] = session.capture(
+                sc.program.fn, clean_args[pname], name=pname)
+        clean = clean_arts[pname]
+        try:
+            mut_art = session.capture(sc.mutant, clean_args[pname],
+                                      name=sc.mutant.__name__)
+            rep = session.compare(mut_art, clean, output_rtol=output_rtol)
+            waste = [f for f in rep.waste_findings if f.wasteful_side == "A"]
+            kinds = [f.diagnosis.kind for f in waste if f.diagnosis]
+            results.append(ScenarioResult(
+                scenario_id=sc.id, program=pname, mutation=sc.mutation.name,
+                sites=sc.sites, detected=bool(waste), kinds=kinds,
+                kind_ok=any(k in sc.mutation.expected_kinds for k in kinds),
+                expected_kinds=sc.mutation.expected_kinds,
+                energy_clean_j=clean.total_energy_j,
+                energy_mutant_j=mut_art.total_energy_j))
+        except Exception as e:               # scenario-level isolation
+            results.append(ScenarioResult(
+                scenario_id=sc.id, program=pname, mutation=sc.mutation.name,
+                sites=sc.sites, detected=False, kinds=[], kind_ok=False,
+                expected_kinds=sc.mutation.expected_kinds,
+                energy_clean_j=float("nan"), energy_mutant_j=float("nan"),
+                error=f"{type(e).__name__}: {e}"))
+    return ValidationResult(results)

@@ -1,0 +1,167 @@
+"""Pytest plugin: gate any model/kernel on a recorded energy baseline.
+
+Loaded via ``pytest_plugins = ["repro.testing.pytest_plugin"]`` (this repo's
+``tests/conftest.py`` does) or ``-p repro.testing.pytest_plugin``.  Two
+surfaces:
+
+* :func:`assert_no_energy_regression` — capture a candidate and fail the
+  test if it spends more energy than its recorded baseline artifact, either
+  in total (beyond ``energy_rtol``) or in any confirmed waste region of the
+  differential comparison.  Missing baselines fail with instructions; set
+  ``MAGNETON_RECORD_BASELINES=1`` (or pass ``record=True``) to record them.
+* the ``energy_regression`` marker — tags energy-gate tests so they can be
+  selected (``-m energy_regression``) or skipped (``-m "not
+  energy_regression"``) as a suite, and lets ``--energy-record`` flip every
+  gate in the run into record mode at once.
+
+Typical in-suite gate::
+
+    @pytest.mark.energy_regression
+    def test_rmsnorm_energy(energy_gate):
+        x, w = make_inputs()
+        energy_gate(my_rmsnorm, (x, w), baseline="rmsnorm_256x512")
+
+The baseline name resolves to ``<baseline-dir>/kernels/<name>.npz`` (a
+serialized :class:`~repro.core.artifact.CandidateArtifact` with all tensor
+values materialized, so the differential comparison replays offline).
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Any, Callable, Sequence
+
+import pytest
+
+_RECORD_ENV = "MAGNETON_RECORD_BASELINES"
+_DIR_ENV = "MAGNETON_BASELINE_DIR"
+_DEFAULT_DIR = "tests/baselines"
+_KERNEL_SUBDIR = "kernels"
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "energy_regression: energy-baseline gate (select with "
+        "'-m energy_regression'; record baselines with --energy-record or "
+        f"{_RECORD_ENV}=1)")
+
+
+def pytest_addoption(parser):
+    group = parser.getgroup("magneton")
+    group.addoption(
+        "--energy-record", action="store_true", default=False,
+        help="record missing/changed energy baselines instead of failing")
+    parser.addini("energy_baseline_dir", default=_DEFAULT_DIR,
+                  help="root directory for recorded energy baselines")
+
+
+def _baseline_dir(config) -> Path:
+    env = os.environ.get(_DIR_ENV)
+    return Path(env) if env else Path(config.getini("energy_baseline_dir"))
+
+
+@pytest.fixture
+def energy_baseline_dir(request) -> Path:
+    return _baseline_dir(request.config)
+
+
+@pytest.fixture
+def energy_gate(request, energy_baseline_dir) -> Callable:
+    """:func:`assert_no_energy_regression` bound to the configured baseline
+    dir and the ``--energy-record`` flag."""
+    record = bool(request.config.getoption("--energy-record")
+                  or os.environ.get(_RECORD_ENV))
+
+    def gate(fn, args, *, baseline: str, **kw):
+        kw.setdefault("record", record)
+        kw.setdefault("baseline_dir", energy_baseline_dir)
+        return assert_no_energy_regression(fn, args, baseline, **kw)
+
+    return gate
+
+
+def _resolve_baseline(baseline: str | Path, baseline_dir: str | Path | None
+                      ) -> Path:
+    p = Path(baseline)
+    if p.suffix == ".npz":                  # explicit path
+        return p
+    root = Path(baseline_dir) if baseline_dir is not None \
+        else Path(os.environ.get(_DIR_ENV, _DEFAULT_DIR))
+    return root / _KERNEL_SUBDIR / f"{p}.npz"
+
+
+def assert_no_energy_regression(fn: Callable, args: Sequence[Any],
+                                baseline: str | Path, *,
+                                name: str | None = None,
+                                session=None,
+                                energy_rtol: float = 0.05,
+                                output_rtol: float = 1e-2,
+                                record: bool | None = None,
+                                baseline_dir: str | Path | None = None):
+    """Fail (via ``pytest.fail``) if ``fn`` regressed vs its baseline.
+
+    The baseline is a recorded :class:`CandidateArtifact`; the check is
+    differential, not a bare wattmeter read: the fresh capture and the
+    baseline run through ``Session.compare``, so a regression is reported
+    with the wasteful region, root cause, and energy delta — and an
+    *improvement* (the new side cheaper) passes, updating nothing.
+
+    Returns the comparison :class:`~repro.core.report.Report` (``None``
+    when the baseline was just recorded or the capture is bit-identical).
+    """
+    from repro.core.artifact import CandidateArtifact
+    from repro.core.session import Session
+
+    path = _resolve_baseline(baseline, baseline_dir)
+    if record is None:
+        record = bool(os.environ.get(_RECORD_ENV))
+    session = session or Session()
+    name = name or getattr(fn, "__name__", "candidate")
+
+    if record:
+        # record mode (re)blesses the CURRENT implementation — missing
+        # baselines are created and existing ones overwritten, so an
+        # intentional energy change is accepted by re-running with the flag
+        art = session.capture(fn, args, name=name)
+        art.materialize()               # offline-replayable golden artifact
+        art.save(path)
+        return None
+    if not path.exists():
+        pytest.fail(
+            f"no energy baseline at {path} for {name!r}; record it with "
+            f"{_RECORD_ENV}=1 (or --energy-record) and commit the file",
+            pytrace=False)
+
+    base = CandidateArtifact.load(path)
+    if base.backend_id != session.backend.id:
+        pytest.fail(
+            f"baseline {path} was priced by backend {base.backend_id!r} but "
+            f"the session uses {session.backend.id!r}; re-record the "
+            "baseline or pass a matching session", pytrace=False)
+    art = session.capture(fn, args, name=name,
+                          sample_seeds=base.sample_seeds)
+    if art.key == base.key:
+        return None                     # bit-identical capture: no drift
+
+    problems: list[str] = []
+    if art.total_energy_j > base.total_energy_j * (1.0 + energy_rtol):
+        pct = (art.total_energy_j / base.total_energy_j - 1.0) * 100.0
+        problems.append(
+            f"total modeled energy regressed {pct:+.1f}% "
+            f"({base.total_energy_j:.4e} J -> {art.total_energy_j:.4e} J, "
+            f"tolerance {energy_rtol:.1%})")
+    report = session.compare(art, base, output_rtol=output_rtol)
+    regressions = [f for f in report.waste_findings if f.wasteful_side == "A"]
+    for f in regressions:
+        diag = f.diagnosis
+        problems.append(
+            f"region {f.region_idx}: new implementation wastes "
+            f"{f.energy_a_j - f.energy_b_j:.3e} J "
+            f"(+{f.energy_delta_pct:.1f}%)"
+            + (f" — {diag.kind}: {diag.detail}" if diag else ""))
+    if problems:
+        pytest.fail(f"energy regression in {name!r} vs baseline {path}:\n  "
+                    + "\n  ".join(problems), pytrace=False)
+    return report

@@ -29,6 +29,14 @@ def _keys(n: int) -> list[jax.Array]:
     return list(jax.random.split(_KEY, n))
 
 
+# Accepted spellings for the two sides of a case (CLI specs, artifact
+# provenance metadata, baseline tooling) -> canonical attribute name.
+SIDE_ALIASES: Mapping[str, str] = {
+    "ineff": "inefficient", "inefficient": "inefficient", "a": "inefficient",
+    "eff": "efficient", "efficient": "efficient", "b": "efficient",
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class Case:
     id: str                       # our id
@@ -45,6 +53,17 @@ class Case:
     output_rtol: float = 1e-2
     match_rtol: float = 1e-3
     notes: str = ""
+
+    def side(self, which: str) -> tuple[Callable, Mapping[str, Any] | None]:
+        """``(fn, config)`` for one side, accepting any SIDE_ALIASES
+        spelling (``ineff``/``a``/``efficient``/...)."""
+        canon = SIDE_ALIASES.get(which)
+        if canon is None:
+            raise KeyError(f"unknown case side {which!r}; expected one of "
+                           f"{sorted(SIDE_ALIASES)}")
+        fn = getattr(self, canon)
+        cfg = self.config_a if canon == "inefficient" else self.config_b
+        return fn, cfg
 
 
 # Registry: case id -> Case, insertion-ordered.  ``CASES`` is kept as the

@@ -8,7 +8,43 @@ import pytest
 
 warnings.filterwarnings("ignore")
 
+# Energy-baseline gates (assert_no_energy_regression / energy_gate /
+# the `energy_regression` marker) come from the in-tree plugin.
+pytest_plugins = ["repro.testing.pytest_plugin"]
+
 
 @pytest.fixture(scope="session")
 def key():
     return jax.random.key(0)
+
+
+@pytest.fixture(scope="session")
+def golden(tmp_path_factory):
+    """Golden baselines for the whole zoo, recorded once per test session.
+
+    Records every registered case into a fresh BaselineStore (artifacts +
+    committed-style JSON under a session tmp dir) and keeps the lightweight
+    record-time products — baseline, report, both traced graphs — for
+    downstream suites (offline drift replay, backend parity).  The heavy
+    CandidateArtifacts are dropped; their bytes live in the store on disk.
+    """
+    from repro.testing.baselines import BaselineStore
+    from repro.zoo import cases as zoo
+
+    import shutil
+
+    root = tmp_path_factory.mktemp("golden-baselines")
+    store = BaselineStore(root)
+    records = {}
+    for case in zoo.list_cases():
+        res = store.record(case)
+        records[case.id] = {
+            "baseline": res.baseline,
+            "report": res.report,
+            "graph_a": res.art_a.graph,
+            "graph_b": res.art_b.graph,
+        }
+    yield {"root": root, "records": records}
+    # the artifact store is multi-GB; don't let pytest's retained tmp dirs
+    # (default: last 3 sessions) accumulate it in /tmp
+    shutil.rmtree(root / "store", ignore_errors=True)

@@ -1,0 +1,92 @@
+"""ArtifactStore garbage collection (prune) — the ROADMAP store-size-cap
+follow-up.  The load-bearing property: pruning is always *safe* under
+content addressing — surviving keys keep serving cache hits, pruned keys
+simply re-capture."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.interp as interp
+from repro.core.artifact import ArtifactStore
+from repro.core.session import Session
+
+
+def _capture_n(session, n_fns):
+    """n distinct single-op candidates -> n distinct store keys."""
+    arts = []
+    for i in range(n_fns):
+        c = float(i + 1)
+        x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(4, 4))
+        arts.append(session.capture(lambda x, c=c: x * c, (x,), name=f"f{i}"))
+    return arts
+
+
+def test_cache_hits_survive_pruning_of_unrelated_keys(tmp_path, monkeypatch):
+    store = ArtifactStore(tmp_path)
+    session = Session(store=store)
+    arts = _capture_n(session, 3)
+    assert len(store.keys()) == 3
+
+    deleted = store.prune(keep_latest=2)
+    assert deleted == [arts[0].key]           # oldest unprotected key only
+
+    calls = {"n": 0}
+    orig = interp.run_instrumented
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(interp, "run_instrumented", spy)
+    # the surviving (unrelated) keys still serve cache hits: zero execution
+    x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(4, 4))
+    hit = session.capture(lambda x, c=3.0: x * c, (x,), name="f2")
+    assert hit.meta.get("cache_hit") and calls["n"] == 0
+    # the pruned key re-captures transparently
+    miss = session.capture(lambda x, c=1.0: x * c, (x,), name="f0")
+    assert not miss.meta.get("cache_hit") and calls["n"] > 0
+    assert miss.key == arts[0].key            # same content address as before
+
+
+def test_prune_max_bytes_deletes_oldest_first(tmp_path):
+    store = ArtifactStore(tmp_path)
+    session = Session(store=store)
+    arts = _capture_n(session, 4)
+    per = store.path_for(arts[0].key).stat().st_size
+    deleted = store.prune(max_bytes=int(per * 2.5))
+    assert deleted == [arts[0].key, arts[1].key]
+    assert store.total_bytes() <= per * 2.5
+    assert set(store.keys()) == {arts[2].key, arts[3].key}
+
+
+def test_prune_keep_and_dry_run(tmp_path):
+    store = ArtifactStore(tmp_path)
+    session = Session(store=store)
+    arts = _capture_n(session, 3)
+
+    would = store.prune(max_bytes=0, keep=[arts[1].key], keep_latest=1,
+                        dry_run=True)
+    assert would == [arts[0].key]             # 1 protected by keep, 1 by latest
+    assert len(store.keys()) == 3             # dry run deleted nothing
+
+    deleted = store.prune(max_bytes=0, keep=[arts[1].key], keep_latest=1)
+    assert deleted == [arts[0].key]
+    assert set(store.keys()) == {arts[1].key, arts[2].key}
+
+
+def test_prune_requires_a_bound(tmp_path):
+    with pytest.raises(ValueError, match="max_bytes and/or keep_latest"):
+        ArtifactStore(tmp_path).prune()
+
+
+def test_cli_prune_store_flag_survives_either_position():
+    """`artifacts --store X prune` must GC store X, not let the prune
+    subparser's default clobber the parent-parsed value (a silent
+    wrong-store deletion)."""
+    from repro.cli import build_parser
+
+    p = build_parser()
+    assert p.parse_args(["artifacts", "--store", "/X", "prune"]).store == "/X"
+    assert p.parse_args(["artifacts", "prune", "--store", "/Y"]).store == "/Y"
+    assert p.parse_args(["artifacts", "prune"]).store is None

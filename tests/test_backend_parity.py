@@ -1,0 +1,81 @@
+"""Backend parity: AnalyticalBackend vs HloCostBackend waste-sign agreement.
+
+Regions come from matching and are backend-independent, so parity is tested
+on the pricing alone: for every zoo case the analytic pipeline detects, the
+HLO-calibrated backend must price the SAME matched regions (and the module
+totals) with the same waste sign.  Disagreements are not silently tolerated
+and not silently trusted either — they are pinned in
+KNOWN_SIGN_DISAGREEMENTS with the reason, and the test fails if one
+appears, disappears, or flips, forcing the ledger to stay current.
+
+Measured on this container (jax CPU, TPU-v5e spec): 14/19 cases agree; the
+5 exceptions are exactly the cases whose waste the XLA optimizer can erase
+at compile time, which the analytic operator-level model (deliberately,
+matching the paper's pre-fusion execution model) still charges for.
+"""
+
+import pytest
+
+from repro.core.energy import HloCostBackend, subgraph_energy
+from repro.zoo import cases as zoo
+
+# case id -> why compiled-cost accounting disagrees with the operator model.
+KNOWN_SIGN_DISAGREEMENTS = {
+    "c2-cache-copy": "XLA lowers the concat cache-copy to the same bytes as "
+                     "the dynamic-update-slice (copy elision): module totals "
+                     "come out equal, so the HLO-rescaled sign vanishes",
+    "c9-join-psum": "whole-module HLO totals are redistributed over the "
+                    "analytic breakdown; the scan-body collectives have no "
+                    "per-iteration attribution post-compilation and the "
+                    "accumulate-then-reduce twin prices higher",
+    "c15-expm": "XLA CSEs the recomputed Taylor powers, so the redundant "
+                "twin compiles to FEWER flops than the shared-power one",
+    "c16-count-nonzero": "the materialized f32 indicator copy is fused away "
+                         "by XLA; compiled byte totals for both twins are "
+                         "identical",
+    "n1-gelu-backend": "the Pallas fused-GELU runs via interpret-mode "
+                       "callbacks on CPU whose HLO is far larger than the "
+                       "5-op eager form, inverting the compiled totals",
+}
+
+DETECT_CASES = [c.id for c in zoo.list_cases() if c.expect_detect]
+pytestmark = pytest.mark.slow
+
+
+@pytest.mark.parametrize("cid", DETECT_CASES)
+def test_backends_agree_on_waste_sign(cid, golden):
+    case = zoo.get_case(cid)
+    rec = golden["records"][cid]
+    waste = [f for f in rec["report"].waste_findings
+             if f.wasteful_side == "A"]
+    assert waste, f"{cid}: analytic pipeline no longer detects the waste"
+
+    hlo = HloCostBackend()
+    args = case.make_args()
+    prof_a = hlo.profile(rec["graph_a"], args)
+    prof_b = hlo.profile(rec["graph_b"], args)
+    regions_agree = all(
+        subgraph_energy(prof_a, f.nodes_a) > subgraph_energy(prof_b,
+                                                             f.nodes_b)
+        for f in waste)
+    totals_agree = prof_a.total_energy_j > prof_b.total_energy_j
+    agree = regions_agree and totals_agree
+
+    if cid in KNOWN_SIGN_DISAGREEMENTS:
+        assert not agree, (
+            f"{cid}: backends now AGREE — the documented disagreement "
+            f"({KNOWN_SIGN_DISAGREEMENTS[cid]}) is resolved; remove it from "
+            "KNOWN_SIGN_DISAGREEMENTS")
+        pytest.xfail(f"documented sign disagreement: "
+                     f"{KNOWN_SIGN_DISAGREEMENTS[cid]}")
+    assert agree, (
+        f"{cid}: analytic and HLO-calibrated backends disagree on the waste "
+        f"sign (regions_agree={regions_agree}, totals_agree={totals_agree}, "
+        f"hlo A={prof_a.total_energy_j:.3e} J vs "
+        f"B={prof_b.total_energy_j:.3e} J) — understand and either fix the "
+        "pricing or document it in KNOWN_SIGN_DISAGREEMENTS")
+
+
+def test_disagreement_ledger_names_real_cases():
+    for cid in KNOWN_SIGN_DISAGREEMENTS:
+        assert zoo.get_case(cid).expect_detect, cid

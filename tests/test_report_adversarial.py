@@ -1,0 +1,145 @@
+"""Report / RankResult JSON round-trips under adversarial inputs.
+
+Stored reports are the regression-harness's currency (baseline JSON, CLI
+--json, offline re-render), so serialization must survive the hostile
+corners: empty finding lists, NaN/inf energies (a replay backend on a
+zero-time op), unicode case ids.  Property-based versions run when
+hypothesis is installed (tests/_hyp.py shim skips them otherwise).
+"""
+
+import json
+import math
+
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.diagnose import DIAGNOSIS_KINDS, Diagnosis
+from repro.core.report import Finding, Report
+from repro.core.session import RankResult
+
+UNICODE_IDS = ["cas-Δ✓", "日本語-case", "naïve—twin", "c6‮growtham",
+               "emoji-🔥🐍", ""]
+
+
+def _finding(e_a=1.0, e_b=0.5, cls="energy_waste", diag=True):
+    return Finding(
+        region_idx=0, energy_a_j=e_a, energy_b_j=e_b,
+        time_a_s=1e-3, time_b_s=2e-3, nodes_a=[0, 1], nodes_b=[2],
+        classification=cls, wasteful_side="A",
+        diagnosis=Diagnosis(kind=DIAGNOSIS_KINDS[0],
+                            deviation_point="f.py:1:fn", detail="d",
+                            key_variables=["precision"], ops_a=["dot"],
+                            ops_b=["dot"]) if diag else None)
+
+
+def _roundtrip_report(rep: Report) -> Report:
+    again = Report.from_json(rep.to_json())
+    assert again.to_json() == rep.to_json()
+    return again
+
+
+def test_report_roundtrip_empty_findings():
+    rep = Report(name_a="a", name_b="b", findings=[],
+                 total_energy_a_j=0.0, total_energy_b_j=0.0, meta={})
+    again = _roundtrip_report(rep)
+    assert again.findings == [] and again.waste_findings == []
+    assert "energy-waste findings: 0" in again.render()
+
+
+@pytest.mark.parametrize("val", [float("nan"), float("inf"), float("-inf"),
+                                 -0.0, 5e-324])
+def test_report_roundtrip_non_finite_energies(val):
+    rep = Report(name_a="a", name_b="b",
+                 findings=[_finding(e_a=val, e_b=val)],
+                 total_energy_a_j=val, total_energy_b_j=val, meta={})
+    again = _roundtrip_report(rep)
+    got = again.findings[0].energy_a_j
+    assert (math.isnan(got) if math.isnan(val) else got == val)
+    again.render()                            # must not raise on NaN/inf
+    # derived percentages stay well-defined objects, never raise
+    _ = again.findings[0].energy_delta_pct
+    _ = again.findings[0].perf_delta_pct
+
+
+@pytest.mark.parametrize("cid", UNICODE_IDS)
+def test_report_roundtrip_unicode_case_ids(cid):
+    rep = Report(name_a=cid, name_b=cid[::-1] or "b",
+                 findings=[_finding()],
+                 total_energy_a_j=1.0, total_energy_b_j=0.5,
+                 meta={"case": cid, "energy_model": cid})
+    again = _roundtrip_report(rep)
+    assert again.name_a == cid and again.meta["case"] == cid
+    assert cid in again.render() or not cid
+
+
+def test_rank_result_roundtrip_adversarial():
+    rep = Report(name_a=UNICODE_IDS[0], name_b=UNICODE_IDS[1],
+                 findings=[], total_energy_a_j=float("nan"),
+                 total_energy_b_j=float("inf"), meta={})
+    rr = RankResult(names=[UNICODE_IDS[0], UNICODE_IDS[1]],
+                    keys=["k0", "k1"],
+                    total_energy_j=[float("nan"), float("inf")],
+                    waste_matrix=[[0.0, float("nan")], [float("inf"), 0.0]],
+                    reports={(0, 1): rep})
+    again = RankResult.from_json(rr.to_json())
+    assert again.to_json() == rr.to_json()
+    assert again.names == rr.names
+    assert math.isnan(again.waste_matrix[0][1])
+    again.render()
+
+
+def test_rank_result_roundtrip_no_reports():
+    rr = RankResult(names=["a", "b"], keys=["x", "y"],
+                    total_energy_j=[1.0, 2.0],
+                    waste_matrix=[[0.0, 0.0], [1.0, 0.0]], reports={})
+    again = RankResult.from_json(json.loads(rr.to_json()))
+    assert again.to_json() == rr.to_json() and again.reports == {}
+
+
+def test_finding_roundtrip_without_diagnosis():
+    f = _finding(diag=False)
+    assert Finding.from_json(json.dumps(
+        json.loads(Report(name_a="a", name_b="b", findings=[f],
+                          total_energy_a_j=1, total_energy_b_j=1,
+                          meta={}).to_json())["findings"][0])) == f
+
+
+# ---------------------------------------------------------------------------
+# property-based versions (skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+_energy = st.floats(allow_nan=True, allow_infinity=True)
+_ids = st.text(max_size=24)
+
+
+@settings(max_examples=30, deadline=None)
+@given(name_a=_ids, name_b=_ids, e_a=_energy, e_b=_energy,
+       t_a=_energy, t_b=_energy)
+def test_report_roundtrip_property(name_a, name_b, e_a, e_b, t_a, t_b):
+    f = Finding(region_idx=0, energy_a_j=e_a, energy_b_j=e_b,
+                time_a_s=t_a, time_b_s=t_b, nodes_a=[], nodes_b=[],
+                classification="comparable", wasteful_side="-",
+                diagnosis=None)
+    rep = Report(name_a=name_a, name_b=name_b, findings=[f],
+                 total_energy_a_j=e_a, total_energy_b_j=e_b,
+                 meta={"case": name_a})
+    again = Report.from_json(rep.to_json())
+    assert again.to_json() == rep.to_json()
+    again.render()
+
+
+@settings(max_examples=20, deadline=None)
+@given(names=st.lists(_ids, min_size=2, max_size=4, unique=True),
+       fill=_energy)
+def test_rank_matrix_roundtrip_property(names, fill):
+    n = len(names)
+    rr = RankResult(names=names, keys=[f"k{i}" for i in range(n)],
+                    total_energy_j=[fill] * n,
+                    waste_matrix=[[fill] * n for _ in range(n)], reports={})
+    again = RankResult.from_json(rr.to_json())
+    assert again.to_json() == rr.to_json()
+
+
+def test_hypothesis_shim_reports_availability():
+    # the shim must always expose the four names the suite imports
+    assert HAVE_HYPOTHESIS in (True, False)

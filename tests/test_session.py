@@ -356,6 +356,42 @@ def test_perturb_handles_degenerate_integer_leaves():
 
 
 # ---------------------------------------------------------------------------
+# capture input validation (satellite fix): clear errors, not deep tracebacks
+# ---------------------------------------------------------------------------
+
+def test_capture_rejects_generator_with_clear_error():
+    import jax.numpy as jnp
+
+    def streaming(x):
+        return (x * i for i in range(3))      # classic mistake: a genexpr
+
+    with pytest.raises(TypeError, match="generator.*arrays"):
+        Session().capture(streaming, (jnp.ones((2, 2)),))
+
+
+def test_capture_rejects_non_array_leaves_with_clear_error():
+    import jax.numpy as jnp
+
+    def labelled(x):
+        return {"out": x * 2.0, "label": "fast-path"}
+
+    with pytest.raises(TypeError, match="non-array leaves.*str"):
+        Session().capture(labelled, (jnp.ones((2, 2)),))
+
+
+def test_capture_preserves_genuine_candidate_errors():
+    """A candidate that raises keeps its own exception — the validation
+    probe must not swallow or rewrap real failures."""
+    import jax.numpy as jnp
+
+    def boom(x):
+        raise RuntimeError("kaboom inside candidate")
+
+    with pytest.raises(RuntimeError, match="kaboom inside candidate"):
+        Session().capture(boom, (jnp.ones((2, 2)),))
+
+
+# ---------------------------------------------------------------------------
 # CLI smoke (subprocess)
 # ---------------------------------------------------------------------------
 

@@ -42,6 +42,18 @@ python -m repro.cli artifacts > /dev/null
 python -m repro.cli artifacts prune --keep-latest 2 > /dev/null
 echo "CLI smoke OK"
 
+echo "== backend parity (per-op HLO vs analytic waste sign) =="
+# the parity suite runs in the default lane on the same structurally-varied
+# subset as the baseline gate (lazy golden fixture: only these four cases
+# are recorded); --full covers every detect case via the slow test lane
+if [[ "$FULL" != 1 ]]; then
+    # ledger sanity + zoo subset + the full generated-case parity matrix
+    PARITY_K="ledger or mutation_parity"
+    for c in "${BASELINE_CASES[@]}"; do PARITY_K+=" or $c"; done
+    python -m pytest -q tests/test_backend_parity.py -k "$PARITY_K"
+fi
+echo "backend-parity OK"
+
 echo "== baseline-check (golden artifact replay) =="
 # Copy the COMMITTED expectations aside, record fresh golden artifacts next
 # to them, then (1) the live check diffs fresh findings against the
@@ -55,6 +67,14 @@ ARGS=()
 [[ "$FULL" == 1 ]] || ARGS=("${BASELINE_CASES[@]}")
 python -m repro.cli baseline check --dir "$BDIR" "${ARGS[@]}"
 python -m repro.cli baseline check --dir "$BDIR" --offline "${ARGS[@]}"
+
+# HLO-backend lane: record one case under the per-op HLO backend, then
+# prove the per-op attribution round-trips the store by replaying it
+# offline bit-identically (artifact schema v2 gate)
+BHLO="$(mktemp -d)"
+trap 'rm -rf "$STORE" "$BDIR" "$BHLO"' EXIT
+python -m repro.cli baseline record --dir "$BHLO" --backend hlo c6-matpow
+python -m repro.cli baseline check --dir "$BHLO" --backend hlo --offline c6-matpow
 echo "baseline-check OK"
 
 if [[ "$FULL" == 1 ]]; then

@@ -50,7 +50,17 @@ def _maybe_attach_zoo(art: CandidateArtifact, session: Session
     Only when the session's backend matches the artifact's recorded one:
     re-capturing under a different backend would both ignore the stored
     pricing and pollute the store with a mismatched artifact.
+
+    The provenance key check runs BEFORE any capture: the case is re-traced
+    (cheap, no execution) and its content address compared against the
+    artifact's recorded key.  A mismatch — stale provenance metadata, a
+    changed case definition — returns the artifact untouched instead of
+    capturing first and rejecting after, which used to leave the rejected
+    re-capture orphaned in the store.
     """
+    from repro.core.artifact import artifact_key
+    from repro.core.graph import trace
+
     case_id = art.meta.get("zoo_case")
     side = art.meta.get("zoo_side")
     if (art.is_live or not case_id or side not in _SIDES
@@ -61,12 +71,22 @@ def _maybe_attach_zoo(art: CandidateArtifact, session: Session
     except KeyError:
         return art
     fn, _ = case.side(side)
-    fresh = session.capture(fn, case.make_args(), name=art.name,
-                            config=art.config,
-                            sample_seeds=art.sample_seeds,
-                            extra_meta={"zoo_case": case_id,
-                                        "zoo_side": side})
-    return fresh if fresh.key == art.key else art
+    case_args = case.make_args()
+    try:
+        # one extra trace (capture re-traces internally on the accept path);
+        # acceptable on this interactive, once-per-process CLI route — the
+        # alternative is widening capture() to accept a pre-traced graph
+        graph = trace(fn, *case_args, name=art.name)
+    except Exception:
+        return art
+    if artifact_key(graph, case_args, art.sample_seeds,
+                    session.backend.id) != art.key:
+        return art
+    return session.capture(fn, case_args, name=art.name,
+                           config=art.config,
+                           sample_seeds=art.sample_seeds,
+                           extra_meta={"zoo_case": case_id,
+                                       "zoo_side": side})
 
 
 def _resolve_spec(spec: str, session: Session) -> _Resolved:

@@ -39,9 +39,15 @@ import numpy as np
 
 from repro.core.energy import EnergyProfile, OpEnergy
 from repro.core.graph import OpGraph, OpNode, TensorEdge
+from repro.core.hlo_costs import PerOpCosts
 from repro.core.tensor_match import TensorSignature
 
-ARTIFACT_FORMAT_VERSION = 1
+# v2 added the per-op HLO cost attribution block on the energy profile
+# (profile.hlo -> PerOpCosts).  v1 artifacts still load: their per-op HLO
+# costs are marked absent (None) and can be recomputed by re-capturing
+# under an HloCostBackend session.
+ARTIFACT_FORMAT_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 _STORE_ENV = "MAGNETON_STORE"
 _DEFAULT_STORE = "~/.cache/magneton/artifacts"
@@ -181,16 +187,21 @@ def _stats_from_payload(payload: Sequence[Sequence[Sequence[Any]]]
 
 
 def _profile_payload(p: EnergyProfile) -> dict[str, Any]:
-    return {"graph_name": p.graph_name,
-            "ops": [[o.node_idx, o.primitive, o.energy_j, o.time_s, o.flops,
-                     o.hbm_bytes, o.ici_bytes, o.bound] for o in p.ops]}
+    out: dict[str, Any] = {
+        "graph_name": p.graph_name,
+        "ops": [[o.node_idx, o.primitive, o.energy_j, o.time_s, o.flops,
+                 o.hbm_bytes, o.ici_bytes, o.bound] for o in p.ops]}
+    if p.hlo is not None:
+        out["hlo"] = p.hlo.as_dict()
+    return out
 
 
 def _profile_from_payload(d: Mapping[str, Any]) -> EnergyProfile:
     ops = [OpEnergy(node_idx=r[0], primitive=r[1], energy_j=r[2], time_s=r[3],
                     flops=r[4], hbm_bytes=r[5], ici_bytes=r[6], bound=r[7])
            for r in d["ops"]]
-    return EnergyProfile(graph_name=d["graph_name"], ops=ops)
+    hlo = PerOpCosts.from_dict(d["hlo"]) if d.get("hlo") else None
+    return EnergyProfile(graph_name=d["graph_name"], ops=ops, hlo=hlo)
 
 
 def _array_buffer(arr: np.ndarray) -> np.ndarray:
@@ -357,10 +368,11 @@ class CandidateArtifact:
     def load(cls, path: str | Path) -> "CandidateArtifact":
         with np.load(Path(path), allow_pickle=False) as z:
             meta = json.loads(z["meta"].tobytes().decode())
-            if meta["format_version"] != ARTIFACT_FORMAT_VERSION:
+            if meta["format_version"] not in _READABLE_VERSIONS:
                 raise ValueError(
                     f"artifact {path} has format v{meta['format_version']}, "
-                    f"this build reads v{ARTIFACT_FORMAT_VERSION}")
+                    f"this build reads "
+                    f"v{'/v'.join(str(v) for v in _READABLE_VERSIONS)}")
             outputs = [_array_from_buffer(z[f"o{i}"], d["dtype"], d["shape"])
                        for i, d in enumerate(meta["outputs"])]
             values = {(d["k"], d["tid"]): _array_from_buffer(

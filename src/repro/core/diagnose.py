@@ -36,13 +36,18 @@ class Diagnosis:
     key_variables: list[str]        # differing eqn params / config keys
     ops_a: list[str]
     ops_b: list[str]
+    # which energy backend's numbers this diagnosis rests on (the session
+    # backend label, e.g. 'tpu_v5e' / 'hlo+tpu_v5e' / 'replay'); None on
+    # reports serialized before the field existed
+    priced_by: str | None = None
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "Diagnosis":
         return cls(kind=d["kind"], deviation_point=d["deviation_point"],
                    detail=d["detail"],
                    key_variables=list(d["key_variables"]),
-                   ops_a=list(d["ops_a"]), ops_b=list(d["ops_b"]))
+                   ops_a=list(d["ops_a"]), ops_b=list(d["ops_b"]),
+                   priced_by=d.get("priced_by"))
 
 
 def _common_prefix(p1: Sequence[str], p2: Sequence[str]) -> int:
@@ -111,8 +116,13 @@ def diagnose_region(graph_a: OpGraph, nodes_a: Sequence[int],
                     graph_b: OpGraph, nodes_b: Sequence[int],
                     *,
                     config_a: Mapping[str, Any] | None = None,
-                    config_b: Mapping[str, Any] | None = None) -> Diagnosis:
-    """Explain why two equivalent regions consume different energy."""
+                    config_b: Mapping[str, Any] | None = None,
+                    priced_by: str | None = None) -> Diagnosis:
+    """Explain why two equivalent regions consume different energy.
+
+    ``priced_by`` names the energy backend whose numbers flagged the region
+    (recorded on the diagnosis so reports can cite their pricing source).
+    """
     ops_a = _op_multiset(graph_a, nodes_a)
     ops_b = _op_multiset(graph_b, nodes_b)
     paths_a = [graph_a.nodes[i].call_path for i in nodes_a if graph_a.nodes[i].call_path]
@@ -130,7 +140,8 @@ def diagnose_region(graph_a: OpGraph, nodes_a: Sequence[int],
                   f"({len(ops_b)} ops, Δ{extra_a:+d})")
         return Diagnosis(kind="api_difference", deviation_point=deviation,
                          detail=detail,
-                         key_variables=cfg_diffs, ops_a=ops_a, ops_b=ops_b)
+                         key_variables=cfg_diffs, ops_a=ops_a, ops_b=ops_b,
+                         priced_by=priced_by)
 
     # same operator multiset -> same API, look for param/config differences
     # pair same-primitive ops in topological order and diff params
@@ -151,4 +162,5 @@ def diagnose_region(graph_a: OpGraph, nodes_a: Sequence[int],
               "same operators and attributes; energy difference stems from "
               "tensor shapes/layouts feeding this region")
     return Diagnosis(kind=kind, deviation_point=deviation, detail=detail,
-                     key_variables=sorted(set(key_vars)), ops_a=ops_a, ops_b=ops_b)
+                     key_variables=sorted(set(key_vars)), ops_a=ops_a,
+                     ops_b=ops_b, priced_by=priced_by)

@@ -19,7 +19,11 @@ Pipeline (now in session.py):
   6. detect: regions whose energy differs by more than ``energy_threshold``
      while performance stays within ``perf_tolerance`` are software energy
      waste (paper §6.1: 10% energy threshold, 1% perf tolerance),
-  7. diagnose each waste region (diagnose.py, Algorithm 2).
+  7. diagnose each waste region (diagnose.py, Algorithm 2).  Every
+     diagnosis records which backend's numbers it rests on
+     (``Diagnosis.priced_by`` — the session backend's label), so a report
+     priced by the per-op HLO backend is distinguishable from an analytic
+     one after the fact.
 
 Energy backends: prefer constructing a :class:`~repro.core.session.Session`
 with an explicit ``EnergyBackend`` (``AnalyticalBackend(spec)``,

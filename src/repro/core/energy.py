@@ -13,9 +13,11 @@ protocol: an object with an ``id`` (feeds the artifact cache key), a ``label``
 (the ``Report.meta['energy_model']`` string) and a ``profile(graph, args)``
 method returning an :class:`EnergyProfile`.  ``AnalyticalBackend`` wraps
 :class:`AnalyticalEnergyModel`, ``ReplayBackend`` wraps
-:class:`ReplayProfiler`, and ``HloCostBackend`` calibrates the analytic
-per-operator breakdown against XLA's compiled cost analysis
-(core/hlo_costs.py).
+:class:`ReplayProfiler`, and ``HloCostBackend`` prices each operator from
+XLA's compiled module via per-instruction cost attribution
+(core/hlo_costs.py): eqn ids are threaded through the lowering as name
+scopes and each optimized-HLO instruction is credited back to its
+originating jaxpr equation.
 """
 
 from __future__ import annotations
@@ -26,6 +28,7 @@ from typing import Any, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.core import costs as costs_mod
+from repro.core import hlo_costs as hlo_costs_mod
 from repro.core.graph import OpGraph
 from repro.hw.specs import CPU_HOST, TPU_V5E, HardwareSpec
 
@@ -46,6 +49,11 @@ class OpEnergy:
 class EnergyProfile:
     graph_name: str
     ops: list[OpEnergy]
+    # per-op costs attributed from the compiled module (HloCostBackend only);
+    # persisted with the artifact so loaded captures keep their attribution.
+    # compare=False: PerOpCosts holds ndarrays, whose __eq__ is elementwise
+    hlo: "hlo_costs_mod.PerOpCosts | None" = dataclasses.field(
+        default=None, compare=False)
     # node-indexed energy/time arrays, built lazily once so per-region
     # queries (subgraph_energy/subgraph_time) are O(|region|) array gathers
     # instead of a Python set rebuild + full scan per query.
@@ -294,23 +302,28 @@ class ReplayBackend:
 
 @dataclasses.dataclass(frozen=True)
 class HloCostBackend:
-    """Analytic pricing calibrated against XLA's compiled cost analysis.
+    """Per-instruction pricing from XLA's compiled module.
 
-    ``compiled.cost_analysis()`` reports whole-module FLOPs/bytes (and the
-    post-optimization HLO text yields collective traffic — hlo_costs.py) but
-    no per-operator breakdown, while the analytic model has the opposite
-    strength.  This backend compiles the captured jaxpr, extracts the module
-    totals, and rescales the analytic per-operator FLOP/HBM/ICI columns so
-    they sum to the compiled truth before repricing — per-region comparisons
-    keep operator resolution while absolute totals follow the XLA compiler's
-    accounting of fusion and layout effects.
+    The captured jaxpr is re-lowered with every equation bound under a
+    ``magop<idx>`` name scope (hlo_costs.annotated_compile), so each HLO
+    instruction in the optimized module — including instructions inside
+    fused computations and while bodies — carries its originating OpGraph
+    node id in its metadata.  Walking that module per instruction yields a
+    true per-operator FLOP/byte/collective breakdown under XLA's fusion,
+    CSE, and layout decisions (hlo_costs.attribute_costs); proportional
+    splitting only happens inside fusions whose constituents are genuinely
+    merged.  The resulting per-node columns are priced through the same
+    roofline/energy math as the analytic model, and the attribution is kept
+    on ``EnergyProfile.hlo`` so artifacts persist it.
     """
 
     spec: HardwareSpec = TPU_V5E
 
     @property
     def id(self) -> str:
-        return f"hlo:{self.spec.name}:{_spec_digest(self.spec)}"
+        # 'perop' marks the per-instruction attribution engine: captures
+        # priced by the old module-total rescaling must not alias in stores
+        return f"hlo:perop:{self.spec.name}:{_spec_digest(self.spec)}"
 
     @property
     def label(self) -> str:
@@ -318,46 +331,24 @@ class HloCostBackend:
 
     def profile(self, graph: OpGraph,
                 args: Sequence[Any] = ()) -> EnergyProfile:
-        import jax
-
-        try:
-            from jax.core import jaxpr_as_fun
-        except ImportError:                      # moved across jax versions
-            from jax._src.core import jaxpr_as_fun
-
-        from repro.core import hlo_costs
-
-        closed = graph.closed_jaxpr
-        if closed is None:
+        if graph.closed_jaxpr is None:
             raise ValueError(
                 "HloCostBackend needs a live graph (with a ClosedJaxpr); "
                 "loaded artifacts carry their capture-time profile instead")
-        flat_args = jax.tree_util.tree_leaves(tuple(args))
-        compiled = jax.jit(jaxpr_as_fun(closed)).lower(*flat_args).compile()
-        cc = hlo_costs.extract_costs(compiled)
-
-        costs = [costs_mod.node_cost(graph, node) for node in graph.nodes]
-
-        def ratio(total: float, parts: float) -> float:
-            return total / parts if total > 0 and parts > 0 else 1.0
-
-        k_flops = ratio(cc.flops, sum(c.flops for c in costs))
-        k_hbm = ratio(cc.bytes_accessed, sum(c.hbm_bytes for c in costs))
-        k_ici = ratio(cc.collectives.total_traffic_bytes,
-                      sum(c.ici_bytes for c in costs))
-        scaled = [dataclasses.replace(c, flops=c.flops * k_flops,
-                                      hbm_bytes=c.hbm_bytes * k_hbm,
-                                      ici_bytes=c.ici_bytes * k_ici)
-                  for c in costs]
-
+        poc = hlo_costs_mod.per_op_costs(graph, args)
+        costs = [costs_mod.OpCost(
+            flops=float(poc.flops[i]), hbm_bytes=float(poc.hbm_bytes[i]),
+            ici_bytes=float(poc.ici_bytes[i]),
+            fp32_fraction=float(poc.fp32_fraction[i]))
+            for i in range(len(graph.nodes))]
         model = AnalyticalEnergyModel(self.spec)
-        flops, hbm, ici, energy, t_op, bound = model._price(scaled)
+        flops, hbm, ici, energy, t_op, bound = model._price(costs)
         ops = [OpEnergy(node_idx=i, primitive=graph.nodes[i].primitive,
                         energy_j=float(energy[i]), time_s=float(t_op[i]),
                         flops=float(flops[i]), hbm_bytes=float(hbm[i]),
                         ici_bytes=float(ici[i]), bound=str(bound[i]))
-               for i in range(len(scaled))]
-        return EnergyProfile(graph_name=graph.name, ops=ops)
+               for i in range(len(costs))]
+        return EnergyProfile(graph_name=graph.name, ops=ops, hlo=poc)
 
 
 def backend_from_name(name: str, *, spec: HardwareSpec = TPU_V5E

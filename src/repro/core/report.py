@@ -91,7 +91,9 @@ class Report:
                          f"Δperf {f.perf_delta_pct:.2f}%")
             d = f.diagnosis
             if d is not None:
-                lines.append(f"    kind: {d.kind}")
+                lines.append(f"    kind: {d.kind}"
+                             + (f"  (priced by {d.priced_by})"
+                                if d.priced_by else ""))
                 lines.append(f"    deviation point: {d.deviation_point}")
                 lines.append(f"    {d.detail}")
                 for kv in d.key_variables[:6]:

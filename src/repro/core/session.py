@@ -61,14 +61,22 @@ def _perturb(args, seed: int):
     (``min()`` raises) and constant arrays (``min == max`` would regenerate
     the same constant while still consuming RNG draws) — pass through
     unchanged; non-degenerate leaves keep the historical distribution.
+
+    ml_dtypes floats (bfloat16, float8) report numpy kind 'V', not 'f' —
+    they are detected by name so bf16 models get real Hypothesis-1 probes
+    instead of a silent sample-0 passthrough (which would leave
+    permutation-symmetric duplicates undisambiguated across samples).
     """
     rng = np.random.default_rng(seed)
 
+    _ML_FLOATS = ("bfloat16", "float8_e4m3fn", "float8_e5m2", "float16")
+
     def one(x):
         x = np.asarray(x)
-        if x.dtype.kind in "f":
-            return (rng.standard_normal(x.shape) * (np.std(x) + 0.1)
-                    + np.mean(x)).astype(x.dtype)
+        if x.dtype.kind in "f" or x.dtype.name in _ML_FLOATS:
+            stats = x.astype(np.float64) if x.dtype.kind != "f" else x
+            return (rng.standard_normal(x.shape) * (np.std(stats) + 0.1)
+                    + np.mean(stats)).astype(x.dtype)
         if x.dtype.kind in "iu":
             if x.size == 0:
                 return x
@@ -359,13 +367,15 @@ class Session:
 
     # -- compare ------------------------------------------------------------
     def compare(self, art_a: CandidateArtifact, art_b: CandidateArtifact, *,
-                output_rtol: float = 1e-2) -> Report:
+                output_rtol: float = 1e-2, persist: bool = True) -> Report:
         """Match + classify + diagnose two artifacts; no re-capture.
 
         Works on any mix of live and loaded artifacts.  Phase-2 tensor
         values fetched during matching are memoized on the artifacts and
-        persisted back to the store, so a comparison once run live can be
-        re-run offline from disk bit-identically.
+        (with ``persist``, the default) persisted back to the store, so a
+        comparison once run live can be re-run offline from disk
+        bit-identically.  ``rank()`` passes ``persist=False`` and saves
+        each artifact once at exit instead of once per pairwise compare.
         """
         if art_a.backend_id != art_b.backend_id:
             raise ValueError(
@@ -388,7 +398,8 @@ class Session:
 
         findings = [self._classify(i, r, art_a.graph, art_b.graph,
                                    art_a.profile, art_b.profile,
-                                   art_a.config, art_b.config)
+                                   art_a.config, art_b.config,
+                                   priced_by=art_a.backend_label)
                     for i, r in enumerate(regions)]
         report = Report(
             name_a=art_a.name, name_b=art_b.name, findings=findings,
@@ -399,7 +410,7 @@ class Session:
                   "nodes_a": len(art_a.graph.nodes),
                   "nodes_b": len(art_b.graph.nodes),
                   "energy_model": art_a.backend_label})
-        if self.store is not None:
+        if persist and self.store is not None:
             for art in (art_a, art_b):
                 if art._dirty:
                     self.store.save(art)
@@ -413,6 +424,11 @@ class Session:
         Every unordered candidate pair is compared at the artifact level;
         ``waste_matrix[i][j]`` accumulates the energy candidate *i* wastes
         in regions where it is the confirmed-wasteful side vs candidate *j*.
+
+        Store persistence is deferred to rank exit: each artifact that went
+        dirty (memoized new phase-2 values) is saved exactly once, instead
+        of re-writing its full ``.npz`` after every pairwise compare it
+        appears in (which made store-backed rank O(N²) in full rewrites).
         """
         arts = list(artifacts)
         n = len(arts)
@@ -420,15 +436,25 @@ class Session:
             raise ValueError("rank() needs at least two artifacts")
         waste = [[0.0] * n for _ in range(n)]
         reports: dict[tuple[int, int], Report] = {}
-        for i in range(n):
-            for j in range(i + 1, n):
-                rep = self.compare(arts[i], arts[j], output_rtol=output_rtol)
-                reports[(i, j)] = rep
-                for f in rep.waste_findings:
-                    if f.wasteful_side == "A":
-                        waste[i][j] += f.energy_a_j - f.energy_b_j
-                    elif f.wasteful_side == "B":
-                        waste[j][i] += f.energy_b_j - f.energy_a_j
+        try:
+            for i in range(n):
+                for j in range(i + 1, n):
+                    rep = self.compare(arts[i], arts[j],
+                                       output_rtol=output_rtol,
+                                       persist=False)
+                    reports[(i, j)] = rep
+                    for f in rep.waste_findings:
+                        if f.wasteful_side == "A":
+                            waste[i][j] += f.energy_a_j - f.energy_b_j
+                        elif f.wasteful_side == "B":
+                            waste[j][i] += f.energy_b_j - f.energy_a_j
+        finally:
+            # one save per dirty artifact, even if a later compare raised —
+            # values fetched so far stay replayable offline
+            if self.store is not None:
+                for art in arts:
+                    if art._dirty:
+                        self.store.save(art)
         return RankResult(
             names=[a.name for a in arts],
             keys=[a.key for a in arts],
@@ -440,7 +466,8 @@ class Session:
     def _classify(self, idx: int, region: MatchedRegion,
                   graph_a: OpGraph, graph_b: OpGraph,
                   prof_a: EnergyProfile, prof_b: EnergyProfile,
-                  config_a, config_b) -> Finding:
+                  config_a, config_b, *,
+                  priced_by: str | None = None) -> Finding:
         e_a = subgraph_energy(prof_a, region.nodes_a)
         e_b = subgraph_energy(prof_b, region.nodes_b)
         t_a = subgraph_time(prof_a, region.nodes_a)
@@ -461,7 +488,8 @@ class Session:
         if cls == "energy_waste":
             diag = diagnose_region(graph_a, region.nodes_a,
                                    graph_b, region.nodes_b,
-                                   config_a=config_a, config_b=config_b)
+                                   config_a=config_a, config_b=config_b,
+                                   priced_by=priced_by)
         return Finding(region_idx=idx, energy_a_j=e_a, energy_b_j=e_b,
                        time_a_s=t_a, time_b_s=t_b,
                        nodes_a=list(region.nodes_a), nodes_b=list(region.nodes_b),

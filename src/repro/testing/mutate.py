@@ -24,6 +24,15 @@ mutation class         injected pattern (expected diagnosis)
 ``op_split``           fused transcendentals (tanh/logistic/rsqrt/exp)
                        re-expressed as multi-op eager formulas — the n1
                        unfused-GELU pattern (``api_difference``)
+``scan_body``          redundant recompute injected INSIDE ``lax.scan``
+                       bodies — per-iteration waste hidden in a loop
+                       super-node (``param_difference`` on the scan jaxpr)
+``layout_thrash``      spurious transpose round-trips inserted on matmul
+                       operands — layout churn through HBM
+                       (``api_difference``)
+``storage_upcast``     bf16 non-matmul ops rebound through f32 storage
+                       (convert up, compute, convert back) — doubled
+                       element bytes on the VPU path (``api_difference``)
 =====================  =====================================================
 
 Because the mutant is an ordinary Python callable replaying the clean jaxpr
@@ -130,6 +139,11 @@ class DtypeUpcast(Mutation):
             return None
         if "HIGHEST" in str(eqn.params.get("precision")).upper():
             return None                      # already running upcast
+        # f32 dots only: HIGHEST on bf16 storage changes the accumulation
+        # numerics, so the mutant would no longer be bitwise-equivalent and
+        # the matcher could not localize the region
+        if any(getattr(x, "dtype", None) == jnp.bfloat16 for x in invals):
+            return None
         if not self._take():
             return None
         params = dict(eqn.params)
@@ -219,7 +233,10 @@ class OpSplit(Mutation):
         if prim not in ("tanh", "logistic", "exp"):
             return None
         (x,) = invals
-        if not _is_float(x) or not self._take():
+        # f32 only: the split formulas round through exp, and in bf16 the
+        # accumulated rounding (~0.8%/step) can breach the equivalence gate
+        if not _is_float(x) or jnp.result_type(x) != jnp.float32 \
+                or not self._take():
             return None
         if prim == "tanh":
             xc = jnp.clip(x, -20.0, 20.0)    # exp(2x) stays finite
@@ -231,9 +248,113 @@ class OpSplit(Mutation):
         return [h * h]
 
 
+def _contains_dot(closed) -> bool:
+    """Whether a (closed) jaxpr binds a dot_general anywhere, recursively."""
+    from jax._src.core import ClosedJaxpr, Jaxpr
+    jaxpr = closed.jaxpr if hasattr(closed, "jaxpr") else closed
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "dot_general":
+            return True
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for sub in vs:
+                if isinstance(sub, (ClosedJaxpr, Jaxpr)) \
+                        and _contains_dot(sub):
+                    return True
+    return False
+
+
+class ScanBodyWaste(Mutation):
+    """Inject redundant recompute INSIDE ``lax.scan`` bodies: the scan is
+    re-bound with a body that replays the original body jaxpr under a
+    :class:`RedundantRecompute` hook, so every body matmul runs twice per
+    iteration.  The outer graphs keep identical operator multisets — both
+    sides carry one ``scan`` super-node — so the correct diagnosis is a
+    ``param_difference`` (the scan's body jaxpr is the diverging param),
+    exercising costs.py's trip-count-scaled loop pricing."""
+
+    name = "scan_body"
+    expected_kinds = ("param_difference",)
+
+    def rewrite(self, eqn, invals):
+        if eqn.primitive.name != "scan":
+            return None
+        body = eqn.params["jaxpr"]
+        if not _contains_dot(body) or not self._take():
+            return None
+        num_consts = eqn.params["num_consts"]
+        num_carry = eqn.params["num_carry"]
+        consts = list(invals[:num_consts])
+        init = list(invals[num_consts:num_consts + num_carry])
+        xs = tuple(invals[num_consts + num_carry:])
+        inner = RedundantRecompute()
+
+        def body_fn(carry, x):
+            x_leaves = [] if x is None else list(x)
+            outs = _replay(body, [*consts, *list(carry), *x_leaves], inner)
+            return tuple(outs[:num_carry]), tuple(outs[num_carry:])
+
+        carry_out, ys = jax.lax.scan(
+            body_fn, tuple(init), xs if xs else None,
+            length=eqn.params.get("length"),
+            reverse=eqn.params.get("reverse", False),
+            unroll=eqn.params.get("unroll", 1))
+        return [*carry_out, *ys]
+
+
+class LayoutThrash(Mutation):
+    """Insert transpose round-trips on every matmul's operands — spurious
+    layout churn through HBM around the MXU.  The values are bitwise
+    unchanged (the full-reverse permutation is an involution) but each
+    matmul gains four data-movement operators, so the correct diagnosis is
+    an ``api_difference`` with extra ``transpose`` ops on the wasteful
+    side."""
+
+    name = "layout_thrash"
+    expected_kinds = ("api_difference",)
+
+    @staticmethod
+    def _round_trip(x):
+        if getattr(x, "ndim", 0) < 2:
+            return x
+        perm = tuple(reversed(range(x.ndim)))
+        return jax.lax.transpose(jax.lax.transpose(x, perm), perm)
+
+    def rewrite(self, eqn, invals):
+        if eqn.primitive.name != "dot_general":
+            return None
+        if getattr(invals[0], "ndim", 0) < 2 or not self._take():
+            return None
+        return _bind(eqn, [self._round_trip(x) for x in invals])
+
+
+class StorageUpcast(Mutation):
+    """Rebind bf16 non-matmul ops through f32 storage: convert the operands
+    up, compute, convert the result back.  Every mutated element pays double
+    the HBM bytes plus two conversion passes — the storage-dtype analogue of
+    the c1/c8 compute misconfiguration, on ops where no MXU is involved."""
+
+    name = "storage_upcast"
+    expected_kinds = ("api_difference",)
+
+    _TARGETS = ("tanh", "logistic", "exp", "add", "mul")
+
+    def rewrite(self, eqn, invals):
+        if eqn.primitive.name not in self._TARGETS:
+            return None
+        if not all(hasattr(x, "dtype") and x.dtype == jnp.bfloat16
+                   for x in invals):
+            return None
+        if not self._take():
+            return None
+        out = _bind(eqn, [x.astype(jnp.float32) for x in invals])
+        return [o.astype(jnp.bfloat16) for o in out]
+
+
 MUTATIONS: dict[str, type[Mutation]] = {
     m.name: m for m in (DtypeUpcast, RedundantRecompute, SyncInLoop,
-                        OversizedPadding, OpSplit)
+                        OversizedPadding, OpSplit, ScanBodyWaste,
+                        LayoutThrash, StorageUpcast)
 }
 
 assert all(k in DIAGNOSIS_KINDS for m in MUTATIONS.values()
@@ -326,19 +447,22 @@ class CleanProgram:
 
 
 def clean_programs() -> list[CleanProgram]:
-    """Clean programs spanning matmul, attention, norm, and activation ops.
+    """Clean programs spanning matmul, attention, norm, activation, loop,
+    and bf16 ops.
 
     Sizes are small (fast through the instrumenting interpreter) but the
     matmul contraction dims stay >= 64 so the dots have enough arithmetic
     intensity for a flop-side mutation (dtype_upcast's 3x fp32 emulation)
     to clear the 10% region-energy detection threshold over the
-    memory-access energy floor.
+    memory-access energy floor.  The ``scan_*`` programs keep their dots
+    INSIDE ``lax.scan`` bodies (scan_body mutation targets); the ``*_bf16``
+    programs run in bfloat16 storage (storage_upcast targets).
     """
     from repro.kernels import ref
     from repro.models import layers
 
     k = jax.random.key(20260801)
-    ks = list(jax.random.split(k, 8))
+    ks = list(jax.random.split(k, 12))
 
     mlp_params = layers.init_params(layers.mlp_schema(128, 256, "float32"),
                                     ks[0])
@@ -359,6 +483,34 @@ def clean_programs() -> list[CleanProgram]:
     def attention_block(q, k_, v):
         return ref.attention(q, k_, v, causal=False)
 
+    w_scan = jax.random.normal(ks[8], (128, 128), jnp.float32) * 0.05
+    w_scan2 = jax.random.normal(ks[9], (128, 128), jnp.float32) * 0.05
+
+    def scan_mlp(x):
+        def step(c, _):
+            return jnp.tanh(c @ w_scan), None
+        out, _ = jax.lax.scan(step, x, None, length=4)
+        return out
+
+    def scan_residual(x):
+        def step(c, _):
+            return c + 0.5 * jnp.tanh(c @ w_scan2), None
+        out, _ = jax.lax.scan(step, x, None, length=4)
+        return out
+
+    w_b16 = (jax.random.normal(ks[10], (128, 128), jnp.float32) * 0.1
+             ).astype(jnp.bfloat16)
+
+    def gelu_dense_bf16(x):
+        # bf16-native tanh-GELU (ref.gelu_tanh upcasts to f32 internally,
+        # which would leave no bf16 elementwise sites to mutate)
+        y = x @ w_b16
+        inner = 0.7978845608 * (y + 0.044715 * (y * y * y))
+        return 0.5 * y * (1.0 + jnp.tanh(inner))
+
+    def act_chain_bf16(x):
+        return jnp.tanh(x) * jax.nn.sigmoid(x + jnp.bfloat16(1.0))
+
     def _qkv():
         kq, kk, kv = jax.random.split(ks[4], 3)
         shape = (1, 2, 64, 128)   # head_dim 128: the score matmul's 3x fp32
@@ -378,6 +530,20 @@ def clean_programs() -> list[CleanProgram]:
         CleanProgram("gelu_dense", gelu_dense,
                      lambda: (jax.random.normal(ks[7], (64, 128),
                                                 jnp.float32),)),
+        CleanProgram("scan_mlp", scan_mlp,
+                     lambda: (jax.random.normal(ks[8], (64, 128),
+                                                jnp.float32),)),
+        CleanProgram("scan_residual", scan_residual,
+                     lambda: (jax.random.normal(ks[9], (64, 128),
+                                                jnp.float32),)),
+        CleanProgram("gelu_dense_bf16", gelu_dense_bf16,
+                     lambda: (jax.random.normal(ks[10], (64, 128),
+                                                jnp.float32
+                                                ).astype(jnp.bfloat16),)),
+        CleanProgram("act_chain_bf16", act_chain_bf16,
+                     lambda: (jax.random.normal(ks[11], (128, 128),
+                                                jnp.float32
+                                                ).astype(jnp.bfloat16),)),
     ]
 
 

@@ -18,33 +18,62 @@ def key():
     return jax.random.key(0)
 
 
+class _LazyGoldenRecords:
+    """Per-case lazily recorded golden baselines (mapping-like).
+
+    Each case is recorded on first access and cached for the session, so a
+    ``-k``-selected subset (the CI fast lane runs backend parity on four
+    cases) only pays for the cases it touches, while whole-zoo consumers
+    iterate every id and force a full record.
+    """
+
+    def __init__(self, store):
+        from repro.zoo import cases as zoo
+        self._store = store
+        self._zoo = zoo
+        self._cache = {}
+
+    def __getitem__(self, case_id):
+        if case_id not in self._cache:
+            res = self._store.record(self._zoo.get_case(case_id))
+            self._cache[case_id] = {
+                "baseline": res.baseline,
+                "report": res.report,
+                "graph_a": res.art_a.graph,
+                "graph_b": res.art_b.graph,
+            }
+        return self._cache[case_id]
+
+    def __iter__(self):
+        return (c.id for c in self._zoo.list_cases())
+
+    def __len__(self):
+        return len(self._zoo.list_cases())
+
+    def record_all(self):
+        for case_id in self:
+            self[case_id]
+
+
 @pytest.fixture(scope="session")
 def golden(tmp_path_factory):
-    """Golden baselines for the whole zoo, recorded once per test session.
+    """Golden baselines for the zoo, recorded lazily per case.
 
-    Records every registered case into a fresh BaselineStore (artifacts +
-    committed-style JSON under a session tmp dir) and keeps the lightweight
-    record-time products — baseline, report, both traced graphs — for
-    downstream suites (offline drift replay, backend parity).  The heavy
-    CandidateArtifacts are dropped; their bytes live in the store on disk.
+    Cases are recorded into a fresh BaselineStore (artifacts +
+    committed-style JSON under a session tmp dir) on first access through
+    ``golden["records"][case_id]``; the lightweight record-time products —
+    baseline, report, both traced graphs — are kept for downstream suites
+    (offline drift replay, backend parity).  Whole-zoo consumers call
+    ``golden["records"].record_all()`` first.  The heavy CandidateArtifacts
+    are dropped; their bytes live in the store on disk.
     """
     from repro.testing.baselines import BaselineStore
-    from repro.zoo import cases as zoo
 
     import shutil
 
     root = tmp_path_factory.mktemp("golden-baselines")
     store = BaselineStore(root)
-    records = {}
-    for case in zoo.list_cases():
-        res = store.record(case)
-        records[case.id] = {
-            "baseline": res.baseline,
-            "report": res.report,
-            "graph_a": res.art_a.graph,
-            "graph_b": res.art_b.graph,
-        }
-    yield {"root": root, "records": records}
+    yield {"root": root, "records": _LazyGoldenRecords(store)}
     # the artifact store is multi-GB; don't let pytest's retained tmp dirs
     # (default: last 3 sessions) accumulate it in /tmp
     shutil.rmtree(root / "store", ignore_errors=True)

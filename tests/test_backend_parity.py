@@ -1,17 +1,32 @@
-"""Backend parity: AnalyticalBackend vs HloCostBackend waste-sign agreement.
+"""Backend parity: AnalyticalBackend vs per-op HloCostBackend waste signs.
 
 Regions come from matching and are backend-independent, so parity is tested
 on the pricing alone: for every zoo case the analytic pipeline detects, the
-HLO-calibrated backend must price the SAME matched regions (and the module
-totals) with the same waste sign.  Disagreements are not silently tolerated
-and not silently trusted either — they are pinned in
-KNOWN_SIGN_DISAGREEMENTS with the reason, and the test fails if one
-appears, disappears, or flips, forcing the ledger to stay current.
+per-op HLO backend must price the SAME matched regions (and the module
+totals) with the same waste sign.  Divergences are not silently tolerated
+and not silently trusted either — they are pinned in one of two ledgers
+with the responsible XLA transformation, and the test fails if an entry
+appears, disappears, or changes category, forcing the ledgers to stay
+current.
 
-Measured on this container (jax CPU, TPU-v5e spec): 14/19 cases agree; the
-5 exceptions are exactly the cases whose waste the XLA optimizer can erase
-at compile time, which the analytic operator-level model (deliberately,
-matching the paper's pre-fusion execution model) still charges for.
+PR 4 replaced the module-total redistribution with true per-instruction
+attribution (eqn ids threaded through the lowering as name scopes,
+core/hlo_costs.py), which split the old 5-entry disagreement ledger by
+actual cause:
+
+* ``KNOWN_SIGN_DISAGREEMENTS`` (2 entries) — the compiled module prices the
+  analytically-wasteful side strictly CHEAPER: a true sign flip;
+* ``KNOWN_COMPILER_ERASED`` (4 entries) — XLA compiles both twins to
+  (near-)identical traffic, so the operator-level waste vanishes as a tie.
+  The old redistribution could never produce a tie (it preserved analytic
+  ratios), which is exactly why two of its five documented "disagreements"
+  were attribution artifacts: c9-join-psum (scan-body collectives now get
+  per-iteration attribution via XLA's known_trip_count) and n1-gelu-backend
+  (the Pallas interpret-mode emulation no longer pollutes the pricing —
+  pallas_call nodes are opaque and take their analytic single-pass rule).
+
+Measured on this container (jax CPU, TPU-v5e spec): 13/19 detect cases
+agree; 2 flip; 4 erase.
 """
 
 import pytest
@@ -19,37 +34,50 @@ import pytest
 from repro.core.energy import HloCostBackend, subgraph_energy
 from repro.zoo import cases as zoo
 
-# case id -> why compiled-cost accounting disagrees with the operator model.
+# case id -> the XLA transformation that makes the compiled module price the
+# analytically-wasteful side strictly CHEAPER (true sign flip).
 KNOWN_SIGN_DISAGREEMENTS = {
-    "c2-cache-copy": "XLA lowers the concat cache-copy to the same bytes as "
-                     "the dynamic-update-slice (copy elision): module totals "
-                     "come out equal, so the HLO-rescaled sign vanishes",
-    "c9-join-psum": "whole-module HLO totals are redistributed over the "
-                    "analytic breakdown; the scan-body collectives have no "
-                    "per-iteration attribution post-compilation and the "
-                    "accumulate-then-reduce twin prices higher",
-    "c15-expm": "XLA CSEs the recomputed Taylor powers, so the redundant "
-                "twin compiles to FEWER flops than the shared-power one",
-    "c16-count-nonzero": "the materialized f32 indicator copy is fused away "
-                         "by XLA; compiled byte totals for both twins are "
-                         "identical",
-    "n1-gelu-backend": "the Pallas fused-GELU runs via interpret-mode "
-                       "callbacks on CPU whose HLO is far larger than the "
-                       "5-op eager form, inverting the compiled totals",
+    "c15-expm": "XLA CSE merges the recomputed Taylor powers, so the "
+                "redundant twin compiles to FEWER flops than the "
+                "shared-power one",
+    "c7-concat-split": "the direct-projection twin re-reads the activations "
+                       "once per projection while the concat twin reads the "
+                       "concatenated weights once; compiled byte totals "
+                       "flip the analytic sign by ~5%",
 }
+
+# case id -> the XLA transformation that compiles both twins to
+# (near-)identical traffic, erasing the operator-level waste as a tie.
+KNOWN_COMPILER_ERASED = {
+    "c2-cache-copy": "copy elision + loop fusion: the concat cache-copy and "
+                     "the dynamic-update-slice lower to fusions with "
+                     "identical operand/result traffic",
+    "c5-layout": "algebraic simplification deletes the inverse transpose "
+                 "pair entirely — both twins compile to the identical "
+                 "bitcast + dot module",
+    "c10-addmm": "both twins compile to the same f32-accumulating dot with "
+                 "an add/convert epilogue fusion; module byte totals tie to "
+                 "within 0.03% (the matched region still agrees)",
+    "c16-count-nonzero": "XLA materializes a full-width 4-byte indicator on "
+                         "BOTH twins (f32 select vs s32 convert of the "
+                         "pred) before the partitioned reduce, so the "
+                         "implicit-copy waste ties out",
+}
+
+# ties must sit well below the smallest documented flip (c7, ~4.5%)
+ERASED_REL_TOL = 1e-2
 
 DETECT_CASES = [c.id for c in zoo.list_cases() if c.expect_detect]
 pytestmark = pytest.mark.slow
 
 
-@pytest.mark.parametrize("cid", DETECT_CASES)
-def test_backends_agree_on_waste_sign(cid, golden):
+def _parity(cid, golden):
+    """(waste, regions_agree, total_a, total_b) for one zoo case."""
     case = zoo.get_case(cid)
     rec = golden["records"][cid]
     waste = [f for f in rec["report"].waste_findings
              if f.wasteful_side == "A"]
     assert waste, f"{cid}: analytic pipeline no longer detects the waste"
-
     hlo = HloCostBackend()
     args = case.make_args()
     prof_a = hlo.profile(rec["graph_a"], args)
@@ -58,24 +86,113 @@ def test_backends_agree_on_waste_sign(cid, golden):
         subgraph_energy(prof_a, f.nodes_a) > subgraph_energy(prof_b,
                                                              f.nodes_b)
         for f in waste)
-    totals_agree = prof_a.total_energy_j > prof_b.total_energy_j
-    agree = regions_agree and totals_agree
+    return waste, regions_agree, prof_a.total_energy_j, prof_b.total_energy_j
+
+
+@pytest.mark.parametrize("cid", DETECT_CASES)
+def test_backends_agree_on_waste_sign(cid, golden):
+    _, regions_agree, ta, tb = _parity(cid, golden)
+    agree = regions_agree and ta > tb
+    rel = abs(ta - tb) / max(ta, tb, 1e-30)
 
     if cid in KNOWN_SIGN_DISAGREEMENTS:
         assert not agree, (
-            f"{cid}: backends now AGREE — the documented disagreement "
+            f"{cid}: backends now AGREE — the documented sign flip "
             f"({KNOWN_SIGN_DISAGREEMENTS[cid]}) is resolved; remove it from "
             "KNOWN_SIGN_DISAGREEMENTS")
-        pytest.xfail(f"documented sign disagreement: "
-                     f"{KNOWN_SIGN_DISAGREEMENTS[cid]}")
+        assert tb > ta and rel > ERASED_REL_TOL, (
+            f"{cid}: documented as a true sign flip but the compiled totals "
+            f"no longer flip (A={ta:.3e} J vs B={tb:.3e} J); move it to "
+            "KNOWN_COMPILER_ERASED or remove it")
+        pytest.xfail(f"documented sign flip: {KNOWN_SIGN_DISAGREEMENTS[cid]}")
+    if cid in KNOWN_COMPILER_ERASED:
+        # an epsilon-sized lean toward A is still a tie — only genuine
+        # (> tolerance) agreement resolves an erasure entry
+        assert not (agree and rel > ERASED_REL_TOL), (
+            f"{cid}: backends now genuinely AGREE — the documented erasure "
+            f"({KNOWN_COMPILER_ERASED[cid]}) is resolved; remove it from "
+            "KNOWN_COMPILER_ERASED")
+        assert rel <= ERASED_REL_TOL, (
+            f"{cid}: documented as compiler-erased but the compiled totals "
+            f"no longer tie (A={ta:.3e} J vs B={tb:.3e} J, rel={rel:.2e}); "
+            "re-classify it")
+        pytest.xfail(f"compiler-erased waste: {KNOWN_COMPILER_ERASED[cid]}")
     assert agree, (
-        f"{cid}: analytic and HLO-calibrated backends disagree on the waste "
-        f"sign (regions_agree={regions_agree}, totals_agree={totals_agree}, "
-        f"hlo A={prof_a.total_energy_j:.3e} J vs "
-        f"B={prof_b.total_energy_j:.3e} J) — understand and either fix the "
-        "pricing or document it in KNOWN_SIGN_DISAGREEMENTS")
+        f"{cid}: analytic and per-op HLO backends disagree on the waste "
+        f"sign (regions_agree={regions_agree}, hlo A={ta:.3e} J vs "
+        f"B={tb:.3e} J) — understand and either fix the attribution or "
+        "document it in the appropriate ledger")
 
 
-def test_disagreement_ledger_names_real_cases():
-    for cid in KNOWN_SIGN_DISAGREEMENTS:
+def test_disagreement_ledgers_name_real_cases():
+    assert len(KNOWN_SIGN_DISAGREEMENTS) <= 2, \
+        "the sign-disagreement ledger must stay <= 2 entries (ISSUE 4)"
+    assert not set(KNOWN_SIGN_DISAGREEMENTS) & set(KNOWN_COMPILER_ERASED)
+    for cid in (*KNOWN_SIGN_DISAGREEMENTS, *KNOWN_COMPILER_ERASED):
         assert zoo.get_case(cid).expect_detect, cid
+
+
+# ---------------------------------------------------------------------------
+# parity matrix on GENERATED cases: attribution quality is gated on the
+# mutation engine's scenarios, not just the hand-written zoo twins
+# ---------------------------------------------------------------------------
+
+# mutation class -> (representative clean program, expected HLO verdict):
+# 'agree'  — the compiled module preserves the injected waste's sign;
+# 'erased' — XLA removes the injected waste at compile time (the documented
+#            transformation), so compiled totals tie.
+MUTATION_PARITY = {
+    "dtype_upcast": ("mlp_swiglu", "agree"),         # precision attr survives
+    "redundant_recompute": ("mlp_swiglu", "agree"),  # twin dots both lowered
+    "sync_in_loop": ("mlp_swiglu", "agree"),         # shard_map region costed
+    "oversized_padding": ("mlp_swiglu", "agree"),    # pad+slice materialize
+    "op_split": ("mlp_swiglu", "erased"),            # re-fused into one loop
+    "scan_body": ("scan_mlp", "agree"),              # known_trip_count attrib
+    "layout_thrash": ("mlp_swiglu", "erased"),       # algsimp deletes t∘t
+    "storage_upcast": ("act_chain_bf16", "erased"),  # converts fused away
+}
+
+
+@pytest.fixture(scope="module")
+def mutation_parity_session():
+    from repro.core.session import Session
+    return Session(), {}
+
+
+@pytest.mark.parametrize("mclass", sorted(MUTATION_PARITY))
+def test_mutation_parity_matrix(mclass, mutation_parity_session):
+    from repro.testing.mutate import MUTATIONS, clean_programs, make_mutant
+
+    session, clean_cache = mutation_parity_session
+    prog_name, expected = MUTATION_PARITY[mclass]
+    prog = {p.name: p for p in clean_programs()}[prog_name]
+    if prog_name not in clean_cache:
+        clean_cache[prog_name] = (prog.make_args(), None)
+        args = clean_cache[prog_name][0]
+        clean_cache[prog_name] = (args, session.capture(prog.fn, args,
+                                                        name=prog_name))
+    args, clean = clean_cache[prog_name]
+    mutant, sites = make_mutant(prog.fn, MUTATIONS[mclass](), args)
+    assert sites > 0, f"{mclass} found no site in {prog_name}"
+
+    mut_art = session.capture(mutant, args, name=mutant.__name__)
+    rep = session.compare(mut_art, clean)
+    waste = [f for f in rep.waste_findings if f.wasteful_side == "A"]
+    assert waste, f"{mclass}:{prog_name} not detected analytically"
+
+    hlo = HloCostBackend()
+    prof_a = hlo.profile(mut_art.graph, args)
+    prof_b = hlo.profile(clean.graph, args)
+    regions_agree = all(
+        subgraph_energy(prof_a, f.nodes_a) > subgraph_energy(prof_b,
+                                                             f.nodes_b)
+        for f in waste)
+    ta, tb = prof_a.total_energy_j, prof_b.total_energy_j
+    rel = abs(ta - tb) / max(ta, tb, 1e-30)
+    verdict = ("agree" if (regions_agree and ta > tb)
+               else ("erased" if rel <= ERASED_REL_TOL else "flip"))
+    assert verdict == expected, (
+        f"{mclass}:{prog_name}: expected HLO parity {expected!r}, measured "
+        f"{verdict!r} (regions_agree={regions_agree}, A={ta:.3e} J, "
+        f"B={tb:.3e} J) — per-op attribution behavior changed; re-verify "
+        "and update MUTATION_PARITY")

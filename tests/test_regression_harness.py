@@ -44,6 +44,7 @@ COMMITTED_DIR = Path(__file__).parent / "baselines"
 def test_all_zoo_baselines_replay_offline_with_zero_drift(golden, monkeypatch):
     """Every recorded case re-compares bit-identically from its golden
     artifacts — with the instrumented interpreter provably never invoked."""
+    golden["records"].record_all()            # lazy fixture: force full zoo
     def forbid(*a, **k):
         raise AssertionError("offline replay executed a candidate")
 
@@ -127,28 +128,71 @@ def mutation_validation():
 
 
 def test_scenario_space_breadth(mutation_validation):
-    """The generated scenario space covers the acceptance floor: >= 4
-    mutation classes with >= 2 distinct clean programs each, >= 8 scenarios
-    overall — and every expected kind is a real taxonomy member."""
+    """The generated scenario space covers the full taxonomy: all 8
+    mutation classes generate scenarios, each on >= 2 distinct clean
+    programs, >= 20 scenarios overall — and every expected kind is a real
+    taxonomy member."""
     res = mutation_validation
-    assert len(res.results) >= 8
+    assert len(MUTATIONS) == 8
+    assert len(res.results) >= 20
     per_class = res.by_class()
-    assert len(per_class) >= 4
-    broad = {cls for cls, rs in per_class.items()
-             if len({r.program for r in rs}) >= 2}
-    assert len(broad) >= 4, f"classes with >=2 programs: {sorted(broad)}"
+    assert set(per_class) == set(MUTATIONS), \
+        f"classes with no generated scenario: {set(MUTATIONS) - set(per_class)}"
+    narrow = {cls for cls, rs in per_class.items()
+              if len({r.program for r in rs}) < 2}
+    assert not narrow, f"classes with <2 programs: {sorted(narrow)}"
     for cls in MUTATIONS.values():
         assert cls.expected_kinds
         assert set(cls.expected_kinds) <= set(DIAGNOSIS_KINDS)
 
 
 def test_mutants_detected_and_correctly_classified(mutation_validation):
-    """>= 4 classes fully validated on >= 2 programs each; misclassified
-    scenarios (if any) are reported per class in the failure message."""
+    """All 8 classes detected AND correctly root-caused on >= 2 programs
+    each; misclassified scenarios (if any) are reported per class in the
+    failure message."""
     res = mutation_validation
-    assert len(res.validated_classes(min_programs=2)) >= 4, res.summary()
+    assert res.validated_classes(min_programs=2) == set(MUTATIONS), \
+        res.summary()
     # this repo's detector currently clears the whole matrix — hold the line
     assert not res.misclassified(), res.summary()
+
+
+def test_new_waste_classes_target_the_planted_constructs():
+    """The PR-4 taxonomy additions hit their intended sites: scan_body only
+    rewrites scans with body matmuls, layout_thrash round-trips matmul
+    operands, storage_upcast only fires on bf16 non-matmul ops."""
+    progs = {p.name: p for p in clean_programs()}
+
+    scan_prog = progs["scan_mlp"]
+    args = scan_prog.make_args()
+    mutant, sites = make_mutant(scan_prog.fn, MUTATIONS["scan_body"](), args)
+    assert sites == 1                          # one scan super-node
+    want = np.asarray(scan_prog.fn(*args))
+    np.testing.assert_array_equal(np.asarray(mutant(*args)), want)
+
+    # no scan -> no site
+    mlp = progs["mlp_swiglu"]
+    _, sites = make_mutant(mlp.fn, MUTATIONS["scan_body"](), mlp.make_args())
+    assert sites == 0
+
+    # layout_thrash: bitwise-identical values, one site per dot
+    args = mlp.make_args()
+    mutant, sites = make_mutant(mlp.fn, MUTATIONS["layout_thrash"](), args)
+    assert sites == 3
+    np.testing.assert_array_equal(np.asarray(mutant(*args)),
+                                  np.asarray(mlp.fn(*args)))
+
+    # storage_upcast: fires on the bf16 program, never on f32 ones
+    bf16 = progs["act_chain_bf16"]
+    args = bf16.make_args()
+    mutant, sites = make_mutant(bf16.fn, MUTATIONS["storage_upcast"](), args)
+    assert sites >= 2
+    got = np.asarray(mutant(*args), dtype=np.float32)
+    want = np.asarray(bf16.fn(*args), dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+    _, sites = make_mutant(mlp.fn, MUTATIONS["storage_upcast"](),
+                           mlp.make_args())
+    assert sites == 0
 
 
 def test_mutants_preserve_semantics():

@@ -259,6 +259,36 @@ def test_rank_agrees_with_pairwise_compares():
         assert result.waste_matrix[j][i] == pytest.approx(w_ji)
 
 
+def test_rank_saves_each_artifact_at_most_once(tmp_path):
+    """Store-backed rank persists dirty artifacts ONCE at rank exit, not
+    after every pairwise compare (O(N²) full .npz rewrites before the fix).
+    N captures -> exactly N saves; rank of N candidates -> <= N more."""
+    saves: list[str] = []
+
+    class SpyStore(ArtifactStore):
+        def save(self, artifact):
+            saves.append(artifact.key)
+            return super().save(artifact)
+
+    args, fns = _matpow_candidates()
+    fns = fns[:3]                  # pow8_mixed/semi share a jaxpr (cache hit)
+    session = Session(store=None)
+    session.store = SpyStore(tmp_path)
+    arts = [session.capture(fn, args, name=fn.__name__) for fn in fns]
+    assert len(saves) == len(fns)             # one save per capture
+
+    saves.clear()
+    session.rank(arts, output_rtol=5e-2)
+    assert len(saves) <= len(fns), \
+        f"rank re-saved artifacts per compare: {saves}"
+    assert len(set(saves)) == len(saves)      # no artifact written twice
+    # the deferred saves persisted the phase-2 memo: offline replay works
+    session2 = Session(store=None)
+    session2.store = ArtifactStore(tmp_path)
+    loaded = [session2.store.load(a.key) for a in arts]
+    session2.rank(loaded, output_rtol=5e-2)   # would raise on missing values
+
+
 def test_rank_result_json_roundtrip():
     args, fns = _matpow_candidates()
     session = Session()
@@ -288,6 +318,100 @@ def test_report_from_json_roundtrip():
     f = rep.findings[0]
     assert Finding.from_json(json.dumps(
         json.loads(rep.to_json())["findings"][0])) == f
+
+
+# ---------------------------------------------------------------------------
+# artifact schema: v2 per-op HLO costs + v1 backward compatibility
+# ---------------------------------------------------------------------------
+
+def test_artifact_persists_per_op_hlo_costs(tmp_path):
+    """An HLO-backend capture round-trips its per-op attribution through the
+    store: the loaded profile carries the same per-node cost columns."""
+    case = cases.get_case("c6-matpow")
+    session = Session(backend=HloCostBackend(), store=str(tmp_path))
+    art = session.capture(case.inefficient, case.make_args(), name="x")
+    assert art.profile.hlo is not None
+    assert art.profile.hlo.num_nodes == len(art.graph.nodes)
+    loaded = session.load(art.key)
+    assert loaded.profile.hlo is not None
+    np.testing.assert_array_equal(loaded.profile.hlo.flops,
+                                  art.profile.hlo.flops)
+    np.testing.assert_array_equal(loaded.profile.hlo.hbm_bytes,
+                                  art.profile.hlo.hbm_bytes)
+    # JSON round-trip preserves floats exactly
+    assert loaded.profile.hlo.module == art.profile.hlo.module
+
+
+def test_v1_artifact_loads_with_hlo_costs_marked_absent(tmp_path):
+    """Old (format v1) artifacts still load; their per-op HLO costs are
+    marked absent (profile.hlo is None) rather than erroring."""
+    import json as _json
+
+    from repro.core import artifact as artifact_mod
+
+    case = cases.get_case("c6-matpow")
+    session = Session(store=str(tmp_path))
+    art = session.capture(case.inefficient, case.make_args(), name="x")
+    path = session.store.path_for(art.key)
+
+    # rewrite the saved npz's meta block as a v1 payload (no 'hlo' field)
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files}
+    meta = _json.loads(arrays["meta"].tobytes().decode())
+    meta["format_version"] = 1
+    meta["profile"].pop("hlo", None)
+    arrays["meta"] = np.frombuffer(_json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+
+    loaded = CandidateArtifact.load(path)
+    assert loaded.profile.hlo is None
+    assert loaded.profile.total_energy_j == pytest.approx(
+        art.profile.total_energy_j)
+
+    # an unknown future version still refuses loudly
+    meta["format_version"] = 99
+    arrays["meta"] = np.frombuffer(_json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+    with pytest.raises(ValueError, match="format v99"):
+        CandidateArtifact.load(path)
+    assert artifact_mod.ARTIFACT_FORMAT_VERSION == 2
+
+
+# ---------------------------------------------------------------------------
+# CLI zoo re-attach: rejected provenance must not orphan store entries
+# ---------------------------------------------------------------------------
+
+def test_maybe_attach_zoo_rejection_leaves_store_clean(tmp_path):
+    """A loaded artifact whose zoo provenance fails the key check must NOT
+    persist its probe re-capture: before the fix the rejected capture
+    stayed behind as an orphan store entry."""
+    from repro.cli import _maybe_attach_zoo
+
+    case = cases.get_case("c6-matpow")
+    session = Session(store=str(tmp_path))
+    art = session.capture(case.inefficient, case.make_args(), name="x",
+                          extra_meta={"zoo_case": case.id,
+                                      "zoo_side": "ineff"})
+    session.store.save(art)
+    keys_before = set(session.store.keys())
+
+    stale = session.store.load(art.key)
+    assert not stale.is_live
+    # tamper the provenance: claims to be the OTHER twin, so the re-capture
+    # key cannot match the recorded one
+    stale.meta["zoo_side"] = "eff"
+    out = _maybe_attach_zoo(stale, session)
+    assert out is stale                      # rejected: artifact unchanged
+    assert not out.is_live
+    assert set(session.store.keys()) == keys_before, \
+        "rejected zoo re-attach orphaned an entry in the store"
+
+    # intact provenance still re-attaches (and stays clean: cache hit)
+    good = session.store.load(art.key)
+    attached = _maybe_attach_zoo(good, session)
+    assert attached.is_live
+    assert attached.key == art.key
+    assert set(session.store.keys()) == keys_before
 
 
 # ---------------------------------------------------------------------------

@@ -31,7 +31,8 @@ python -m repro.cli capture c6-matpow:ineff c6-matpow:eff
 python -m repro.cli compare c6-matpow:ineff c6-matpow:eff \
     --json "$STORE/rep.json" --expect-waste > /dev/null
 # compare by bare artifact key (zoo provenance re-attach path)
-mapfile -t KEYS < <(cd "$STORE" && ls ./*.npz | sed 's|^\./||; s|\.npz$||')
+mapfile -t KEYS < <(cd "$STORE/manifests" && ls ./*.json \
+    | sed 's|^\./||; s|\.json$||')
 python -m repro.cli compare "${KEYS[0]}" "${KEYS[1]}" \
     --output-rtol 0.05 > /dev/null
 python -m repro.cli report "$STORE/rep.json" > /dev/null
@@ -70,12 +71,43 @@ python -m repro.cli baseline check --dir "$BDIR" --offline "${ARGS[@]}"
 
 # HLO-backend lane: record one case under the per-op HLO backend, then
 # prove the per-op attribution round-trips the store by replaying it
-# offline bit-identically (artifact schema v2 gate)
+# offline bit-identically (artifact schema gate)
 BHLO="$(mktemp -d)"
 trap 'rm -rf "$STORE" "$BDIR" "$BHLO"' EXIT
 python -m repro.cli baseline record --dir "$BHLO" --backend hlo c6-matpow
 python -m repro.cli baseline check --dir "$BHLO" --backend hlo --offline c6-matpow
 echo "baseline-check OK"
+
+echo "== store round-trip (chunked v3: dedup + sketch-only replay) =="
+# Record the fast lane into a fresh sketch-only golden store, report the
+# dedup ratio (monolithic-equivalent bytes / physical chunked bytes) and
+# the sketch-only coverage, gate the >=3x shrink acceptance bound, then
+# push to a file:// mirror and run the offline drift check entirely from
+# that RemoteStore (zero instrumented execution, zero raw-value chunks).
+SDIR="$(mktemp -d)"
+trap 'rm -rf "$STORE" "$BDIR" "$BHLO" "$SDIR"' EXIT
+python -m repro.cli baseline record --dir "$SDIR" "${BASELINE_CASES[@]}"
+python -m repro.cli artifacts stats --store "$SDIR/store" \
+    --json "$SDIR/stats.json"
+python - "$SDIR/stats.json" <<'PY'
+import json, sys
+s = json.load(open(sys.argv[1]))
+ratio = s["dedup_ratio"]
+cov = s["sketch_only_fraction"]
+print(f"store round-trip: dedup ratio {ratio:.2f}x vs monolithic layout, "
+      f"sketch-only coverage {cov:.1%} "
+      f"({s['values_sketch_only']}/{s['values_total']} values, "
+      f"{s['spectra_entries']} spectra entries)")
+assert ratio >= 3.0, (
+    f"regenerated golden store is only {ratio:.2f}x smaller than the "
+    "monolithic layout (acceptance bound: >=3x)")
+assert cov == 1.0, f"sketch-only coverage {cov:.1%} < 100%"
+PY
+MIRROR="$SDIR/mirror"
+python -m repro.cli artifacts push --store "$SDIR/store" --to "file://$MIRROR"
+python -m repro.cli baseline check --dir "$SDIR" --offline \
+    --store "file://$MIRROR" "${BASELINE_CASES[@]}"
+echo "store round-trip OK"
 
 if [[ "$FULL" == 1 ]]; then
     echo "== overhead benchmark (BENCH_overhead.json) =="

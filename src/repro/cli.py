@@ -8,13 +8,19 @@ Drives the Session/artifact API (core/session.py) from the shell::
   python -m repro.cli rank c6-matpow:ineff c6-matpow:eff [SPEC ...]
   python -m repro.cli report out.json               # re-render stored JSON
   python -m repro.cli artifacts                     # list the store
+  python -m repro.cli artifacts stats               # dedup / sketch coverage
+  python -m repro.cli artifacts push --to file:///mnt/nfs/magneton
+  python -m repro.cli artifacts pull --from http://mirror:8000
+  python -m repro.cli artifacts migrate             # legacy .npz -> v3
 
 Candidate SPECs are either zoo references ``<case-id>:<ineff|eff>``
 (resolved through the registry in zoo/cases.py and captured on the case's
 canonical inputs — repeated invocations hit the content-addressed store and
 skip re-execution) or artifact keys / ``.npz`` paths produced by an earlier
-``capture``.  The store root comes from ``--store``, ``$MAGNETON_STORE``, or
-``~/.cache/magneton/artifacts``.
+``capture``.  The store root comes from ``--store`` (a path, ``file://``
+URI, or readonly ``http(s)://`` mirror), ``$MAGNETON_STORE``, or
+``~/.cache/magneton/artifacts``; ``--remote URI`` attaches a read-through
+upstream so captures recorded elsewhere become local cache hits.
 """
 
 from __future__ import annotations
@@ -28,6 +34,7 @@ from pathlib import Path
 from repro.core.artifact import (ArtifactStore, ArtifactValueError,
                                  CandidateArtifact)
 from repro.core.energy import backend_from_name
+from repro.core.store import StoreReadOnlyError
 from repro.core.report import Report
 from repro.core.session import RankResult, Session
 from repro.zoo import cases as zoo
@@ -118,17 +125,35 @@ def _resolve_spec(spec: str, session: Session) -> _Resolved:
         f"({session.store.root if session.store else 'no store'})")
 
 
+def _open_store(uri: str | None, remote: str | None = None) -> ArtifactStore:
+    if remote and uri is not None and "://" in str(uri):
+        # a URI store is itself remote-backed; silently ignoring --remote
+        # would discard the user's read-through cache expectation
+        raise SystemExit(
+            "error: --remote needs a LOCAL --store path to cache into; "
+            f"--store {uri!r} is already a remote URI")
+    if uri is None:
+        return ArtifactStore(remote=remote) if remote else ArtifactStore()
+    if remote:
+        return ArtifactStore(uri, remote=remote)
+    return ArtifactStore.from_uri(uri)
+
+
 def _make_session(args) -> Session:
     return Session(backend=backend_from_name(args.backend),
-                   store=ArtifactStore(args.store) if args.store
-                   else ArtifactStore(),
+                   store=_open_store(args.store,
+                                     getattr(args, "remote", None)),
                    num_input_samples=args.samples)
 
 
 def _add_common(p: argparse.ArgumentParser) -> None:
     p.add_argument("--store", default=None,
-                   help="artifact store root (default: $MAGNETON_STORE or "
-                        "~/.cache/magneton/artifacts)")
+                   help="artifact store root or URI (path, file:// or "
+                        "readonly http(s):// mirror; default: "
+                        "$MAGNETON_STORE or ~/.cache/magneton/artifacts)")
+    p.add_argument("--remote", default=None, metavar="URI",
+                   help="read-through upstream store: cache misses pull "
+                        "manifests/chunks recorded elsewhere")
     p.add_argument("--backend", default="analytic",
                    choices=("analytic", "replay", "hlo"))
     p.add_argument("--samples", type=int, default=2,
@@ -156,6 +181,16 @@ def cmd_capture(args) -> int:
         print(f"{hit} {art.name}: key={art.key} nodes={len(art.graph.nodes)} "
               f"samples={art.num_samples} "
               f"energy={art.profile.total_energy_j:.4e} J -> {where}")
+        if art.profile.hlo is not None:
+            # attribution-quality monitoring: a rising residual fraction or
+            # opaque-node count means per-op pricing is degrading
+            s = art.profile.hlo.attribution_summary()
+            print(f"  attribution: direct {s['direct_fraction']:.1%} of "
+                  f"{s['instructions']} instrs, residual "
+                  f"flops {s['residual_flop_fraction']:.2%} / "
+                  f"bytes {s['residual_byte_fraction']:.2%}, "
+                  f"opaque-nodes {s['opaque_nodes']}, "
+                  f"fusion-splits {s['fusion_splits']}")
     return 0
 
 
@@ -205,8 +240,9 @@ def _parse_bytes(text: str) -> int:
 
 
 def cmd_artifacts(args) -> int:
-    store = ArtifactStore(args.store) if args.store else ArtifactStore()
-    if getattr(args, "action", None) == "prune":
+    store = _open_store(args.store)
+    action = getattr(args, "action", None)
+    if action == "prune":
         try:
             deleted = store.prune(
                 max_bytes=(_parse_bytes(args.max_bytes)
@@ -220,11 +256,54 @@ def cmd_artifacts(args) -> int:
         print(f"{verb} {len(deleted)} artifacts; store {store.root} now "
               f"{store.total_bytes() / 1024:.1f} KiB")
         return 0
+    if action == "stats":
+        s = store.stats()
+        print(f"artifacts: {s['artifacts']} manifests "
+              f"(+{s['legacy_npz']} legacy .npz)")
+        print(f"chunks: {s['chunk_count']} "
+              f"({s['chunk_bytes'] / 1024:.1f} KiB)")
+        print(f"values: {s['values_total']} recorded, "
+              f"{s['values_sketch_only']} sketch-only "
+              f"({s['sketch_only_fraction']:.1%}); "
+              f"{s['spectra_entries']} spectra entries")
+        print(f"physical bytes: {s['physical_bytes'] / 1024:.1f} KiB; "
+              f"monolithic-equivalent: "
+              f"{s['monolithic_bytes'] / 1024:.1f} KiB")
+        print(f"dedup ratio: {s['dedup_ratio']:.2f}x")
+        if args.json:
+            Path(args.json).write_text(json.dumps(s, indent=2))
+            print(f"wrote {args.json}")
+        return 0
+    if action == "push":
+        res = store.push(args.to, keys=args.key or None)
+        print(f"pushed {res['manifests']} manifests to {args.to}: "
+              f"{res['chunks_copied']} chunks copied "
+              f"({res['bytes_copied'] / 1024:.1f} KiB), "
+              f"{res['chunks_skipped']} already present")
+        return 0
+    if action == "pull":
+        res = store.pull(getattr(args, "from"), keys=args.key or None)
+        print(f"pulled {res['manifests']} manifests from "
+              f"{getattr(args, 'from')}: {res['chunks_copied']} chunks "
+              f"copied ({res['bytes_copied'] / 1024:.1f} KiB), "
+              f"{res['chunks_skipped']} already present")
+        return 0
+    if action == "migrate":
+        res = store.migrate(args.key or None,
+                            delete_legacy=not args.keep_legacy)
+        print(f"migrated {res['migrated']} legacy .npz artifacts to the "
+              f"chunked v3 layout ({res['skipped']} skipped); "
+              f"store {store.root} now {store.total_bytes() / 1024:.1f} KiB")
+        return 0
     entries = store.entries()
     for e in entries:
+        values = (f"values={e['cached_values']:4}"
+                  if not e.get("sketch_only_values")
+                  else f"values={e['cached_values']:4}"
+                       f"+{e['sketch_only_values']}s")
         print(f"{e['key']:22} {e['name']:28} backend={e['backend']:12} "
               f"nodes={e['nodes']:5} samples={e['samples']} "
-              f"values={e['cached_values']:4} {e['bytes'] / 1024:.1f} KiB")
+              f"{values} {e['bytes'] / 1024:.1f} KiB")
     print(f"{len(entries)} artifacts in {store.root}")
     return 0
 
@@ -242,11 +321,11 @@ def cmd_baseline(args) -> int:
     from repro.testing.baselines import (DEFAULT_ENERGY_RTOL, BaselineError,
                                          BaselineStore)
 
-    # the golden artifacts ALWAYS live in <dir>/store (BaselineStore pins
-    # the session's store there), so `baseline` takes no --store flag
     session = Session(backend=backend_from_name(args.backend),
                       num_input_samples=args.samples)
-    store = BaselineStore(args.dir, session=session)
+    store = BaselineStore(
+        args.dir, session=session, artifact_store=args.store,
+        sketch_only=not getattr(args, "full_values", False))
     cases = _baseline_cases(args.case)
     if args.action == "record":
         rtol = (args.energy_rtol if args.energy_rtol is not None
@@ -331,21 +410,49 @@ def build_parser() -> argparse.ArgumentParser:
     prp.set_defaults(fn=cmd_report)
 
     pa = sub.add_parser("artifacts",
-                        help="list or garbage-collect the artifact store")
+                        help="list, GC, transfer or migrate the store")
     pa.add_argument("--store", default=None)
     pa.set_defaults(fn=cmd_artifacts, action=None)
     pasub = pa.add_subparsers(dest="action")
-    pap = pasub.add_parser("prune", help="GC the store, oldest first")
-    # SUPPRESS: when --store is not given after `prune`, the subparser must
-    # not plant its own default over a value parsed at the `artifacts` level
-    # (`artifacts --store X prune` would otherwise GC the DEFAULT store)
-    pap.add_argument("--store", default=argparse.SUPPRESS)
+
+    def _store_sub(name: str, help_: str) -> argparse.ArgumentParser:
+        px = pasub.add_parser(name, help=help_)
+        # SUPPRESS: when --store is not given after the action, the
+        # subparser must not plant its own default over a value parsed at
+        # the `artifacts` level (`artifacts --store X prune` would
+        # otherwise act on the DEFAULT store)
+        px.add_argument("--store", default=argparse.SUPPRESS)
+        px.set_defaults(fn=cmd_artifacts)
+        return px
+
+    pap = _store_sub("prune", "GC the store, oldest first (refcount-aware)")
     pap.add_argument("--max-bytes", default=None, metavar="N[K|M|G]",
                      help="prune oldest artifacts until the store fits")
     pap.add_argument("--keep-latest", type=int, default=0,
                      help="never prune the N most recent artifacts")
     pap.add_argument("--dry-run", action="store_true")
-    pap.set_defaults(fn=cmd_artifacts)
+
+    pas = _store_sub("stats", "dedup / sketch-only accounting")
+    pas.add_argument("--json", default=None, help="also write stats JSON")
+
+    papu = _store_sub("push", "copy manifests + missing chunks to a mirror")
+    papu.add_argument("--to", required=True, metavar="URI",
+                      help="destination store (path or file:// URI)")
+    papu.add_argument("key", nargs="*", metavar="KEY",
+                      help="keys to push (default: everything)")
+
+    papl = _store_sub("pull", "fetch manifests + missing chunks from a store")
+    papl.add_argument("--from", required=True, metavar="URI", dest="from",
+                      help="source store (path, file:// or http(s):// URI)")
+    papl.add_argument("key", nargs="*", metavar="KEY",
+                      help="keys to pull (default: everything)")
+
+    pam = _store_sub("migrate",
+                     "convert legacy .npz entries to the chunked v3 layout")
+    pam.add_argument("--keep-legacy", action="store_true",
+                     help="leave the source .npz files in place")
+    pam.add_argument("key", nargs="*", metavar="KEY",
+                     help="keys to migrate (default: every legacy entry)")
 
     pb = sub.add_parser(
         "baseline", help="golden energy baselines: record / check drift")
@@ -355,8 +462,12 @@ def build_parser() -> argparse.ArgumentParser:
         px.add_argument("case", nargs="*", metavar="CASE",
                         help="zoo case ids (default: every registered case)")
         px.add_argument("--dir", default="tests/baselines",
-                        help="baseline root (JSON expectations + store/; "
-                             "golden artifacts always live in <dir>/store)")
+                        help="baseline root (JSON expectations + index.json; "
+                             "golden artifacts default to <dir>/store)")
+        px.add_argument("--store", default=None, metavar="URI",
+                        help="golden artifact store override: a path, a "
+                             "file:// NFS mirror, or a readonly http(s):// "
+                             "mirror for offline checks")
         px.add_argument("--backend", default="analytic",
                         choices=("analytic", "replay", "hlo"))
         px.add_argument("--samples", type=int, default=2,
@@ -365,6 +476,10 @@ def build_parser() -> argparse.ArgumentParser:
     pbsub.choices["record"].add_argument(
         "--energy-rtol", type=float, default=None,
         help="declared tolerance for the recorded energy fields")
+    pbsub.choices["record"].add_argument(
+        "--full-values", action="store_true",
+        help="persist raw value chunks too (default: sketch-only manifests "
+             "— digests + spectra replay every recorded match)")
     pbsub.choices["check"].add_argument(
         "--offline", action="store_true",
         help="replay from golden artifacts only; no instrumented execution")
@@ -383,6 +498,10 @@ def main(argv: list[str] | None = None) -> int:
     except ValueError as e:
         # predictable user errors from compare/rank (backend or sample-seed
         # mismatch, not-the-same-task gate) — message, not a traceback
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    except (PermissionError, StoreReadOnlyError) as e:
+        # writes against a readonly (http mirror) store
         print(f"error: {e}", file=sys.stderr)
         return 2
 

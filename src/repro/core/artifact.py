@@ -9,20 +9,31 @@ metadata.  ``Session.compare`` / ``Session.rank`` run matching +
 classification + diagnosis *from artifacts only* — comparing N candidates
 costs N captures, not N² end-to-end pipelines.
 
-Artifacts round-trip through :class:`ArtifactStore`, a content-addressed
-on-disk store keyed by ``sha256(jaxpr ‖ input shapes/dtypes ‖ sample seeds ‖
-backend id)``; re-capturing an identical (function, inputs, seeds, backend)
-combination is a cache hit that skips every instrumented execution.
+Storage is two-tier (schema v3):
 
-Lazy phase-2 values: the streaming matcher re-captures concrete tensor
-values only for pairs surviving the cheap invariant gate.  A *live* artifact
-(fresh capture, or cache hit re-attached to its traced jaxpr) serves those
-fetches by selective re-execution; every fetched value is memoized on the
-artifact and persisted on save, so artifacts *loaded* from the store can
-re-run past comparisons offline — entirely from disk, bit-identically.  A
-loaded artifact asked for a value it has never materialized raises
-:class:`ArtifactValueError` (re-attach the callable via ``Session.capture``
-or ``CandidateArtifact.attach`` to extend it).
+* a small JSON **manifest** per capture key — graph, streamed signatures,
+  energy profile, per-op HLO costs, phase-2 *value digests* and *unfolding
+  spectra* (so offline replay can re-decide every recorded match without
+  touching raw values), and content references into
+* a **content-addressed chunk store** — every phase-2 tensor value and
+  sample-0 output is chunked (``store.CHUNK_BYTES``) and keyed by sha256,
+  so identical values shared across candidates / samples / baselines (twin
+  captures share inputs; matched activations are bitwise equal across
+  sides) are stored exactly once.
+
+Raw chunks are fetched lazily: a loaded artifact materializes a value only
+when a comparison actually needs it, and a *sketch-only* manifest (golden
+baselines by default) records digests + spectra but no raw chunks at all —
+replaying a recorded comparison then performs **zero** raw-value reads.
+
+The transport underneath (:class:`~repro.core.store.LocalStore` read-through
+cache, :class:`~repro.core.store.RemoteStore` ``file://``/``http://``
+mirrors) is pluggable via the :class:`~repro.core.store.Store` protocol, so
+a fleet can pull captures recorded elsewhere.
+
+v1/v2 monolithic ``.npz`` artifacts still load (per-op HLO costs absent for
+v1; digests/spectra recomputed from their eagerly-stored values), and
+``ArtifactStore.migrate`` converts them to the chunked layout in place.
 """
 
 from __future__ import annotations
@@ -40,14 +51,19 @@ import numpy as np
 from repro.core.energy import EnergyProfile, OpEnergy
 from repro.core.graph import OpGraph, OpNode, TensorEdge
 from repro.core.hlo_costs import PerOpCosts
+from repro.core.store import (LocalStore, RemoteStore, Store, open_store,
+                              chunk_digest, split_chunks)
 from repro.core.tensor_match import TensorSignature
 
-# v2 added the per-op HLO cost attribution block on the energy profile
-# (profile.hlo -> PerOpCosts).  v1 artifacts still load: their per-op HLO
-# costs are marked absent (None) and can be recomputed by re-capturing
-# under an HloCostBackend session.
-ARTIFACT_FORMAT_VERSION = 2
-_READABLE_VERSIONS = (1, 2)
+# v3 split the monolithic per-key .npz into a JSON manifest + sha256-chunked
+# value store, and added phase-1/phase-2 replay evidence (value digests +
+# unfolding spectra) to the manifest.  v2 added the per-op HLO cost block
+# (profile.hlo); v1 artifacts load with those costs marked absent.  The
+# monolithic .npz container (CandidateArtifact.save/load) remains the v2
+# format and stays readable — ArtifactStore.migrate converts it.
+ARTIFACT_FORMAT_VERSION = 3
+_READABLE_VERSIONS = (1, 2, 3)
+_NPZ_FORMAT_VERSION = 2          # what CandidateArtifact.save(path) writes
 
 _STORE_ENV = "MAGNETON_STORE"
 _DEFAULT_STORE = "~/.cache/magneton/artifacts"
@@ -216,6 +232,71 @@ def _array_from_buffer(buf: np.ndarray, dtype: str,
         tuple(shape))
 
 
+def _array_bytes(arr: np.ndarray) -> bytes:
+    return np.ascontiguousarray(arr).tobytes()
+
+
+def value_digest(arr: np.ndarray) -> str:
+    """sha256 of a tensor value's raw bytes — bitwise equality evidence.
+
+    The matcher's identical-value fast path compares digests: equal digests
+    mean bitwise-equal buffers, so the full spectral test would pass by
+    construction and is skipped.  (Phase-2 values are NaN-free by the
+    degenerate-signature gate, so bitwise equality and elementwise equality
+    coincide up to the sign of zero, where the spectral test agrees anyway.)
+    """
+    return chunk_digest(_array_bytes(np.asarray(arr)))
+
+
+@dataclasses.dataclass
+class ValueRef:
+    """Manifest record of one phase-2 value: identity always, bytes maybe.
+
+    ``chunks`` is the ordered chunk-digest list reconstructing the raw
+    buffer, or ``None`` for sketch-only entries (digest + dtype/shape known,
+    raw bytes never persisted — offline replay decides from the digest and
+    the manifest spectra instead).
+    """
+
+    dtype: str
+    shape: tuple[int, ...]
+    nbytes: int
+    digest: str
+    chunks: list[str] | None
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"dtype": self.dtype, "shape": list(self.shape),
+                "nbytes": self.nbytes, "digest": self.digest,
+                "chunks": self.chunks}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ValueRef":
+        return cls(dtype=d["dtype"], shape=tuple(d["shape"]),
+                   nbytes=int(d["nbytes"]), digest=d["digest"],
+                   chunks=list(d["chunks"]) if d.get("chunks") is not None
+                   else None)
+
+
+def _spectra_payload(memo: Mapping[tuple[int, int, tuple[int, int]],
+                                   list[np.ndarray]]) -> list[dict[str, Any]]:
+    out = []
+    for (k, tid, (rows, cols)) in sorted(memo):
+        lst = memo[(k, tid, (rows, cols))]
+        out.append({"k": k, "tid": tid, "rows": rows, "cols": cols,
+                    # float() -> repr-based JSON floats: exact round-trip,
+                    # so replayed _setwise_match is bit-identical
+                    "spectra": [[float(v) for v in s] for s in lst]})
+    return out
+
+
+def _spectra_from_payload(payload: Sequence[Mapping[str, Any]]
+                          ) -> dict[tuple[int, int, tuple[int, int]],
+                                    list[np.ndarray]]:
+    return {(int(d["k"]), int(d["tid"]), (int(d["rows"]), int(d["cols"]))):
+            [np.asarray(s, dtype=np.float64) for s in d["spectra"]]
+            for d in payload}
+
+
 # ---------------------------------------------------------------------------
 # the artifact
 # ---------------------------------------------------------------------------
@@ -238,10 +319,19 @@ class CandidateArtifact:
     # phase-2 value memo, persisted on save: (sample_idx, tid) -> value
     values: dict[tuple[int, int], np.ndarray] = dataclasses.field(
         default_factory=dict, repr=False)
+    # phase-2 replay evidence (manifest-persisted): value identity records
+    # and memoized unfolding spectra, keyed (sample, tid[, (rows, cols)])
+    value_index: dict[tuple[int, int], ValueRef] = dataclasses.field(
+        default_factory=dict, repr=False)
+    spectra_memo: dict[tuple[int, int, tuple[int, int]], list[np.ndarray]] = \
+        dataclasses.field(default_factory=dict, repr=False)
     # runtime-only: concrete input samples for selective re-execution
     _samples: tuple | None = dataclasses.field(
         default=None, repr=False, compare=False)
     _dirty: bool = dataclasses.field(default=False, repr=False, compare=False)
+    # runtime-only: chunk transport for lazy raw-value reads (set on load)
+    _chunk_source: Store | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def num_samples(self) -> int:
@@ -270,25 +360,51 @@ class CandidateArtifact:
         self.graph = graph
         self._samples = make_samples(tuple(args), self.sample_seeds)
 
+    def _fetch_from_chunks(self, k: int, tid: int) -> np.ndarray | None:
+        """Reconstruct one value from the chunk store, if it is there."""
+        ref = self.value_index.get((k, tid))
+        if ref is None or ref.chunks is None or self._chunk_source is None:
+            return None
+        try:
+            buf = b"".join(self._chunk_source.read_chunk(d)
+                           for d in ref.chunks)
+        except KeyError:
+            return None          # chunk pruned / partial mirror: treat as miss
+        return np.frombuffer(buf, dtype=np.dtype(ref.dtype)).reshape(ref.shape)
+
     def fetcher(self) -> Callable[[int, Sequence[int]], dict[int, np.ndarray]]:
         """``fetch(sample_idx, tids)`` for the lazy two-phase matcher.
 
-        Serves memoized values first; misses trigger one selective
-        re-execution (live artifacts only) and are memoized + marked dirty so
-        the store can persist them for offline re-comparison.
+        Resolution order per value: the in-memory memo, then the chunk store
+        (loaded artifacts pull raw chunks lazily — and only for tensors a
+        comparison actually still needs), then one selective re-execution
+        (live artifacts only; fetched values are memoized + marked dirty so
+        the store can persist them for offline re-comparison).
         """
         def fetch(k: int, tids: Sequence[int]) -> dict[int, np.ndarray]:
             out: dict[int, np.ndarray] = {}
-            missing = [t for t in tids if (k, t) not in self.values]
+            missing: list[int] = []
             for t in tids:
                 if (k, t) in self.values:
                     out[t] = self.values[(k, t)]
+                    continue
+                v = self._fetch_from_chunks(k, t)
+                if v is not None:
+                    self.values[(k, t)] = v   # chunk-backed: not dirty
+                    out[t] = v
+                else:
+                    missing.append(t)
             if missing:
                 if not self.is_live:
+                    sketch = [t for t in missing
+                              if (k, t) in self.value_index]
+                    detail = (f" ({len(sketch)} recorded sketch-only: "
+                              "digests+spectra persisted, raw chunks not)"
+                              if sketch else "")
                     raise ArtifactValueError(
                         f"artifact {self.name!r} ({self.key}) has no stored "
                         f"values for tensors {sorted(missing)[:8]} on sample "
-                        f"{k} and no attached program to re-execute; "
+                        f"{k}{detail} and no attached program to re-execute; "
                         "re-capture via Session.capture (cache hit "
                         "re-attaches) or call CandidateArtifact.attach")
                 from repro.core import interp
@@ -301,6 +417,12 @@ class CandidateArtifact:
                 self._dirty = True
             return out
         return fetch
+
+    def spectra_provider(self) -> "_ArtifactSpectraProvider":
+        """Replay-evidence accessor for the lazy matcher: persisted value
+        digests and unfolding spectra, written back on first computation so
+        a comparison once run is replayable with zero raw-value reads."""
+        return _ArtifactSpectraProvider(self)
 
     def materialize(self, *, sample_idxs: Sequence[int] | None = None,
                     tids: Sequence[int] | None = None) -> int:
@@ -325,11 +447,22 @@ class CandidateArtifact:
             fetch(int(k), want)
         return len(self.values)
 
-    # -- serialization ------------------------------------------------------
+    # -- monolithic .npz container (legacy v2 format) -----------------------
     def save(self, path: str | Path) -> Path:
+        """Write the monolithic ``.npz`` container (the legacy v2 layout:
+        every memoized value stored eagerly inline).  Standalone exports and
+        pytest-plugin kernel baselines use this; store-backed persistence
+        goes through ``ArtifactStore.save`` (chunked manifest, v3)."""
         path = Path(path)
+        # self-contained export: chunk-backed values are materialized inline
+        # (sketch-only entries have no raw bytes anywhere and are skipped)
+        for (k, t) in sorted(self.value_index):
+            if (k, t) not in self.values:
+                v = self._fetch_from_chunks(k, t)
+                if v is not None:
+                    self.values[(k, t)] = v
         meta = {
-            "format_version": ARTIFACT_FORMAT_VERSION,
+            "format_version": _NPZ_FORMAT_VERSION,
             "name": self.name,
             "key": self.key,
             "backend_id": self.backend_id,
@@ -389,47 +522,345 @@ class CandidateArtifact:
             sample_seeds=tuple(meta["sample_seeds"]),
             config=meta["config"], meta=meta["meta"], values=values)
 
+    # -- v3 manifest (used by ArtifactStore) --------------------------------
+    def to_manifest(self, *, persist_values: bool,
+                    write_chunk: Callable[[str, bytes], None],
+                    has_chunk: Callable[[str], bool]) -> dict[str, Any]:
+        """Build the v3 manifest payload, writing chunks through the given
+        callbacks.  With ``persist_values=False`` (sketch-only) raw value
+        chunks are skipped — only digests + spectra go into the manifest —
+        while sample-0 outputs are always chunked (the functional-
+        equivalence gate reads them on every load)."""
+        out_refs: list[dict[str, Any]] = []
+        for o in self.outputs:
+            buf = _array_bytes(o)
+            chunks = []
+            for c in split_chunks(buf):
+                d = chunk_digest(c)
+                write_chunk(d, c)
+                chunks.append(d)
+            out_refs.append(ValueRef(
+                dtype=str(o.dtype), shape=tuple(int(s) for s in o.shape),
+                nbytes=len(buf), digest=chunk_digest(buf),
+                chunks=chunks).to_dict())
+
+        val_refs: list[dict[str, Any]] = []
+        for (k, t) in sorted(set(self.values) | set(self.value_index)):
+            ref = self.value_index.get((k, t))
+            if ref is None:
+                v = self.values[(k, t)]
+                buf = _array_bytes(v)
+                ref = ValueRef(dtype=str(v.dtype),
+                               shape=tuple(int(s) for s in v.shape),
+                               nbytes=len(buf), digest=chunk_digest(buf),
+                               chunks=None)
+                self.value_index[(k, t)] = ref
+            chunks = ref.chunks
+            if persist_values and (chunks is None
+                                   or not all(has_chunk(d) for d in chunks)):
+                # materialize the bytes (memory, else the source chunk
+                # store) and write them into the target; chunk lists are
+                # content-derived, so the same value has the same list in
+                # every store — only availability differs
+                v = self.values.get((k, t))
+                if v is None:
+                    v = self._fetch_from_chunks(k, t)
+                if v is not None:
+                    chunks = []
+                    for c in split_chunks(_array_bytes(v)):
+                        d = chunk_digest(c)
+                        write_chunk(d, c)
+                        chunks.append(d)
+                    if ref.chunks is None:
+                        ref = dataclasses.replace(ref, chunks=chunks)
+                        self.value_index[(k, t)] = ref
+            if chunks is not None and not all(has_chunk(d) for d in chunks):
+                # never advertise chunks the target cannot serve (e.g. a
+                # sketch-only target, or bytes no store can produce
+                # anymore): a digest-only record is the honest state
+                chunks = None
+            rec = ref.to_dict()
+            rec["chunks"] = chunks
+            val_refs.append({"k": k, "tid": t, **rec})
+
+        return {
+            "format_version": ARTIFACT_FORMAT_VERSION,
+            "name": self.name,
+            "key": self.key,
+            "backend_id": self.backend_id,
+            "backend_label": self.backend_label,
+            "sample_seeds": list(self.sample_seeds),
+            "config": self.config,
+            "meta": self.meta,
+            "graph": _graph_payload(self.graph),
+            "stats": _stats_payload(self.sample_stats),
+            "profile": _profile_payload(self.profile),
+            "outputs": out_refs,
+            "values": val_refs,
+            "spectra": _spectra_payload(self.spectra_memo),
+        }
+
+    @classmethod
+    def from_manifest(cls, manifest: Mapping[str, Any],
+                      chunk_source: Store | None) -> "CandidateArtifact":
+        version = manifest["format_version"]
+        if version not in _READABLE_VERSIONS:
+            raise ValueError(
+                f"artifact manifest has format v{version}, this build reads "
+                f"v{'/v'.join(str(v) for v in _READABLE_VERSIONS)}")
+        outputs = []
+        for d in manifest["outputs"]:
+            ref = ValueRef.from_dict(d)
+            if chunk_source is None:
+                raise ValueError("manifest-backed artifact needs a chunk "
+                                 "source for its outputs")
+            buf = b"".join(chunk_source.read_chunk(c) for c in ref.chunks)
+            outputs.append(np.frombuffer(buf, dtype=np.dtype(ref.dtype))
+                           .reshape(ref.shape))
+        value_index = {(int(d["k"]), int(d["tid"])): ValueRef.from_dict(d)
+                       for d in manifest["values"]}
+        art = cls(
+            name=manifest["name"], key=manifest["key"],
+            graph=_graph_from_payload(manifest["graph"]),
+            sample_stats=_stats_from_payload(manifest["stats"]),
+            outputs=outputs,
+            profile=_profile_from_payload(manifest["profile"]),
+            backend_id=manifest["backend_id"],
+            backend_label=manifest["backend_label"],
+            sample_seeds=tuple(manifest["sample_seeds"]),
+            config=manifest["config"], meta=manifest["meta"],
+            value_index=value_index,
+            spectra_memo=_spectra_from_payload(manifest.get("spectra", ())))
+        art._chunk_source = chunk_source
+        return art
+
+
+class _ArtifactSpectraProvider:
+    """Persisted replay evidence: value digests + unfolding spectra.
+
+    The lazy matcher consults this before touching raw values and records
+    everything it computes, so offline replay of a recorded comparison
+    needs zero raw-value chunk reads (digest equality decides the
+    identical-value fast path; persisted spectra decide the rest).
+    """
+
+    def __init__(self, art: CandidateArtifact):
+        self._art = art
+
+    def digest(self, k: int, tid: int) -> str | None:
+        ref = self._art.value_index.get((k, tid))
+        return ref.digest if ref is not None else None
+
+    def record_digest(self, k: int, tid: int, value: np.ndarray) -> str:
+        ref = self._art.value_index.get((k, tid))
+        if ref is not None:
+            return ref.digest
+        buf = _array_bytes(value)
+        ref = ValueRef(dtype=str(value.dtype),
+                       shape=tuple(int(s) for s in value.shape),
+                       nbytes=len(buf), digest=chunk_digest(buf), chunks=None)
+        self._art.value_index[(k, tid)] = ref
+        self._art._dirty = True
+        return ref.digest
+
+    def spectra(self, k: int, tid: int,
+                key: tuple[int, int]) -> list[np.ndarray] | None:
+        return self._art.spectra_memo.get((k, tid, key))
+
+    def record_spectra(self, k: int, tid: int, key: tuple[int, int],
+                       spectra: list[np.ndarray]) -> None:
+        self._art.spectra_memo[(k, tid, key)] = spectra
+        self._art._dirty = True
+
 
 # ---------------------------------------------------------------------------
 # the store
 # ---------------------------------------------------------------------------
 
 class ArtifactStore:
-    """Content-addressed on-disk artifact store (one ``<key>.npz`` per
-    capture).  The root defaults to ``$MAGNETON_STORE`` or
-    ``~/.cache/magneton/artifacts``."""
+    """Content-addressed artifact store: v3 chunked manifests over a
+    pluggable :class:`~repro.core.store.Store` transport.
 
-    def __init__(self, root: str | Path | None = None):
-        if root is None:
-            root = os.environ.get(_STORE_ENV, _DEFAULT_STORE)
-        self.root = Path(root).expanduser()
+    The root defaults to ``$MAGNETON_STORE`` or ``~/.cache/magneton/
+    artifacts``.  ``remote`` attaches a read-through upstream (URI or
+    Store): manifest/chunk misses are pulled from it and cached locally, so
+    a cache hit on a capture recorded elsewhere still skips every
+    instrumented execution.  Legacy monolithic ``<key>.npz`` entries in the
+    root keep loading (and count as store hits) until ``migrate()`` converts
+    them.
+    """
 
+    def __init__(self, root: str | Path | None = None, *,
+                 backend: Store | None = None,
+                 remote: "Store | str | None" = None,
+                 persist_raw_values: bool = True):
+        if backend is not None:
+            self.backend = backend
+            self.root = Path(getattr(backend, "root", ".")) \
+                if getattr(backend, "root", None) is not None else None
+        else:
+            if root is None:
+                root = os.environ.get(_STORE_ENV, _DEFAULT_STORE)
+            self.root = Path(root).expanduser()
+            upstream = open_store(remote) if remote is not None else None
+            self.backend = LocalStore(self.root, upstream=upstream)
+        self.persist_raw_values = persist_raw_values
+
+    @classmethod
+    def from_uri(cls, uri: "str | Path | ArtifactStore | None",
+                 **kwargs) -> "ArtifactStore":
+        """``--store`` resolution: plain paths open a LocalStore-backed
+        store; ``file://``/``http(s)://`` URIs open a RemoteStore-backed
+        one (http mirrors are readonly)."""
+        if isinstance(uri, ArtifactStore):
+            return uri
+        if uri is None:
+            return cls(**kwargs)
+        if "://" in str(uri):
+            return cls(backend=RemoteStore(str(uri)), **kwargs)
+        return cls(uri, **kwargs)
+
+    @property
+    def readonly(self) -> bool:
+        return bool(getattr(self.backend, "readonly", False))
+
+    @property
+    def counters(self) -> dict[str, int]:
+        return self.backend.counters
+
+    # -- paths / membership -------------------------------------------------
     def path_for(self, key: str) -> Path:
-        return self.root / f"{key}.npz"
+        """Where this key's v3 manifest lives (informational)."""
+        if self.root is None:
+            return Path(f"manifests/{key}.json")
+        return self.root / "manifests" / f"{key}.json"
 
-    def has(self, key: str) -> bool:
-        return self.path_for(key).exists()
+    def _legacy_path(self, key: str) -> Path | None:
+        if self.root is None:
+            return None
+        p = self.root / f"{key}.npz"
+        return p if p.exists() else None
 
-    def save(self, artifact: CandidateArtifact) -> Path:
-        return artifact.save(self.path_for(artifact.key))
-
-    def load(self, key: str) -> CandidateArtifact:
-        path = self.path_for(key)
-        if not path.exists():
-            raise KeyError(f"no artifact {key!r} in store {self.root}")
-        return CandidateArtifact.load(path)
-
-    def keys(self) -> list[str]:
-        if not self.root.exists():
+    def legacy_keys(self) -> list[str]:
+        """Keys still stored as monolithic v1/v2 ``.npz`` files."""
+        if self.root is None or not self.root.exists():
             return []
         return sorted(p.stem for p in self.root.glob("*.npz"))
 
+    def has(self, key: str) -> bool:
+        return (self.backend.has_manifest(key)
+                or self._legacy_path(key) is not None)
+
+    def keys(self) -> list[str]:
+        return sorted(set(self.backend.manifest_keys())
+                      | set(self.legacy_keys()))
+
+    # -- save / load --------------------------------------------------------
+    def save(self, artifact: CandidateArtifact,
+             *, persist_values: bool | None = None) -> Path:
+        """Persist one artifact as manifest + chunks (atomic: chunks land
+        before the manifest rename publishes them, so a crash mid-save
+        leaves a clean miss, never a torn entry)."""
+        if self.readonly:
+            raise PermissionError(
+                f"store {getattr(self.backend, 'uri', self.root)} is "
+                "readonly; cannot save artifacts into a mirror")
+        if persist_values is None:
+            persist_values = self.persist_raw_values
+        manifest = artifact.to_manifest(
+            persist_values=persist_values,
+            write_chunk=self.backend.write_chunk,
+            has_chunk=self.backend.has_chunk)
+        self.backend.write_manifest(artifact.key, manifest)
+        if artifact._chunk_source is None:
+            artifact._chunk_source = self.backend
+        artifact._dirty = False
+        return self.path_for(artifact.key)
+
+    def load(self, key: str) -> CandidateArtifact:
+        if self.backend.has_manifest(key):
+            return CandidateArtifact.from_manifest(
+                self.backend.read_manifest(key), self.backend)
+        legacy = self._legacy_path(key)
+        if legacy is not None:
+            return CandidateArtifact.load(legacy)
+        raise KeyError(f"no artifact {key!r} in store "
+                       f"{getattr(self.backend, 'uri', self.root)}")
+
     def delete(self, key: str) -> None:
-        self.path_for(key).unlink(missing_ok=True)
+        self.backend.delete_manifest(key)
+        legacy = self._legacy_path(key)
+        if legacy is not None:
+            legacy.unlink(missing_ok=True)
+
+    # -- sizes --------------------------------------------------------------
+    def _chunk_refs(self, manifest: Mapping[str, Any]) -> list[str]:
+        out: list[str] = []
+        for rec in list(manifest["outputs"]) + list(manifest["values"]):
+            if rec.get("chunks"):
+                out.extend(rec["chunks"])
+        return out
+
+    def entry_bytes(self, key: str) -> int:
+        """One entry's footprint: manifest + referenced chunks (shared
+        chunks counted in full for every referent) or the legacy npz size."""
+        if self.backend.has_manifest(key):
+            manifest = self.backend.read_manifest(key)
+            total = self.backend.manifest_bytes(key)
+            for d in set(self._chunk_refs(manifest)):
+                try:
+                    total += self.backend.chunk_bytes(d)
+                except (KeyError, OSError):
+                    pass
+            return total
+        legacy = self._legacy_path(key)
+        if legacy is not None:
+            return legacy.stat().st_size
+        raise KeyError(key)
 
     def total_bytes(self) -> int:
-        return sum(self.path_for(k).stat().st_size for k in self.keys()
-                   if self.path_for(k).exists())
+        """Physical on-disk bytes: manifests + chunks + legacy npz files."""
+        total = 0
+        for key in self.backend.manifest_keys():
+            try:
+                total += self.backend.manifest_bytes(key)
+            except (KeyError, OSError):
+                continue
+        for d in self.backend.chunk_keys():
+            try:
+                total += self.backend.chunk_bytes(d)
+            except (KeyError, OSError):
+                continue
+        for key in self.legacy_keys():
+            legacy = self._legacy_path(key)
+            if legacy is not None:
+                try:
+                    total += legacy.stat().st_size
+                except OSError:
+                    continue
+        return total
+
+    # -- GC -----------------------------------------------------------------
+    def _refcounts(self) -> dict[str, int]:
+        refs: dict[str, int] = {}
+        for key in self.backend.manifest_keys():
+            try:
+                manifest = self.backend.read_manifest(key)
+            except (KeyError, OSError):
+                continue
+            for d in self._chunk_refs(manifest):
+                refs[d] = refs.get(d, 0) + 1
+        return refs
+
+    def gc_chunks(self, *, dry_run: bool = False) -> list[str]:
+        """Delete chunks no surviving manifest references.  Returns the
+        (would-be-)deleted digests."""
+        refs = self._refcounts()
+        dead = [d for d in self.backend.chunk_keys() if d not in refs]
+        if not dry_run:
+            for d in dead:
+                self.backend.delete_chunk(d)
+        return dead
 
     def prune(self, *, max_bytes: int | None = None, keep_latest: int = 0,
               keep: Sequence[str] = (), dry_run: bool = False) -> list[str]:
@@ -439,60 +870,245 @@ class ArtifactStore:
         most ``max_bytes`` (``None``: no size bound — everything unprotected
         goes, i.e. ``prune(keep_latest=n)`` keeps exactly the ``n`` newest).
         The ``keep_latest`` most recent artifacts and any key in ``keep``
-        are never deleted.  Content addressing makes pruning always safe:
-        a pruned capture is simply re-captured on next use, and surviving
-        keys keep hitting the cache.  Returns the deleted (or, with
-        ``dry_run``, would-be-deleted) keys, oldest first.
+        are never deleted.  Refcount-aware: deleting a manifest frees only
+        the chunks no surviving manifest still references (shared weights /
+        activations stay as long as one referent lives).  Content addressing
+        makes pruning always safe: a pruned capture is simply re-captured on
+        next use, and surviving keys keep hitting the cache.  Returns the
+        deleted (or, with ``dry_run``, would-be-deleted) keys, oldest first.
         """
         if max_bytes is None and keep_latest <= 0:
             raise ValueError("prune() needs max_bytes and/or keep_latest; "
                              "refusing to silently empty the store")
-        entries = []
+        entries = []       # (mtime_ns, key, manifest_or_npz_bytes, chunkrefs)
         for key in self.keys():
             try:
-                st = self.path_for(key).stat()
-            except OSError:
+                if self.backend.has_manifest(key):
+                    mtime = self.backend.manifest_mtime_ns(key)
+                    size = self.backend.manifest_bytes(key)
+                    refs = self._chunk_refs(self.backend.read_manifest(key))
+                else:
+                    st = self._legacy_path(key).stat()
+                    mtime, size, refs = st.st_mtime_ns, st.st_size, []
+            except (OSError, KeyError, AttributeError):
                 continue
             # ns resolution: same-second writes (coarse-mtime filesystems,
             # rapid captures) must not fall through to hash-ordered ties
-            entries.append((st.st_mtime_ns, key, st.st_size))
+            entries.append((mtime, key, size, refs))
         entries.sort()                       # oldest first
+
+        refcount: dict[str, int] = {}
+        chunk_size: dict[str, int] = {}
+        for _, _, _, refs in entries:
+            for d in refs:
+                refcount[d] = refcount.get(d, 0) + 1
+        for d in refcount:
+            try:
+                chunk_size[d] = self.backend.chunk_bytes(d)
+            except (KeyError, OSError):
+                chunk_size[d] = 0
+
         protected = set(keep)
         if keep_latest > 0:
-            protected.update(key for _, key, _ in entries[-keep_latest:])
-        total = sum(size for _, _, size in entries)
+            protected.update(key for _, key, _, _ in entries[-keep_latest:])
+        total = (sum(size for _, _, size, _ in entries)
+                 + sum(chunk_size.values()))
         deleted: list[str] = []
-        for _, key, size in entries:
+        for _, key, size, refs in entries:
             if max_bytes is not None and total <= max_bytes:
                 break
             if key in protected:
                 continue
+            freed = size
+            for d in refs:
+                refcount[d] -= 1
+                if refcount[d] == 0:
+                    freed += chunk_size.get(d, 0)
+                    if not dry_run:
+                        self.backend.delete_chunk(d)
             if not dry_run:
-                self.delete(key)
+                self.backend.delete_manifest(key)
+                legacy = self._legacy_path(key)
+                if legacy is not None:
+                    legacy.unlink(missing_ok=True)
             deleted.append(key)
-            total -= size
+            total -= freed
         return deleted
 
+    # -- fleet transfer -----------------------------------------------------
+    def push(self, dest: "ArtifactStore | Store | str",
+             keys: Sequence[str] | None = None) -> dict[str, int]:
+        """Copy manifests + missing chunks into another store (dedup-aware:
+        chunks the destination already holds are skipped)."""
+        import contextlib
+
+        dst = dest.backend if isinstance(dest, ArtifactStore) \
+            else open_store(dest)
+        todo = list(keys) if keys is not None else self.keys()
+        # a key counts as legacy only while it has no v3 manifest yet —
+        # `migrate --keep-legacy` leaves the npz behind, and those entries
+        # push fine through their manifest
+        unmigrated = sorted(k for k in todo
+                            if not self.backend.has_manifest(k)
+                            and self._legacy_path(k) is not None)
+        if unmigrated:
+            raise ValueError(
+                f"{len(unmigrated)} legacy .npz entries cannot be pushed "
+                f"(e.g. {unmigrated[:3]}); run `artifacts migrate` first")
+        stats = {"manifests": 0, "chunks_copied": 0, "chunks_skipped": 0,
+                 "bytes_copied": 0}
+        # bulk mode defers the mirror's per-write index.json rewrite (an
+        # O(N²) directory rescan otherwise) to one update at the end
+        bulk = getattr(dst, "bulk", None)
+        with bulk() if bulk is not None else contextlib.nullcontext():
+            for key in todo:
+                manifest = self.backend.read_manifest(key)
+                for d in dict.fromkeys(self._chunk_refs(manifest)):
+                    if dst.has_chunk(d):
+                        stats["chunks_skipped"] += 1
+                        continue
+                    data = self.backend.read_chunk(d)
+                    dst.write_chunk(d, data)
+                    stats["chunks_copied"] += 1
+                    stats["bytes_copied"] += len(data)
+                dst.write_manifest(key, manifest)
+                stats["manifests"] += 1
+        return stats
+
+    def pull(self, src: "ArtifactStore | Store | str",
+             keys: Sequence[str] | None = None) -> dict[str, int]:
+        """Fetch manifests + missing chunks from another store into this
+        one (the explicit bulk counterpart of the lazy ``remote=`` path)."""
+        source = src if isinstance(src, ArtifactStore) \
+            else ArtifactStore(backend=open_store(src))
+        return source.push(self, keys=keys)
+
+    # -- migration ----------------------------------------------------------
+    def migrate(self, keys: Sequence[str] | None = None, *,
+                delete_legacy: bool = True,
+                persist_values: bool = True) -> dict[str, int]:
+        """One-shot conversion of legacy monolithic ``.npz`` entries to the
+        chunked v3 layout.  Values stored eagerly in the npz are carried
+        into the chunk store (``persist_values=True``, the default) so
+        offline checks keep replaying byte-identically; digests are derived
+        from the stored buffers."""
+        todo = list(keys) if keys is not None else self.legacy_keys()
+        stats = {"migrated": 0, "skipped": 0}
+        for key in todo:
+            legacy = self._legacy_path(key)
+            if legacy is None or self.backend.has_manifest(key):
+                stats["skipped"] += 1
+                continue
+            art = CandidateArtifact.load(legacy)
+            self.save(art, persist_values=persist_values)
+            if delete_legacy:
+                legacy.unlink(missing_ok=True)
+            stats["migrated"] += 1
+        return stats
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self) -> dict[str, Any]:
+        """Dedup / sketch-only accounting for ``artifacts stats`` and CI.
+
+        ``monolithic_bytes`` reconstructs what the legacy one-npz-per-key
+        layout would hold (per-entry metadata + every output and memoized
+        value stored inline, duplicates and all); ``dedup_ratio`` divides it
+        by the physical chunked footprint.
+        """
+        manifest_bytes = chunkrefs = 0
+        logical_values = logical_outputs = meta_bytes = 0
+        values_total = values_sketch_only = spectra_entries = 0
+        n_manifests = 0
+        for key in self.backend.manifest_keys():
+            try:
+                manifest = self.backend.read_manifest(key)
+                msize = self.backend.manifest_bytes(key)
+            except (KeyError, OSError):
+                continue
+            n_manifests += 1
+            manifest_bytes += msize
+            base = dict(manifest)
+            base.pop("spectra", None)
+            meta_bytes += len(json.dumps(base).encode())
+            for rec in manifest["outputs"]:
+                logical_outputs += int(rec["nbytes"])
+            for rec in manifest["values"]:
+                values_total += 1
+                if rec.get("chunks"):
+                    logical_values += int(rec["nbytes"])
+                else:
+                    values_sketch_only += 1
+                    logical_values += int(rec["nbytes"])
+            spectra_entries += len(manifest.get("spectra", ()))
+            chunkrefs += len(set(self._chunk_refs(manifest)))
+        chunk_count = 0
+        chunk_bytes = 0
+        for d in self.backend.chunk_keys():
+            try:
+                chunk_bytes += self.backend.chunk_bytes(d)
+            except (KeyError, OSError):
+                continue
+            chunk_count += 1
+        legacy = self.legacy_keys()
+        legacy_bytes = 0
+        for key in legacy:
+            p = self._legacy_path(key)
+            if p is not None:
+                try:
+                    legacy_bytes += p.stat().st_size
+                except OSError:
+                    pass
+        physical = manifest_bytes + chunk_bytes + legacy_bytes
+        monolithic = meta_bytes + logical_outputs + logical_values \
+            + legacy_bytes
+        return {
+            "artifacts": n_manifests,
+            "legacy_npz": len(legacy),
+            "manifest_bytes": manifest_bytes,
+            "chunk_count": chunk_count,
+            "chunk_bytes": chunk_bytes,
+            "physical_bytes": physical,
+            "logical_value_bytes": logical_values,
+            "logical_output_bytes": logical_outputs,
+            "monolithic_bytes": monolithic,
+            "dedup_ratio": (monolithic / physical) if physical else 0.0,
+            "values_total": values_total,
+            "values_sketch_only": values_sketch_only,
+            "sketch_only_fraction": (values_sketch_only / values_total
+                                     if values_total else 0.0),
+            "spectra_entries": spectra_entries,
+        }
+
     def entries(self) -> list[dict[str, Any]]:
-        """Lightweight listing (name/key/backend/size) without full loads."""
+        """Lightweight listing (name/key/backend/size) without value loads."""
         out = []
         for key in self.keys():
-            path = self.path_for(key)
             try:
-                size = path.stat().st_size
-            except OSError:                  # deleted since keys() globbed
-                continue
-            try:
-                with np.load(path, allow_pickle=False) as z:
-                    meta = json.loads(z["meta"].tobytes().decode())
+                if self.backend.has_manifest(key):
+                    meta = self.backend.read_manifest(key)
+                    size = self.entry_bytes(key)
+                    cached = sum(1 for rec in meta["values"]
+                                 if rec.get("chunks"))
+                    sketch = sum(1 for rec in meta["values"]
+                                 if not rec.get("chunks"))
+                else:
+                    path = self._legacy_path(key)
+                    size = path.stat().st_size
+                    with np.load(path, allow_pickle=False) as z:
+                        meta = json.loads(z["meta"].tobytes().decode())
+                    cached, sketch = len(meta["values"]), 0
                 out.append({"key": key, "name": meta["name"],
                             "backend": meta["backend_label"],
                             "nodes": len(meta["graph"]["nodes"]),
                             "samples": len(meta["stats"]),
-                            "cached_values": len(meta["values"]),
+                            "cached_values": cached,
+                            "sketch_only_values": sketch,
                             "bytes": size})
+            except OSError:                  # deleted since keys() listed
+                continue
             except Exception as e:           # corrupt entry: list, don't die
                 out.append({"key": key, "name": f"<unreadable: {e}>",
                             "backend": "?", "nodes": 0, "samples": 0,
-                            "cached_values": 0, "bytes": size})
+                            "cached_values": 0, "sketch_only_values": 0,
+                            "bytes": 0})
         return out

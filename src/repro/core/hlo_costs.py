@@ -518,6 +518,41 @@ class PerOpCosts:
             module=dict(d.get("module", {})),
             attribution=dict(d.get("attribution", {})))
 
+    def attribution_summary(self) -> dict[str, Any]:
+        """Attribution-quality diagnostics for monitoring (CLI ``capture``).
+
+        * ``residual_flop_fraction`` / ``residual_byte_fraction`` — share of
+          the attributed column that came from provenance-free (XLA-
+          introduced) instructions and was redistributed proportionally; a
+          rising residual means the metadata op_name chain is degrading.
+        * ``direct_fraction`` — instructions credited straight to their
+          originating equation (neither grouped nor residual).
+        * ``opaque_nodes`` — nodes priced by their analytic rule because the
+          HLO text hides or distorts their cost (custom-call / conv /
+          pallas emulation).
+        * ``fusion_splits`` — fusions whose HBM traffic was split over
+          several genuinely-merged equations (proportional attribution at
+          work; artifacts recorded before this counter report 0).
+        """
+        att = self.attribution or {}
+        mod = self.module or {}
+        a_flops = float(mod.get("attributed_flops", 0.0))
+        a_bytes = float(mod.get("attributed_bytes", 0.0))
+        instrs = int(att.get("instructions", 0))
+        return {
+            "residual_flop_fraction":
+                float(att.get("residual_flops", 0.0)) / a_flops
+                if a_flops > 0 else 0.0,
+            "residual_byte_fraction":
+                float(att.get("residual_bytes", 0.0)) / a_bytes
+                if a_bytes > 0 else 0.0,
+            "direct_fraction":
+                int(att.get("direct", 0)) / instrs if instrs else 0.0,
+            "opaque_nodes": int(att.get("opaque_nodes", 0)),
+            "fusion_splits": int(att.get("fusion_splits", 0)),
+            "instructions": instrs,
+        }
+
 
 _COLUMNS = ("flops", "hbm", "ici", "trans")
 
@@ -558,7 +593,7 @@ def attribute_costs(graph, compiled) -> PerOpCosts:
     opaque: set[int] = {i for i, nd in enumerate(graph.nodes)
                         if nd.primitive == "pallas_call"}
     stats = {"instructions": 0, "direct": 0, "grouped": 0,
-             "residual_instrs": 0, "opaque_nodes": 0}
+             "residual_instrs": 0, "opaque_nodes": 0, "fusion_splits": 0}
 
     def add(tgt, kind: str, amount: float) -> None:
         if amount <= 0.0:
@@ -616,6 +651,8 @@ def attribute_costs(graph, compiled) -> PerOpCosts:
                 if total_w > 0:
                     # genuinely merged constituents: proportional split
                     # over each equation's interior footprint
+                    if len(weights) > 1:
+                        stats["fusion_splits"] += 1
                     for t2, w in weights.items():
                         add(t2, "hbm", fus_bytes * w / total_w)
                 else:

@@ -284,7 +284,14 @@ class Session:
 
     def __post_init__(self):
         if isinstance(self.store, (str, Path)):
-            self.store = ArtifactStore(self.store)
+            # plain path -> local store; file:// and http(s):// URIs -> remote
+            # mirror (a hit on either skips all instrumented execution)
+            self.store = ArtifactStore.from_uri(self.store)
+        elif self.store is not None and not isinstance(self.store,
+                                                       ArtifactStore):
+            from repro.core.store import Store
+            if isinstance(self.store, Store):
+                self.store = ArtifactStore(backend=self.store)
 
     # -- capture ------------------------------------------------------------
     def capture(self, fn: Callable, args: Sequence[Any], *,
@@ -356,7 +363,7 @@ class Session:
                   "num_samples": len(samples),
                   **(dict(extra_meta) if extra_meta else {})})
         art._samples = samples
-        if self.store is not None:
+        if self.store is not None and not self.store.readonly:
             self.store.save(art)
         return art
 
@@ -393,7 +400,9 @@ class Session:
         matcher = TensorMatcher(rtol=self.match_rtol)
         eq_pairs = matcher.match_streamed(
             art_a.sample_stats, art_b.sample_stats,
-            art_a.fetcher(), art_b.fetcher())
+            art_a.fetcher(), art_b.fetcher(),
+            provider_a=art_a.spectra_provider(),
+            provider_b=art_b.spectra_provider())
         regions = match_subgraphs(art_a.graph, art_b.graph, eq_pairs)
 
         findings = [self._classify(i, r, art_a.graph, art_b.graph,
@@ -410,7 +419,7 @@ class Session:
                   "nodes_a": len(art_a.graph.nodes),
                   "nodes_b": len(art_b.graph.nodes),
                   "energy_model": art_a.backend_label})
-        if persist and self.store is not None:
+        if persist and self.store is not None and not self.store.readonly:
             for art in (art_a, art_b):
                 if art._dirty:
                     self.store.save(art)
@@ -451,7 +460,7 @@ class Session:
         finally:
             # one save per dirty artifact, even if a later compare raised —
             # values fetched so far stay replayable offline
-            if self.store is not None:
+            if self.store is not None and not self.store.readonly:
                 for art in arts:
                     if art._dirty:
                         self.store.save(art)

@@ -1,0 +1,420 @@
+"""Shared-store protocol: content-addressed chunk + manifest transports.
+
+The artifact layer (core/artifact.py) persists one capture as a small JSON
+*manifest* plus a set of content-addressed *chunks* (sha256-keyed byte
+blobs holding phase-2 tensor values and sample-0 outputs).  This module
+defines the transport underneath that layout:
+
+* :class:`Store` — the protocol: manifest get/put/list + chunk get/put/list,
+  with read counters (``counters``) so tests and ``artifacts stats`` can
+  assert e.g. *zero raw-value chunk reads* during a sketch-only offline
+  replay.
+* :class:`LocalStore` — on-disk store (``manifests/<key>.json`` +
+  ``chunks/<dg[:2]>/<dg>``) with atomic writes (tmp + ``os.replace``; chunk
+  writes are idempotent by content address, so two processes capturing the
+  same key converge instead of corrupting each other) and an optional
+  ``upstream`` remote it reads through: manifest/chunk misses are fetched
+  from the upstream and cached locally, so a fleet machine pulls captures
+  recorded elsewhere on first use and serves them locally afterwards.
+* :class:`RemoteStore` — URI-addressed mirror: a plain path or ``file://``
+  URI (NFS-style shared filesystem, read/write) or an ``http(s)://`` base
+  URL (readonly; listing served from the ``index.json`` that
+  ``ArtifactStore.push`` maintains).
+
+``open_store(uri)`` maps a user-supplied ``--store`` value onto the right
+implementation.  Everything above this layer (dedup, refcount GC, schema
+migration) lives in :class:`~repro.core.artifact.ArtifactStore`.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Protocol, runtime_checkable
+from urllib.parse import urlparse
+from urllib.request import url2pathname
+
+# Chunk granularity for value payloads.  4 MiB keeps big activations in a
+# handful of chunks (cheap manifests) while still deduplicating weights and
+# repeated activations at sub-tensor granularity.
+CHUNK_BYTES = 4 << 20
+
+_INDEX_NAME = "index.json"       # remote listing for http mirrors
+
+
+class StoreReadOnlyError(RuntimeError):
+    """A write was attempted on a readonly store (e.g. an http mirror)."""
+
+
+def chunk_digest(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def split_chunks(buf: bytes, chunk_bytes: int = CHUNK_BYTES) -> list[bytes]:
+    """Fixed-size chunking of one value buffer (last chunk may be short)."""
+    if len(buf) <= chunk_bytes:
+        return [buf]
+    return [buf[i:i + chunk_bytes] for i in range(0, len(buf), chunk_bytes)]
+
+
+def _fresh_counters() -> dict[str, int]:
+    return {"manifest_reads": 0, "manifest_writes": 0,
+            "chunk_reads": 0, "chunk_bytes_read": 0,
+            "chunk_writes": 0, "chunk_bytes_written": 0,
+            "chunk_dedup_hits": 0,
+            "upstream_manifest_reads": 0, "upstream_chunk_reads": 0}
+
+
+@runtime_checkable
+class Store(Protocol):
+    """Manifest + chunk transport for content-addressed artifacts."""
+
+    readonly: bool
+    counters: dict[str, int]
+
+    def has_manifest(self, key: str) -> bool: ...
+    def read_manifest(self, key: str) -> dict: ...
+    def write_manifest(self, key: str, payload: dict) -> None: ...
+    def delete_manifest(self, key: str) -> None: ...
+    def manifest_keys(self) -> list[str]: ...
+    def manifest_bytes(self, key: str) -> int: ...
+    def manifest_mtime_ns(self, key: str) -> int: ...
+
+    def has_chunk(self, digest: str) -> bool: ...
+    def read_chunk(self, digest: str) -> bytes: ...
+    def write_chunk(self, digest: str, data: bytes) -> None: ...
+    def delete_chunk(self, digest: str) -> None: ...
+    def chunk_keys(self) -> list[str]: ...
+    def chunk_bytes(self, digest: str) -> int: ...
+
+
+# ---------------------------------------------------------------------------
+# filesystem layout helpers (shared by LocalStore and file:// RemoteStore)
+# ---------------------------------------------------------------------------
+
+def _atomic_write(path: Path, data: bytes) -> None:
+    """Write-to-temp + rename: readers never observe a torn file, and two
+    same-destination writers converge (last rename wins; for chunks both
+    bodies are byte-identical by content address, so either is correct)."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+class _FsLayout:
+    """``manifests/<key>.json`` + ``chunks/<dg[:2]>/<dg>`` under one root."""
+
+    def __init__(self, root: Path):
+        self.root = root
+
+    def manifest_path(self, key: str) -> Path:
+        return self.root / "manifests" / f"{key}.json"
+
+    def chunk_path(self, digest: str) -> Path:
+        return self.root / "chunks" / digest[:2] / digest
+
+    def manifest_keys(self) -> list[str]:
+        d = self.root / "manifests"
+        if not d.exists():
+            return []
+        return sorted(p.stem for p in d.glob("*.json"))
+
+    def chunk_keys(self) -> list[str]:
+        d = self.root / "chunks"
+        if not d.exists():
+            return []
+        return sorted(p.name for p in d.glob("??/*") if p.is_file())
+
+
+class LocalStore:
+    """On-disk store with atomic writes and an optional read-through upstream.
+
+    ``upstream`` (any :class:`Store`, typically a :class:`RemoteStore`
+    mirror) serves manifest/chunk misses; fetched entries are cached locally
+    so the next read is local.  Writes always go to the local root.
+    """
+
+    readonly = False
+
+    def __init__(self, root: str | Path, upstream: "Store | None" = None):
+        self.root = Path(root).expanduser()
+        self._fs = _FsLayout(self.root)
+        self.upstream = upstream
+        self.counters = _fresh_counters()
+
+    # -- manifests ----------------------------------------------------------
+    def has_manifest(self, key: str) -> bool:
+        if self._fs.manifest_path(key).exists():
+            return True
+        return self.upstream is not None and self.upstream.has_manifest(key)
+
+    def read_manifest(self, key: str) -> dict:
+        path = self._fs.manifest_path(key)
+        self.counters["manifest_reads"] += 1
+        if not path.exists():
+            if self.upstream is None or not self.upstream.has_manifest(key):
+                raise KeyError(key)
+            payload = self.upstream.read_manifest(key)
+            self.counters["upstream_manifest_reads"] += 1
+            _atomic_write(path, json.dumps(payload).encode())
+            return payload
+        return json.loads(path.read_text())
+
+    def write_manifest(self, key: str, payload: dict) -> None:
+        self.counters["manifest_writes"] += 1
+        _atomic_write(self._fs.manifest_path(key), json.dumps(payload).encode())
+
+    def delete_manifest(self, key: str) -> None:
+        self._fs.manifest_path(key).unlink(missing_ok=True)
+
+    def manifest_keys(self) -> list[str]:
+        keys = set(self._fs.manifest_keys())
+        if self.upstream is not None:
+            keys.update(self.upstream.manifest_keys())
+        return sorted(keys)
+
+    def manifest_bytes(self, key: str) -> int:
+        return self._fs.manifest_path(key).stat().st_size
+
+    def manifest_mtime_ns(self, key: str) -> int:
+        return self._fs.manifest_path(key).stat().st_mtime_ns
+
+    # -- chunks -------------------------------------------------------------
+    def has_chunk(self, digest: str) -> bool:
+        if self._fs.chunk_path(digest).exists():
+            return True
+        return self.upstream is not None and self.upstream.has_chunk(digest)
+
+    def read_chunk(self, digest: str) -> bytes:
+        path = self._fs.chunk_path(digest)
+        if not path.exists():
+            if self.upstream is None or not self.upstream.has_chunk(digest):
+                raise KeyError(digest)
+            data = self.upstream.read_chunk(digest)
+            self.counters["upstream_chunk_reads"] += 1
+            _atomic_write(path, data)
+        else:
+            data = path.read_bytes()
+        self.counters["chunk_reads"] += 1
+        self.counters["chunk_bytes_read"] += len(data)
+        return data
+
+    def write_chunk(self, digest: str, data: bytes) -> None:
+        path = self._fs.chunk_path(digest)
+        if path.exists():                     # content-addressed: idempotent
+            self.counters["chunk_dedup_hits"] += 1
+            return
+        self.counters["chunk_writes"] += 1
+        self.counters["chunk_bytes_written"] += len(data)
+        _atomic_write(path, data)
+
+    def delete_chunk(self, digest: str) -> None:
+        self._fs.chunk_path(digest).unlink(missing_ok=True)
+
+    def chunk_keys(self) -> list[str]:
+        return self._fs.chunk_keys()
+
+    def chunk_bytes(self, digest: str) -> int:
+        return self._fs.chunk_path(digest).stat().st_size
+
+
+class RemoteStore:
+    """URI-addressed shared store: a filesystem mirror or an http(s) one.
+
+    * plain path / ``file://`` — NFS-style shared directory, read/write;
+      the same on-disk layout as :class:`LocalStore`.
+    * ``http(s)://`` — readonly mirror of that layout; ``manifest_keys``
+      comes from the ``index.json`` that ``ArtifactStore.push`` writes.
+    """
+
+    def __init__(self, uri: str):
+        self.uri = str(uri)
+        parsed = urlparse(self.uri)
+        self._http = parsed.scheme in ("http", "https")
+        self.readonly = self._http
+        self.counters = _fresh_counters()
+        self._bulk_depth = 0
+        if self._http:
+            self._base = self.uri.rstrip("/")
+            self._fs = None
+        else:
+            if parsed.scheme == "file":
+                root = Path(url2pathname(parsed.path))
+            elif parsed.scheme:
+                raise ValueError(f"unsupported store scheme {parsed.scheme!r} "
+                                 f"in {self.uri!r} (file:// or http(s)://)")
+            else:
+                root = Path(self.uri)
+            self.root = root.expanduser()
+            self._fs = _FsLayout(self.root)
+
+    # -- http plumbing ------------------------------------------------------
+    def _get(self, rel: str) -> bytes | None:
+        from urllib.error import HTTPError, URLError
+        from urllib.request import urlopen
+        try:
+            with urlopen(f"{self._base}/{rel}", timeout=30) as r:
+                return r.read()
+        except HTTPError as e:
+            if e.code == 404:
+                return None
+            raise
+        except URLError as e:
+            raise IOError(f"remote store {self.uri} unreachable: {e}") from e
+
+    def _deny_write(self) -> None:
+        raise StoreReadOnlyError(
+            f"store {self.uri} is readonly (http mirror); push from a "
+            "writable store instead")
+
+    # -- manifests ----------------------------------------------------------
+    def has_manifest(self, key: str) -> bool:
+        if self._fs is not None:
+            return self._fs.manifest_path(key).exists()
+        return self._get(f"manifests/{key}.json") is not None
+
+    def read_manifest(self, key: str) -> dict:
+        self.counters["manifest_reads"] += 1
+        if self._fs is not None:
+            path = self._fs.manifest_path(key)
+            if not path.exists():
+                raise KeyError(key)
+            return json.loads(path.read_text())
+        data = self._get(f"manifests/{key}.json")
+        if data is None:
+            raise KeyError(key)
+        return json.loads(data.decode())
+
+    def write_manifest(self, key: str, payload: dict) -> None:
+        if self._fs is None:
+            self._deny_write()
+        self.counters["manifest_writes"] += 1
+        _atomic_write(self._fs.manifest_path(key), json.dumps(payload).encode())
+        self._update_index()
+
+    def delete_manifest(self, key: str) -> None:
+        if self._fs is None:
+            self._deny_write()
+        self._fs.manifest_path(key).unlink(missing_ok=True)
+        self._update_index()
+
+    def manifest_keys(self) -> list[str]:
+        if self._fs is not None:
+            return self._fs.manifest_keys()
+        data = self._get(_INDEX_NAME)
+        if data is None:
+            return []
+        return sorted(json.loads(data.decode()).get("manifests", []))
+
+    def manifest_bytes(self, key: str) -> int:
+        if self._fs is not None:
+            return self._fs.manifest_path(key).stat().st_size
+        data = self._get(f"manifests/{key}.json")
+        if data is None:
+            raise KeyError(key)
+        return len(data)
+
+    def manifest_mtime_ns(self, key: str) -> int:
+        if self._fs is not None:
+            return self._fs.manifest_path(key).stat().st_mtime_ns
+        return 0                              # http mirrors don't expose mtime
+
+    def bulk(self):
+        """Context manager deferring the ``index.json`` rewrite to exit —
+        one directory scan per bulk transfer instead of one per manifest."""
+        import contextlib
+
+        @contextlib.contextmanager
+        def _bulk():
+            self._bulk_depth += 1
+            try:
+                yield self
+            finally:
+                self._bulk_depth -= 1
+                if self._bulk_depth == 0 and self._fs is not None:
+                    self._update_index(force=True)
+        return _bulk()
+
+    def _update_index(self, force: bool = False) -> None:
+        """Maintain ``index.json`` so http consumers of this mirror can list."""
+        if self._bulk_depth > 0 and not force:
+            return
+        payload = {"manifests": self._fs.manifest_keys()}
+        _atomic_write(self.root / _INDEX_NAME,
+                      json.dumps(payload, indent=1).encode())
+
+    # -- chunks -------------------------------------------------------------
+    def has_chunk(self, digest: str) -> bool:
+        if self._fs is not None:
+            return self._fs.chunk_path(digest).exists()
+        return self._get(f"chunks/{digest[:2]}/{digest}") is not None
+
+    def read_chunk(self, digest: str) -> bytes:
+        if self._fs is not None:
+            path = self._fs.chunk_path(digest)
+            if not path.exists():
+                raise KeyError(digest)
+            data = path.read_bytes()
+        else:
+            got = self._get(f"chunks/{digest[:2]}/{digest}")
+            if got is None:
+                raise KeyError(digest)
+            data = got
+        self.counters["chunk_reads"] += 1
+        self.counters["chunk_bytes_read"] += len(data)
+        return data
+
+    def write_chunk(self, digest: str, data: bytes) -> None:
+        if self._fs is None:
+            self._deny_write()
+        path = self._fs.chunk_path(digest)
+        if path.exists():
+            self.counters["chunk_dedup_hits"] += 1
+            return
+        self.counters["chunk_writes"] += 1
+        self.counters["chunk_bytes_written"] += len(data)
+        _atomic_write(path, data)
+
+    def delete_chunk(self, digest: str) -> None:
+        if self._fs is None:
+            self._deny_write()
+        self._fs.chunk_path(digest).unlink(missing_ok=True)
+
+    def chunk_keys(self) -> list[str]:
+        if self._fs is not None:
+            return self._fs.chunk_keys()
+        raise NotImplementedError("http mirrors do not enumerate chunks")
+
+    def chunk_bytes(self, digest: str) -> int:
+        if self._fs is not None:
+            return self._fs.chunk_path(digest).stat().st_size
+        data = self._get(f"chunks/{digest[:2]}/{digest}")
+        if data is None:
+            raise KeyError(digest)
+        return len(data)
+
+
+def open_store(uri: "str | Path | Store") -> "Store":
+    """Map a ``--store`` value onto a Store: an existing Store passes
+    through; a URI (``file://``, ``http(s)://``) opens a RemoteStore; a
+    plain path opens a LocalStore rooted there."""
+    if isinstance(uri, (LocalStore, RemoteStore)):
+        return uri
+    if not isinstance(uri, (str, Path)):
+        # duck-typed Store implementations (e.g. test doubles)
+        if isinstance(uri, Store):
+            return uri
+        raise TypeError(f"cannot open a store from {type(uri).__name__}")
+    text = str(uri)
+    if "://" in text:
+        return RemoteStore(text)
+    return LocalStore(text)

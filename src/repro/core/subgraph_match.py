@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.graph import OpGraph
 
 # Flow vertices are encoded as ints for dict/set speed: op node n -> 2n,
@@ -67,9 +69,8 @@ def _build_flow(graph: OpGraph, src_tids: Sequence[int],
     return succ, nodes
 
 
-def _dominator_path(succ: dict[int, list[int]]) -> list[int]:
-    """Vertices dominating _SNK, in order from _SRC to _SNK."""
-    # reverse post-order from _SRC (iterative DFS)
+def _rpo(succ: dict[int, list[int]]) -> list[int]:
+    """Reverse post-order from _SRC (iterative DFS)."""
     visited: set[int] = set()
     post: list[int] = []
     stack: list[tuple[int, int]] = [(_SRC, 0)]
@@ -85,7 +86,17 @@ def _dominator_path(succ: dict[int, list[int]]) -> list[int]:
                 stack.append((k, 0))
         else:
             post.append(v)
-    rpo = list(reversed(post))
+    return list(reversed(post))
+
+
+def _dominator_path_reference(succ: dict[int, list[int]]) -> list[int]:
+    """Vertices dominating _SNK, from _SRC to _SNK (seed implementation).
+
+    Dict-based Cooper–Harvey–Kennedy fixpoint, kept verbatim as the
+    equivalence oracle for the vectorized solve below
+    (tests/test_subgraph_match.py asserts identical paths).
+    """
+    rpo = _rpo(succ)
     order = {v: i for i, v in enumerate(rpo)}
     preds: dict[int, list[int]] = {v: [] for v in rpo}
     for v in rpo:
@@ -128,6 +139,81 @@ def _dominator_path(succ: dict[int, list[int]]) -> list[int]:
             return []
         path.append(v)
     return list(reversed(path))
+
+
+def _dominator_path(succ: dict[int, list[int]]) -> list[int]:
+    """Vertices dominating _SNK, from _SRC to _SNK (vectorized solve).
+
+    The flow graph is a DAG, so in reverse post-order every predecessor of
+    a vertex precedes it — one RPO sweep with the Cooper–Harvey–Kennedy
+    intersect computes final idoms (no fixpoint iteration).  All state
+    lives in RPO-indexed numpy int32 arrays: predecessor lists in CSR form
+    (one ``np.argsort`` over the edge array instead of per-vertex dict
+    appends) and idom chain walks over a flat array.  Semantically
+    identical to :func:`_dominator_path_reference`; the matcher tests and
+    a dedicated oracle test assert equal paths.
+    """
+    rpo = _rpo(succ)
+    n = len(rpo)
+    order = {v: i for i, v in enumerate(rpo)}
+    if _SNK not in order:
+        return []
+
+    # CSR predecessor lists in RPO index space, built by one argsort over
+    # the flat (dst, src) edge pairs
+    dst: list[int] = []
+    src: list[int] = []
+    for v in rpo:
+        vi = order[v]
+        for k in succ.get(v, []):
+            ki = order.get(k)
+            if ki is not None:
+                dst.append(ki)
+                src.append(vi)
+    if dst:
+        dst_a = np.asarray(dst, dtype=np.int32)
+        src_a = np.asarray(src, dtype=np.int32)
+        perm = np.argsort(dst_a, kind="stable")
+        dst_a = dst_a[perm]
+        src_a = src_a[perm]
+        starts = np.searchsorted(dst_a, np.arange(n + 1, dtype=np.int32))
+    else:
+        src_a = np.empty(0, dtype=np.int32)
+        starts = np.zeros(n + 1, dtype=np.int64)
+
+    NONE = np.int32(-1)
+    idom = np.full(n, NONE, dtype=np.int32)
+    idom[0] = 0                               # _SRC is rpo[0] by construction
+
+    for vi in range(1, n):
+        new = NONE
+        for pi in src_a[starts[vi]:starts[vi + 1]]:
+            if idom[pi] == NONE:
+                continue                      # unreachable-from-_SRC pred
+            if new == NONE:
+                new = pi
+                continue
+            # CHK intersect: walk both chains up to the common ancestor
+            a, b = int(new), int(pi)
+            while a != b:
+                while a > b:
+                    a = int(idom[a])
+                while b > a:
+                    b = int(idom[b])
+            new = np.int32(a)
+        idom[vi] = new
+
+    snk = order[_SNK]
+    if idom[snk] == NONE:
+        return []
+    path = [snk]
+    v = snk
+    while v != 0:
+        v = int(idom[v])
+        if v < 0:
+            return []
+        path.append(v)
+    return [rpo[i] for i in reversed(path)]
 
 
 @dataclasses.dataclass

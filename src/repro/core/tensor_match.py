@@ -34,7 +34,7 @@ import functools
 import itertools
 import math
 import time
-from typing import Callable, Iterable, Sequence
+from typing import Callable, Iterable, Protocol, Sequence
 
 import numpy as np
 
@@ -317,6 +317,53 @@ def _sig_keys(sig: TensorSignature, m: "TensorMatcher") -> set[tuple[int, int]]:
     return set(_unfolding_key_map(sig.shape or (), limit))
 
 
+class SpectraProvider(Protocol):
+    """Persisted phase-2 replay evidence for one artifact side.
+
+    ``digest`` returns the recorded sha256 of a value's raw bytes (or None
+    when unknown); ``record_digest`` derives + persists it from an
+    in-memory value.  ``spectra``/``record_spectra`` round-trip memoized
+    unfolding spectra keyed ``(sample, tid, (rows, cols))``.  Artifacts
+    implement this (``CandidateArtifact.spectra_provider``) so matching
+    decisions survive into the manifest and replay without raw values.
+    """
+
+    def digest(self, k: int, tid: int) -> str | None: ...
+    def record_digest(self, k: int, tid: int, value: np.ndarray) -> str: ...
+    def spectra(self, k: int, tid: int,
+                key: tuple[int, int]) -> list[np.ndarray] | None: ...
+    def record_spectra(self, k: int, tid: int, key: tuple[int, int],
+                       spectra: list[np.ndarray]) -> None: ...
+
+
+class _MemoProvider:
+    """Run-local SpectraProvider for provider-less matches (in-memory
+    ``match()``, oracle comparisons): same interface, nothing persisted."""
+
+    def __init__(self):
+        self._digests: dict[tuple[int, int], str] = {}
+        self._spectra: dict[tuple[int, int, tuple[int, int]],
+                            list[np.ndarray]] = {}
+
+    def digest(self, k, tid):
+        return self._digests.get((k, tid))
+
+    def record_digest(self, k, tid, value):
+        import hashlib
+        d = self._digests.get((k, tid))
+        if d is None:
+            d = hashlib.sha256(
+                np.ascontiguousarray(value).tobytes()).hexdigest()
+            self._digests[(k, tid)] = d
+        return d
+
+    def spectra(self, k, tid, key):
+        return self._spectra.get((k, tid, key))
+
+    def record_spectra(self, k, tid, key, spectra):
+        self._spectra[(k, tid, key)] = spectra
+
+
 class _LazySpectra:
     """Per-sample memoized unfolding spectra with selective value fetch.
 
@@ -325,14 +372,22 @@ class _LazySpectra:
     re-capture).  Spectra are computed on first use and memoized per
     ``(tid, unfolding-key)``; values are fetched in one batch via
     :meth:`prefetch` so the capture runs at most once per sample.
+
+    A :class:`SpectraProvider` (persisted digests + spectra from a prior
+    run of the same comparison) is consulted first: when it can answer,
+    no value is fetched at all — the sketch-only offline replay path.
     """
 
     def __init__(self, sigs: dict[int, TensorSignature],
                  fetch: Callable[[Sequence[int]], dict[int, np.ndarray]],
-                 matcher: "TensorMatcher"):
+                 matcher: "TensorMatcher",
+                 provider: "SpectraProvider | None" = None,
+                 sample: int = 0):
         self._sigs = sigs
         self._fetch = fetch
         self._m = matcher
+        self._provider = provider if provider is not None else _MemoProvider()
+        self._k = sample
         self._values: dict[int, np.ndarray] = {}
         self._spectra: dict[tuple[int, tuple[int, int]], list[np.ndarray]] = {}
         self.fetched_bytes = 0
@@ -360,10 +415,25 @@ class _LazySpectra:
             self.prefetch([tid])
         return self._values[tid]
 
-    def spectra(self, tid: int, key: tuple[int, int]) -> list[np.ndarray]:
+    def digest(self, tid: int, *, compute: bool = True) -> str | None:
+        """Recorded value digest; with ``compute``, derive (and persist via
+        the provider) from the value — fetching it if necessary."""
+        d = self._provider.digest(self._k, tid)
+        if d is not None or not compute:
+            return d
+        return self._provider.record_digest(self._k, tid, self._value(tid))
+
+    def spectra(self, tid: int, key: tuple[int, int], *,
+                compute: bool = True) -> list[np.ndarray] | None:
         memo = self._spectra.get((tid, key))
         if memo is not None:
             return memo
+        memo = self._provider.spectra(self._k, tid, key)
+        if memo is not None:
+            self._spectra[(tid, key)] = memo
+            return memo
+        if not compute:
+            return None
         sig = self._sigs[tid]
         shape = sig.shape or ()
         mode = self.mode(tid)
@@ -395,6 +465,7 @@ class _LazySpectra:
                         m.sketch_oversample))
                     self.sketch_svds += 1
         self._spectra[(tid, key)] = out
+        self._provider.record_spectra(self._k, tid, key, out)
         return out
 
 
@@ -410,6 +481,7 @@ class MatchStats:
     sketch_svds: int = 0
     fetched_bytes: int = 0         # total values materialized in phase 2
     peak_value_bytes: int = 0      # peak resident values (one sample's worth)
+    decided_dry: int = 0           # pair-verdicts served by persisted evidence
     phase1_s: float = 0.0
     phase2_s: float = 0.0
 
@@ -462,12 +534,18 @@ class TensorMatcher:
         stats_b: Sequence[dict[int, TensorSignature]],
         fetch_a: Callable[[int, Sequence[int]], dict[int, np.ndarray]],
         fetch_b: Callable[[int, Sequence[int]], dict[int, np.ndarray]],
+        *,
+        provider_a: "SpectraProvider | None" = None,
+        provider_b: "SpectraProvider | None" = None,
     ) -> list[tuple[int, int]]:
         """Two-phase match from streamed cheap signatures.
 
         ``stats_*[k]`` come from ``interp.capture_tensor_stats`` on the k-th
         sample; ``fetch_*(k, tids)`` selectively re-captures the named tensor
         values for phase 2 (``interp.capture_tensor_values(..., only_tids=)``).
+        ``provider_*`` supply persisted phase-2 evidence (value digests +
+        memoized spectra): pairs whose verdict they decide never fetch a
+        value — a replay of a recorded comparison is sketch-only.
         """
         self._check_samples(stats_a, stats_b)
         n = len(stats_a)
@@ -537,25 +615,38 @@ class TensorMatcher:
         # ---- phase 2: lazy memoized spectra on survivors ------------------
         # One sample at a time: pairs rejected on sample k never cost a fetch
         # or SVD on sample k+1, and at most one sample's survivor values per
-        # side are resident at any moment (the peak-memory bound).
+        # side are resident at any moment (the peak-memory bound).  Each
+        # sample runs the gate twice: a *dry* pass decides every pair the
+        # persisted evidence (digests + spectra) already covers without
+        # touching values, then one batched prefetch materializes the
+        # remaining pairs' tensors for the *wet* pass.
         st = MatchStats(n_tids_a=len(tids_a), n_tids_b=len(tids_b),
                         phase1_pairs=len(cand), phase1_s=t1 - t0)
         surviving = cand
         for k in range(n):
             if not surviving:
                 break
-            la = _LazySpectra(stats_a[k], functools.partial(fetch_a, k), self)
-            lb = _LazySpectra(stats_b[k], functools.partial(fetch_b, k), self)
+            la = _LazySpectra(stats_a[k], functools.partial(fetch_a, k), self,
+                              provider=provider_a, sample=k)
+            lb = _LazySpectra(stats_b[k], functools.partial(fetch_b, k), self,
+                              provider=provider_b, sample=k)
+            decided: dict[tuple[int, int], bool] = {}
             need_a: set[int] = set()
             need_b: set[int] = set()
             for ta, tb in surviving:
-                if self._needs_values(la, ta, lb, tb):
+                verdict = self._spectra_gate(la, ta, lb, tb, dry=True)
+                if verdict is None:
                     need_a.add(ta)
                     need_b.add(tb)
+                else:
+                    decided[(ta, tb)] = verdict
+                    st.decided_dry += 1
             la.prefetch(need_a)
             lb.prefetch(need_b)
-            surviving = [(ta, tb) for ta, tb in surviving
-                         if self._spectra_gate(la, ta, lb, tb)]
+            surviving = [
+                (ta, tb) for ta, tb in surviving
+                if (decided[(ta, tb)] if (ta, tb) in decided
+                    else self._spectra_gate(la, ta, lb, tb))]
             st.dense_svds += la.dense_svds + lb.dense_svds
             st.sketch_svds += la.sketch_svds + lb.sketch_svds
             st.fetched_bytes += la.fetched_bytes + lb.fetched_bytes
@@ -634,15 +725,12 @@ class TensorMatcher:
                 if stats[0][t].numel >= self.min_numel
                 and all(not s[t].is_degenerate() for s in stats)}
 
-    def _needs_values(self, la: _LazySpectra, ta: int,
-                      lb: _LazySpectra, tb: int) -> bool:
-        ma, mb = la.mode(ta), lb.mode(tb)
-        if not (ma == mb and ma in ("dense", "sketch")):
-            return False
-        return bool(la.keys(ta) & lb.keys(tb))
-
     def _spectra_gate(self, la: _LazySpectra, ta: int,
-                      lb: _LazySpectra, tb: int) -> bool:
+                      lb: _LazySpectra, tb: int, *,
+                      dry: bool = False) -> bool | None:
+        """Phase-2 verdict for one pair; ``dry`` answers only from already-
+        available evidence (persisted digests/spectra, in-run memos) and
+        returns ``None`` when deciding would require fetching a value."""
         ma, mb = la.mode(ta), lb.mode(tb)
         if ma == "dense" and mb == "dense":
             tol = self.rtol * 10
@@ -655,16 +743,22 @@ class TensorMatcher:
         shared = la.keys(ta) & lb.keys(tb)
         if not shared:
             return True
-        # Identical-value fast path: equal-shape, bitwise-equal tensors pass
-        # the full spectral test by construction (both sides would compute
-        # the exact same spectra), so skip the SVDs.  Real A/B workloads
-        # rarely hit this; self-comparisons and copied values always do.
+        # Identical-value fast path: equal-shape, bitwise-equal tensors
+        # (equal sha256 digests) pass the full spectral test by construction
+        # — both sides would compute the exact same spectra — so skip the
+        # SVDs.  Real A/B workloads rarely hit this; self-comparisons,
+        # copied values, and matched activations across twin captures do.
         if la._sigs[ta].shape == lb._sigs[tb].shape:
-            va, vb = la._value(ta), lb._value(tb)
-            if va.shape == vb.shape and np.array_equal(va, vb):
+            da = la.digest(ta, compute=not dry)
+            db = lb.digest(tb, compute=not dry)
+            if da is not None and db is not None and da == db:
                 return True
         for key in sorted(shared):
-            if not _setwise_match(la.spectra(ta, key), lb.spectra(tb, key), tol):
+            sa = la.spectra(ta, key, compute=not dry)
+            sb = lb.spectra(tb, key, compute=not dry)
+            if sa is None or sb is None:
+                return None        # dry pass: this pair needs real values
+            if not _setwise_match(sa, sb, tol):
                 return False
         return True
 

@@ -214,14 +214,32 @@ class BaselineStore:
     """``<root>/<case-id>.json`` expectations + ``<root>/store`` artifacts.
 
     The session's artifact store is forced to the baseline artifact store so
-    record-time captures/compares persist (and memoize phase-2 values into)
-    the golden artifacts that ``check --offline`` replays.
+    record-time captures/compares persist (and memoize phase-2 evidence
+    into) the golden artifacts that ``check --offline`` replays.
+
+    ``artifact_store`` overrides the default ``<root>/store`` location with
+    any store URI — e.g. a ``file://`` NFS mirror a fleet shares, or an
+    ``http://`` readonly mirror for pure offline checks.
+
+    By default the golden store is **sketch-only** (``sketch_only=True``):
+    record persists phase-1 streamed signatures, phase-2 value digests and
+    unfolding spectra, but no raw value chunks — offline replay decides
+    every recorded match from the manifest alone (zero raw-value chunk
+    reads), which is what keeps the committed-zoo store small.  Pass
+    ``sketch_only=False`` to keep raw values (needed only if the store must
+    also serve *new* comparisons offline, beyond drift replay).
     """
 
     def __init__(self, root: str | Path = DEFAULT_BASELINE_DIR, *,
-                 session: Session | None = None):
+                 session: Session | None = None,
+                 artifact_store: "ArtifactStore | str | None" = None,
+                 sketch_only: bool = True):
         self.root = Path(root)
-        self.artifacts = ArtifactStore(self.root / "store")
+        if artifact_store is None:
+            self.artifacts = ArtifactStore(self.root / "store")
+        else:
+            self.artifacts = ArtifactStore.from_uri(artifact_store)
+        self.artifacts.persist_raw_values = not sketch_only
         self.session = session or Session()
         self.session.store = self.artifacts
 
@@ -231,12 +249,19 @@ class BaselineStore:
 
     @property
     def index_path(self) -> Path:
-        return self.artifacts.root / "index.json"
+        """case-id -> golden artifact keys.  Lives next to the committed
+        JSON expectations (NOT inside the artifact store), so an offline
+        check can point ``artifact_store`` at a shared readonly mirror that
+        only carries manifests + chunks."""
+        return self.root / "index.json"
 
     def recorded_ids(self) -> list[str]:
         if not self.root.exists():
             return []
-        return sorted(p.stem for p in self.root.glob("*.json"))
+        # index.json (case-id -> artifact keys) lives next to the per-case
+        # expectations and is not a baseline itself
+        return sorted(p.stem for p in self.root.glob("*.json")
+                      if p.name != "index.json")
 
     def load(self, case_id: str) -> Baseline:
         path = self.baseline_path(case_id)
@@ -273,10 +298,15 @@ class BaselineStore:
                energy_rtol: float = DEFAULT_ENERGY_RTOL) -> RecordResult:
         """Capture both twins, compare, and persist baseline + artifacts.
 
-        The compare runs live, so every phase-2 tensor value the matcher
-        needed is memoized onto the artifacts and persisted — the store can
-        replay this exact comparison offline forever after.
+        The compare runs live, so every phase-2 decision the matcher made
+        is persisted onto the artifacts (value digests + unfolding spectra;
+        raw value chunks too unless the store is sketch-only) — the store
+        can replay this exact comparison offline forever after.
         """
+        if self.artifacts.readonly:
+            raise BaselineError(
+                "cannot record baselines into a readonly store "
+                "(http mirror); record locally and `artifacts push`")
         art_a = self.session.capture(
             case.inefficient, case.make_args(), name=f"{case.id}-ineff",
             config=case.config_a,

@@ -1,0 +1,165 @@
+"""Schema migration: v1/v2 monolithic .npz artifacts under the v3 store.
+
+Acceptance-critical properties:
+  * v1 and v2 fixtures load through ArtifactStore (per-op HLO costs marked
+    absent for v1, value digests/spectra absent for both — recomputed from
+    the eagerly-stored values on demand),
+  * offline checks replay byte-identically before and after
+    ``artifacts migrate``,
+  * migration converts in place (npz gone, manifest + chunks in) and is
+    idempotent.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.artifact import ArtifactStore, CandidateArtifact
+from repro.core.session import Session
+from repro.testing.baselines import BaselineStore
+from repro.zoo import cases
+
+CASE_ID = "c6-matpow"
+
+
+def _legacy_golden_store(tmp_path, *, strip_to_v1=False):
+    """A golden baseline dir whose artifact store holds only legacy
+    monolithic .npz entries (what a pre-v3 checkout recorded)."""
+    case = cases.get_case(CASE_ID)
+    root = tmp_path / "baselines"
+    store = BaselineStore(root, sketch_only=False)
+    res = store.record(case)
+    arts = store.artifacts
+
+    idx = json.loads(store.index_path.read_text())[case.id]
+    for key in (idx["a"], idx["b"]):
+        art = arts.load(key)
+        # the monolithic v2 container: values inline, no digests/spectra
+        # (CandidateArtifact.save does not serialize the v3-only evidence)
+        art.save(arts.root / f"{key}.npz")
+        arts.backend.delete_manifest(key)
+    for d in list(arts.backend.chunk_keys()):
+        arts.backend.delete_chunk(d)
+    if strip_to_v1:
+        for key in (idx["a"], idx["b"]):
+            path = arts.root / f"{key}.npz"
+            with np.load(path, allow_pickle=False) as z:
+                arrays = {k: z[k] for k in z.files}
+            meta = json.loads(arrays["meta"].tobytes().decode())
+            meta["format_version"] = 1
+            meta["profile"].pop("hlo", None)
+            arrays["meta"] = np.frombuffer(json.dumps(meta).encode(),
+                                           dtype=np.uint8)
+            np.savez(path, **arrays)
+    return case, store, res
+
+
+def test_legacy_npz_entries_load_through_v3_store(tmp_path):
+    case, store, _ = _legacy_golden_store(tmp_path)
+    arts = store.artifacts
+    assert arts.backend.manifest_keys() == []
+    assert len(arts.legacy_keys()) == 2
+    for key in arts.keys():
+        assert arts.has(key)
+        art = arts.load(key)
+        assert art.values                     # npz values loaded eagerly
+        assert not art.value_index            # digests: v3-only, absent
+    listed = arts.entries()
+    assert {e["name"] for e in listed} == {f"{case.id}-ineff",
+                                           f"{case.id}-eff"}
+
+
+def test_v1_fixture_loads_with_per_op_costs_absent(tmp_path):
+    _, store, _ = _legacy_golden_store(tmp_path, strip_to_v1=True)
+    for key in store.artifacts.keys():
+        art = store.artifacts.load(key)
+        assert art.profile.hlo is None        # per-op costs marked absent
+        assert art.profile.total_energy_j > 0
+
+
+@pytest.mark.parametrize("strip_to_v1", [False, True])
+def test_offline_check_is_byte_identical_across_migration(tmp_path,
+                                                          strip_to_v1):
+    case, store, res = _legacy_golden_store(tmp_path,
+                                            strip_to_v1=strip_to_v1)
+    arts = store.artifacts
+    idx = json.loads(store.index_path.read_text())[case.id]
+
+    def offline_report():
+        la, lb = arts.load(idx["a"]), arts.load(idx["b"])
+        return Session().compare(la, lb, output_rtol=case.output_rtol,
+                                 persist=False).to_json()
+
+    legacy_json = offline_report()
+    assert legacy_json == res.report.to_json()          # v2 replay == live
+
+    migrated = arts.migrate()
+    assert migrated == {"migrated": 2, "skipped": 0}
+    assert arts.legacy_keys() == []                     # npz gone
+    assert sorted(arts.backend.manifest_keys()) == sorted([idx["a"],
+                                                           idx["b"]])
+    assert offline_report() == legacy_json              # byte-identical
+    assert store.check(case, offline=True) == []
+
+    # idempotent: nothing left to migrate
+    assert arts.migrate() == {"migrated": 0, "skipped": 0}
+
+
+def test_offline_check_on_legacy_store_upgrades_evidence(tmp_path):
+    """An offline check against a still-unmigrated store passes drift-free
+    AND persists the phase-2 evidence it derived (digests + spectra land in
+    a fresh v3 manifest next to the npz), so `migrate` afterwards only has
+    the already-converted entries to skip."""
+    case, store, _ = _legacy_golden_store(tmp_path)
+    arts = store.artifacts
+    assert arts.backend.manifest_keys() == []
+    assert store.check(case, offline=True) == []
+    assert len(arts.backend.manifest_keys()) == 2       # evidence persisted
+    assert arts.migrate() == {"migrated": 0, "skipped": 2}
+    assert store.check(case, offline=True) == []
+
+
+def test_migrate_carries_values_into_chunks(tmp_path):
+    """Migrated artifacts keep their raw values (chunked + deduplicated),
+    so even comparisons the record never ran stay servable offline."""
+    case, store, _ = _legacy_golden_store(tmp_path)
+    arts = store.artifacts
+    logical = sum(v.nbytes
+                  for key in arts.keys()
+                  for v in arts.load(key).values.values())
+    arts.migrate()
+    st = arts.stats()
+    assert st["values_total"] > 0 and st["values_sketch_only"] == 0
+    assert st["chunk_bytes"] > 0
+    # dedup: twins share inputs/matched values, so chunks < logical bytes
+    assert st["chunk_bytes"] < logical + st["logical_output_bytes"]
+    for key in arts.keys():
+        art = arts.load(key)
+        assert not art.values                 # lazily chunk-backed now
+        k, tid = sorted(art.value_index)[0]
+        got = art.fetcher()(k, [tid])
+        assert got[tid].size >= 0             # raw fetch via chunk store
+
+
+def test_push_refuses_unmigrated_legacy_entries(tmp_path):
+    _, store, _ = _legacy_golden_store(tmp_path)
+    with pytest.raises(ValueError, match="migrate"):
+        store.artifacts.push(f"file://{tmp_path / 'mirror'}")
+    store.artifacts.migrate()
+    res = store.artifacts.push(f"file://{tmp_path / 'mirror'}")
+    assert res["manifests"] == 2
+
+
+def test_push_accepts_keys_migrated_with_keep_legacy(tmp_path):
+    """`migrate --keep-legacy` leaves the npz next to the new manifest; a
+    key with a manifest is migrated and must push (by name and in bulk)."""
+    _, store, _ = _legacy_golden_store(tmp_path)
+    arts = store.artifacts
+    arts.migrate(delete_legacy=False)
+    keys = arts.keys()
+    assert arts.legacy_keys() == keys         # npz still present
+    res = arts.push(f"file://{tmp_path / 'mirror'}", keys=keys[:1])
+    assert res["manifests"] == 1
+    res = arts.push(f"file://{tmp_path / 'mirror2'}")
+    assert res["manifests"] == 2

@@ -92,7 +92,7 @@ def test_baseline_detects_planted_drift(tmp_path):
 
 
 def test_offline_check_reports_unmaterialized_fetch_as_drift(tmp_path):
-    """A replay that needs phase-2 values the golden store never memoized
+    """A replay that needs phase-2 evidence the golden store never recorded
     is changed matcher behavior — reported as drift, never as advice to
     re-record (which would bless the change unseen)."""
     import json as _json
@@ -103,9 +103,14 @@ def test_offline_check_reports_unmaterialized_fetch_as_drift(tmp_path):
     idx = _json.loads(store.index_path.read_text())
     key = idx[case.id]["a"]
     art = store.artifacts.load(key)
-    assert art.values                         # compare memoized phase-2 values
-    art.values.clear()                        # simulate a widened fetch set
-    art.save(store.artifacts.path_for(key))
+    # the record-time compare persisted its phase-2 decisions (sketch-only:
+    # value digests + unfolding spectra, no raw chunks)
+    assert art.value_index and not art.values
+    # simulate a widened fetch set: strip every recorded decision, so the
+    # replay must fetch raw values that were never persisted
+    art.value_index.clear()
+    art.spectra_memo.clear()
+    store.artifacts.save(art)
     drifts = store.check(case, offline=True)
     assert [d.field for d in drifts] == ["offline_replay"]
 

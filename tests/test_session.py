@@ -343,8 +343,8 @@ def test_artifact_persists_per_op_hlo_costs(tmp_path):
 
 
 def test_v1_artifact_loads_with_hlo_costs_marked_absent(tmp_path):
-    """Old (format v1) artifacts still load; their per-op HLO costs are
-    marked absent (profile.hlo is None) rather than erroring."""
+    """Old (format v1) monolithic .npz artifacts still load; their per-op
+    HLO costs are marked absent (profile.hlo is None) rather than erroring."""
     import json as _json
 
     from repro.core import artifact as artifact_mod
@@ -352,7 +352,8 @@ def test_v1_artifact_loads_with_hlo_costs_marked_absent(tmp_path):
     case = cases.get_case("c6-matpow")
     session = Session(store=str(tmp_path))
     art = session.capture(case.inefficient, case.make_args(), name="x")
-    path = session.store.path_for(art.key)
+    path = tmp_path / "legacy.npz"
+    art.save(path)                  # the monolithic (legacy v2) container
 
     # rewrite the saved npz's meta block as a v1 payload (no 'hlo' field)
     with np.load(path, allow_pickle=False) as z:
@@ -374,7 +375,35 @@ def test_v1_artifact_loads_with_hlo_costs_marked_absent(tmp_path):
     np.savez(path, **arrays)
     with pytest.raises(ValueError, match="format v99"):
         CandidateArtifact.load(path)
-    assert artifact_mod.ARTIFACT_FORMAT_VERSION == 2
+    assert artifact_mod.ARTIFACT_FORMAT_VERSION == 3
+
+
+def test_cache_hit_from_remote_store_skips_reexecution(tmp_path, monkeypatch):
+    """A capture recorded on one machine and mirrored is a cache hit on
+    another: the read-through local store pulls the manifest from the
+    remote, skips every instrumented execution, and re-attaches for lazy
+    phase-2 fetches."""
+    case = cases.get_case("c6-matpow")
+    recorder = Session(store=str(tmp_path / "recorder"))
+    art = recorder.capture(case.inefficient, case.make_args(), name="x")
+    mirror = tmp_path / "mirror"
+    recorder.store.push(f"file://{mirror}")
+
+    fleet = Session(store=ArtifactStore(tmp_path / "fleet",
+                                        remote=f"file://{mirror}"))
+    calls = _count_runs(monkeypatch)
+    hit = fleet.capture(case.inefficient, case.make_args(), name="x")
+    assert hit.meta.get("cache_hit")
+    assert calls["n"] == 0              # no instrumented execution at all
+    assert hit.key == art.key
+    assert hit.is_live                  # re-attached for lazy fetches
+    assert fleet.store.counters["upstream_manifest_reads"] == 1
+    # second hit is served from the local read-through cache
+    fleet2 = Session(store=ArtifactStore(tmp_path / "fleet",
+                                         remote=f"file://{mirror}"))
+    hit2 = fleet2.capture(case.inefficient, case.make_args(), name="x")
+    assert hit2.meta.get("cache_hit") and calls["n"] == 0
+    assert fleet2.store.counters["upstream_manifest_reads"] == 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,386 @@
+"""Chunked content-addressed store: dedup, atomicity/concurrency, remote
+mirrors, sketch-only offline replay with zero raw-value chunk reads.
+
+Acceptance-critical properties:
+  * identical values shared across candidates are stored once (chunk dedup),
+  * a crash mid-save leaves a clean load-or-miss, never a torn entry, and
+    two processes capturing the same key converge,
+  * ``baseline check --offline`` replays the fast-lane zoo cases
+    bit-identically from sketch-only manifests with ZERO raw-value chunk
+    reads (store read counters),
+  * push/pull mirrors round-trip manifests + chunks, and a read-through
+    remote serves cache hits (spy test lives in test_session.py).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.artifact import ArtifactStore, CandidateArtifact
+from repro.core.session import Session
+from repro.core.store import (CHUNK_BYTES, LocalStore, RemoteStore,
+                              StoreReadOnlyError, chunk_digest, open_store,
+                              split_chunks)
+from repro.testing.baselines import BaselineStore
+from repro.zoo import cases
+
+# the CI fast-lane subset: structurally varied, cheap enough for tier-1
+SKETCH_CASES = ["c6-matpow", "c15-expm", "c12-ln-layout", "c9-join-psum"]
+
+
+# ---------------------------------------------------------------------------
+# chunk-level transport
+# ---------------------------------------------------------------------------
+
+def test_chunking_roundtrip_and_dedup(tmp_path):
+    store = LocalStore(tmp_path)
+    big = os.urandom(CHUNK_BYTES + 1024)      # spans two chunks
+    digests = []
+    for c in split_chunks(big):
+        d = chunk_digest(c)
+        store.write_chunk(d, c)
+        digests.append(d)
+    assert len(digests) == 2
+    assert b"".join(store.read_chunk(d) for d in digests) == big
+
+    # identical content re-written is a dedup hit, not a second file
+    writes_before = store.counters["chunk_writes"]
+    for c in split_chunks(big):
+        store.write_chunk(chunk_digest(c), c)
+    assert store.counters["chunk_writes"] == writes_before
+    assert store.counters["chunk_dedup_hits"] >= 2
+    assert sorted(store.chunk_keys()) == sorted(set(digests))
+
+
+def test_identical_values_across_artifacts_stored_once(tmp_path):
+    """Twin captures fetch bitwise-identical phase-2 values (shared inputs,
+    matched activations); a full-values store must hold each exactly once."""
+    case = cases.get_case("c6-matpow")
+    store = ArtifactStore(tmp_path, persist_raw_values=True)
+    session = Session(store=store)
+    a = session.capture(case.inefficient, case.make_args(), name="ineff")
+    b = session.capture(case.efficient, case.make_args(), name="eff")
+    session.compare(a, b, output_rtol=case.output_rtol)
+
+    st = store.stats()
+    assert st["values_total"] > 0 and st["values_sketch_only"] == 0
+    # logical value bytes exceed the deduplicated chunk bytes: at least the
+    # shared model input appears under both artifacts
+    assert st["dedup_ratio"] > 1.0
+    digests_a = [r["digest"]
+                 for r in store.backend.read_manifest(a.key)["values"]]
+    digests_b = [r["digest"]
+                 for r in store.backend.read_manifest(b.key)["values"]]
+    shared = set(digests_a) & set(digests_b)
+    assert shared, "twins share no value content?"
+    assert store.counters["chunk_dedup_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# atomicity / concurrency
+# ---------------------------------------------------------------------------
+
+def _capture_one(session):
+    case = cases.get_case("c6-matpow")
+    return session.capture(case.inefficient, case.make_args(), name="x")
+
+
+def test_crash_mid_save_leaves_clean_miss(tmp_path, monkeypatch):
+    """Kill the save after chunks land but before the manifest rename:
+    the store must answer a clean miss (and a later save must succeed)."""
+    store = ArtifactStore(tmp_path)
+    session = Session(store=None)
+    art = _capture_one(session)
+
+    boom = RuntimeError("simulated crash before manifest publish")
+    orig = LocalStore.write_manifest
+    monkeypatch.setattr(LocalStore, "write_manifest",
+                        lambda *a, **k: (_ for _ in ()).throw(boom))
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        store.save(art)
+    assert not store.has(art.key)             # miss, not a torn entry
+    with pytest.raises(KeyError):
+        store.load(art.key)
+
+    monkeypatch.setattr(LocalStore, "write_manifest", orig)
+    store.save(art)
+    assert store.has(art.key)
+    loaded = store.load(art.key)
+    assert loaded.key == art.key
+
+
+def test_torn_manifest_write_never_visible(tmp_path, monkeypatch):
+    """A crash inside the manifest write itself (before os.replace) leaves
+    no file at the destination — the tmp-file dance is load-bearing."""
+    store = ArtifactStore(tmp_path)
+    session = Session(store=None)
+    art = _capture_one(session)
+
+    real_replace = os.replace
+    state = {"armed": True}
+
+    def exploding_replace(src, dst):
+        if state["armed"] and str(dst).endswith(".json"):
+            state["armed"] = False
+            raise OSError("simulated crash during rename")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", exploding_replace)
+    with pytest.raises(OSError, match="simulated crash"):
+        store.save(art)
+    assert not store.path_for(art.key).exists()
+    assert not store.has(art.key)
+    # no stray tmp files left in the manifests dir
+    leftovers = list((tmp_path / "manifests").glob("*.tmp"))
+    assert not leftovers
+    store.save(art)                           # recovery save works
+    assert store.load(art.key).key == art.key
+
+
+def test_concurrent_captures_of_same_key_converge(tmp_path):
+    """Two processes capturing the same key must not corrupt or duplicate
+    entries: chunk writes are idempotent by content address and the
+    manifest rename is last-wins over identical content."""
+    case = cases.get_case("c6-matpow")
+    s1 = Session(store=ArtifactStore(tmp_path))
+    s2 = Session(store=ArtifactStore(tmp_path))
+    a1 = s1.capture(case.inefficient, case.make_args(), name="x",
+                    use_cache=False)
+    a2 = s2.capture(case.inefficient, case.make_args(), name="x",
+                    use_cache=False)
+    assert a1.key == a2.key
+    store = ArtifactStore(tmp_path)
+    assert store.keys().count(a1.key) == 1
+    # every chunk file exists exactly once; loading is clean
+    chunks = store.backend.chunk_keys()
+    assert len(chunks) == len(set(chunks))
+    loaded = store.load(a1.key)
+    np.testing.assert_array_equal(loaded.outputs[0], a1.outputs[0])
+
+
+# ---------------------------------------------------------------------------
+# sketch-only offline replay: zero raw-value chunk reads
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cid", SKETCH_CASES)
+def test_sketch_only_offline_replay_zero_value_reads(cid, tmp_path):
+    """The golden store is sketch-only by default: offline replay decides
+    every recorded match from manifest digests + spectra, reading ZERO
+    chunks (outputs are materialized at load, before the compare)."""
+    case = cases.get_case(cid)
+    store = BaselineStore(tmp_path)           # sketch_only=True default
+    res = store.record(case)
+    live_json = res.report.to_json()
+
+    idx = json.loads(store.index_path.read_text())
+    arts = ArtifactStore(tmp_path / "store")
+    la = arts.load(idx[case.id]["a"])
+    lb = arts.load(idx[case.id]["b"])
+    assert not la.is_live and not lb.is_live
+    assert la.value_index and not la.values   # digests yes, raw values no
+
+    before = dict(arts.counters)
+    session = Session()
+    report = session.compare(la, lb, output_rtol=case.output_rtol)
+    reads = arts.counters["chunk_reads"] - before["chunk_reads"]
+    assert reads == 0, f"{cid}: sketch-only replay read {reads} chunks"
+    assert report.to_json() == live_json      # bit-identical to record time
+
+    # the store holds no value chunks at all — only sample-0 outputs
+    st = arts.stats()
+    assert st["values_sketch_only"] == st["values_total"] > 0
+
+
+def test_offline_check_passes_from_sketch_only_store(tmp_path):
+    case = cases.get_case("c6-matpow")
+    store = BaselineStore(tmp_path)
+    store.record(case)
+    assert store.check(case, offline=True) == []
+
+
+# ---------------------------------------------------------------------------
+# push / pull / remote mirrors
+# ---------------------------------------------------------------------------
+
+def test_push_pull_roundtrip_file_uri(tmp_path):
+    case = cases.get_case("c6-matpow")
+    src = ArtifactStore(tmp_path / "src")
+    session = Session(store=src)
+    a = session.capture(case.inefficient, case.make_args(), name="ineff")
+    b = session.capture(case.efficient, case.make_args(), name="eff")
+    session.compare(a, b, output_rtol=case.output_rtol)
+
+    mirror = f"file://{tmp_path / 'mirror'}"
+    res = src.push(mirror)
+    assert res["manifests"] == 2 and res["chunks_copied"] > 0
+    # second push is a no-op on chunks (dedup-aware)
+    res2 = src.push(mirror)
+    assert res2["chunks_copied"] == 0
+    # every unique chunk lands exactly once even when shared across
+    # manifests (the first push already skips cross-manifest repeats)
+    assert res2["chunks_skipped"] >= res["chunks_copied"]
+
+    dst = ArtifactStore(tmp_path / "dst")
+    pulled = dst.pull(mirror)
+    assert pulled["manifests"] == 2
+    assert sorted(dst.keys()) == sorted(src.keys())
+    for key in src.keys():
+        assert dst.backend.read_manifest(key) == \
+            src.backend.read_manifest(key)
+    # offline compare from the pulled store is bit-identical
+    la, lb = dst.load(a.key), dst.load(b.key)
+    rep = Session().compare(la, lb, output_rtol=case.output_rtol)
+    assert rep.meta["eq_tensor_pairs"] >= 1
+
+
+def test_offline_baseline_check_from_remote_mirror(tmp_path):
+    """`baseline check --offline --store file://mirror`: the golden
+    artifacts live only on the mirror; the check must pass drift-free."""
+    case = cases.get_case("c6-matpow")
+    store = BaselineStore(tmp_path / "baselines")
+    store.record(case)
+    mirror = tmp_path / "mirror"
+    store.artifacts.push(f"file://{mirror}")
+
+    remote = BaselineStore(tmp_path / "baselines",
+                           artifact_store=f"file://{mirror}")
+    assert remote.check(case, offline=True) == []
+    assert remote.artifacts.counters["manifest_reads"] >= 2
+
+
+def test_http_remote_store_is_readonly(tmp_path):
+    store = RemoteStore("http://127.0.0.1:1/never-contacted")
+    assert store.readonly
+    with pytest.raises(StoreReadOnlyError):
+        store.write_chunk("00" * 32, b"x")
+    with pytest.raises(StoreReadOnlyError):
+        store.write_manifest("k", {})
+
+
+def test_http_remote_store_serves_mirror(tmp_path):
+    """End-to-end http mirror: push to a dir, serve it with http.server,
+    list + load through RemoteStore."""
+    import http.server
+    import socketserver
+    import threading
+
+    case = cases.get_case("c6-matpow")
+    src = ArtifactStore(tmp_path / "src")
+    session = Session(store=src)
+    art = session.capture(case.inefficient, case.make_args(), name="x")
+    mirror = tmp_path / "mirror"
+    src.push(f"file://{mirror}")
+
+    import functools
+
+    quiet = type("H", (http.server.SimpleHTTPRequestHandler,), {
+        "log_message": lambda *a, **k: None})
+    handler = functools.partial(quiet, directory=str(mirror))
+    try:
+        httpd = socketserver.TCPServer(("127.0.0.1", 0), handler)
+    except OSError as e:
+        pytest.skip(f"cannot bind a localhost socket: {e}")
+    port = httpd.server_address[1]
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    try:
+        remote = ArtifactStore.from_uri(f"http://127.0.0.1:{port}")
+        assert remote.readonly
+        assert art.key in remote.keys()       # via the pushed index.json
+        loaded = remote.load(art.key)
+        np.testing.assert_array_equal(loaded.outputs[0], art.outputs[0])
+        with pytest.raises(PermissionError):
+            remote.save(art)
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+
+
+def test_open_store_scheme_resolution(tmp_path):
+    assert isinstance(open_store(tmp_path), LocalStore)
+    assert isinstance(open_store(f"file://{tmp_path}"), RemoteStore)
+    assert isinstance(open_store("http://example.invalid/x"), RemoteStore)
+    with pytest.raises(ValueError, match="unsupported store scheme"):
+        RemoteStore("s3://bucket/prefix")
+
+
+# ---------------------------------------------------------------------------
+# refcount-aware GC
+# ---------------------------------------------------------------------------
+
+def test_prune_keeps_chunks_referenced_by_survivors(tmp_path):
+    """Deleting one artifact must not free chunks another still references
+    (shared inputs / matched values), and must free its exclusive ones."""
+    case = cases.get_case("c6-matpow")
+    store = ArtifactStore(tmp_path, persist_raw_values=True)
+    session = Session(store=store)
+    a = session.capture(case.inefficient, case.make_args(), name="ineff")
+    b = session.capture(case.efficient, case.make_args(), name="eff")
+    session.compare(a, b, output_rtol=case.output_rtol)
+
+    man_a = store.backend.read_manifest(a.key)
+    man_b = store.backend.read_manifest(b.key)
+    refs_a = {c for r in man_a["outputs"] + man_a["values"]
+              for c in (r["chunks"] or ())}
+    refs_b = {c for r in man_b["outputs"] + man_b["values"]
+              for c in (r["chunks"] or ())}
+    shared = refs_a & refs_b
+    exclusive_a = refs_a - refs_b
+    assert shared and exclusive_a
+
+    deleted = store.prune(keep=[b.key], keep_latest=0, max_bytes=0)
+    assert deleted == [a.key]
+    present = set(store.backend.chunk_keys())
+    assert shared <= present                  # survivor's chunks intact
+    assert not (exclusive_a & present)        # pruned artifact's freed
+    # the survivor still loads and serves values
+    lb = store.load(b.key)
+    fetched = lb.fetcher()(0, sorted(lb.value_index)[0][1:2] or [])
+    assert isinstance(fetched, dict)
+
+
+def test_cross_store_save_never_advertises_missing_chunks(tmp_path):
+    """Saving an artifact loaded from store A into store B must leave B's
+    manifest honest: chunk lists only when B can serve the bytes (copied
+    from A), digest-only records otherwise — never dangling references."""
+    case = cases.get_case("c6-matpow")
+    a_store = ArtifactStore(tmp_path / "a", persist_raw_values=True)
+    session = Session(store=a_store)
+    x = session.capture(case.inefficient, case.make_args(), name="ineff")
+    y = session.capture(case.efficient, case.make_args(), name="eff")
+    session.compare(x, y, output_rtol=case.output_rtol)
+
+    # full target: chunks are pulled across from A on save
+    loaded = a_store.load(x.key)              # values chunk-backed, not live
+    assert loaded.value_index and not loaded.values
+    b_store = ArtifactStore(tmp_path / "b", persist_raw_values=True)
+    b_store.save(loaded)
+    for rec in b_store.backend.read_manifest(x.key)["values"]:
+        assert rec["chunks"], "full save dropped a value's chunks"
+        for d in rec["chunks"]:
+            assert b_store.backend.has_chunk(d), f"dangling chunk ref {d}"
+
+    # sketch-only target: digest-only records — except where the bytes are
+    # already resident anyway (a value bitwise-equal to a sample-0 output
+    # shares its content-addressed chunk), never a dangling advertisement
+    c_store = ArtifactStore(tmp_path / "c", persist_raw_values=False)
+    c_store.save(a_store.load(x.key))
+    recs = c_store.backend.read_manifest(x.key)["values"]
+    assert any(rec["chunks"] is None for rec in recs)
+    for rec in recs:
+        assert rec["digest"]
+        for d in rec["chunks"] or ():
+            assert c_store.backend.has_chunk(d), f"dangling chunk ref {d}"
+
+
+def test_gc_chunks_drops_unreferenced(tmp_path):
+    store = ArtifactStore(tmp_path)
+    orphan = os.urandom(128)
+    d = chunk_digest(orphan)
+    store.backend.write_chunk(d, orphan)
+    assert store.gc_chunks(dry_run=True) == [d]
+    assert store.backend.has_chunk(d)         # dry run deletes nothing
+    assert store.gc_chunks() == [d]
+    assert not store.backend.has_chunk(d)

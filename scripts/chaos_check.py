@@ -1,0 +1,186 @@
+#!/usr/bin/env python
+"""CI chaos stage: the offline drift gate replayed under injected faults.
+
+Records the 4-case fast lane into a golden store, pushes it to a file://
+mirror, then replays the offline baseline check from a read-through local
+cache that has been corrupted at rest (every chunk bit-flipped, one
+manifest garbled) behind a seeded flaky mirror (transient I/O errors and
+timeouts injected by a deterministic :class:`FaultPlan`).
+
+The gate is the no-silent-wrong-answer invariant (docs/robustness.md):
+every case must end
+
+* byte-identical to the fault-free replay (retry + quarantine + verified
+  re-fetch absorbed everything — what this deterministic schedule is
+  designed to allow), or
+* declared (``Drift`` in the ``store``/``offline_replay`` fields), or
+* a typed failure (the ``StoreError`` family),
+
+and the schedule must demonstrably have *fired* (plan log, quarantine and
+retry counters) — a chaos stage whose faults never trigger gates nothing.
+
+Run from the repo root (scripts/ci.sh does):
+    PYTHONPATH=src python scripts/chaos_check.py
+"""
+
+from __future__ import annotations
+
+import hashlib
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+from repro.core.artifact import ArtifactValueError
+from repro.core.faults import FaultPlan, FaultSpec, FaultyStore
+from repro.core.store import (LocalStore, RemoteStore, RetryPolicy,
+                              StoreError)
+from repro.testing.baselines import BaselineError, BaselineStore
+from repro.zoo import cases
+
+# same structurally-varied subset as the ci.sh baseline gate
+CASES = ["c6-matpow", "c15-expm", "c12-ln-layout", "c9-join-psum"]
+
+# deterministic, recoverable schedule: every fault count sits inside the
+# retry policy's per-call attempt limit and upstream of the verification
+# layer (wrapping the local cache itself would inject *above* digest
+# verification, which no store can defend against)
+FLAKY_SPECS = [
+    FaultSpec("read_chunk", "io_error", times=2),
+    FaultSpec("read_manifest", "timeout", times=1),
+    FaultSpec("has_chunk", "io_error", times=1),
+]
+
+
+def _fingerprint(root: Path) -> dict:
+    out = {}
+    for p in sorted(root.rglob("*")):
+        rel = p.relative_to(root)
+        if not p.is_file() or rel.parts[0] == "quarantine":
+            continue
+        out[str(rel)] = hashlib.sha256(p.read_bytes()).hexdigest()
+    return out
+
+
+def _corrupt_at_rest(cache: Path) -> int:
+    """Bit-flip every cached chunk and garble one cached manifest."""
+    n = 0
+    for p in sorted((cache / "chunks").rglob("*")):
+        if p.is_file():
+            blob = bytearray(p.read_bytes())
+            blob[0] ^= 0xFF
+            p.write_bytes(bytes(blob))
+            n += 1
+    manifests = sorted((cache / "manifests").glob("*.json"))
+    manifests[0].write_text("{torn mid-write")
+    return n
+
+
+def _replay(bdir: Path, cache: Path, upstream) -> tuple:
+    """Offline baseline check for all CASES through a read-through cache.
+
+    Returns (local_store, {case_id: (outcome, detail)}) with outcome one of
+    'clean' | 'declared' | 'typed' | 'WRONG'.
+    """
+    local = LocalStore(cache, upstream=upstream,
+                       retry=RetryPolicy(sleep=lambda s: None, seed=1))
+    bs = BaselineStore(bdir)
+    bs.artifacts.backend = local
+    outcomes = {}
+    for cid in CASES:
+        case = cases.get_case(cid)
+        try:
+            drifts = bs.check(case, offline=True)
+        except (StoreError, ArtifactValueError, BaselineError) as e:
+            outcomes[cid] = ("typed", f"{type(e).__name__}: {e}")
+            continue
+        if not drifts:
+            outcomes[cid] = ("clean", None)
+        elif all(d.field in ("store", "offline_replay") for d in drifts):
+            outcomes[cid] = ("declared",
+                             "; ".join(f"{d.field}: {d.actual}"
+                                       for d in drifts))
+        else:
+            # detector fields drifted under faults: a wrong answer that a
+            # fault-free replay would not produce
+            outcomes[cid] = ("WRONG",
+                             "; ".join(f"{d.field}: {d.expected!r} -> "
+                                       f"{d.actual!r}" for d in drifts))
+    return local, outcomes
+
+
+def main() -> int:
+    tmp = Path(tempfile.mkdtemp(prefix="magneton-chaos-"))
+    try:
+        return run(tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run(tmp: Path) -> int:
+    bdir = tmp / "baselines"
+    bs = BaselineStore(bdir)
+    for cid in CASES:
+        bs.record(cases.get_case(cid))
+    mirror = tmp / "mirror"
+    bs.artifacts.push(f"file://{mirror}")
+    print(f"chaos: recorded {len(CASES)} golden cases, pushed to mirror")
+
+    # fault-free reference replay through a fresh read-through cache
+    _, ref = _replay(bdir, tmp / "cache-ref",
+                     RemoteStore(f"file://{mirror}"))
+    bad_ref = {c: o for c, o in ref.items() if o[0] != "clean"}
+    if bad_ref:
+        print(f"chaos: fault-free reference replay not clean: {bad_ref}")
+        return 1
+
+    # chaos replay: warm an identical cache, corrupt it at rest, then
+    # replay behind the seeded flaky mirror
+    chaos_cache = tmp / "cache-chaos"
+    _replay(bdir, chaos_cache, RemoteStore(f"file://{mirror}"))
+    n_corrupted = _corrupt_at_rest(chaos_cache)
+    plan = FaultPlan(FLAKY_SPECS, seed=11)
+    local, outcomes = _replay(
+        bdir, chaos_cache,
+        FaultyStore(RemoteStore(f"file://{mirror}"), plan))
+
+    c = local.counters
+    print(f"chaos: corrupted {n_corrupted} chunks + 1 manifest at rest; "
+          f"injected {plan.injected} transport faults {plan.log}; "
+          f"quarantined {c['chunks_quarantined']}, retries {c['retries']}, "
+          f"verify failures {c['verify_failures']}")
+    for cid, (outcome, detail) in outcomes.items():
+        print(f"chaos: {cid}: {outcome}"
+              + (f" ({detail})" if detail else ""))
+
+    wrong = {cid: d for cid, (o, d) in outcomes.items() if o == "WRONG"}
+    if wrong:
+        print(f"chaos: SILENT WRONG ANSWER under faults: {wrong}")
+        return 1
+    # this schedule is deterministic and fully recoverable by design, so
+    # the stronger gate holds: every case byte-identical to fault-free
+    not_clean = {c: o for c, o in outcomes.items() if o[0] != "clean"}
+    if not_clean:
+        print(f"chaos: recoverable schedule did not fully recover: "
+              f"{not_clean}")
+        return 1
+    # and the healed cache converged byte-for-byte to the reference cache
+    if _fingerprint(chaos_cache) != _fingerprint(tmp / "cache-ref"):
+        print("chaos: healed cache is not byte-identical to the "
+              "fault-free cache")
+        return 1
+    # the faults must actually have fired, or the stage gates nothing
+    if plan.injected < len(FLAKY_SPECS) or c["chunks_quarantined"] < 1 \
+            or c["retries"] < 1:
+        print("chaos: fault schedule did not fire "
+              f"(injected={plan.injected}, "
+              f"quarantined={c['chunks_quarantined']}, "
+              f"retries={c['retries']})")
+        return 1
+    print("chaos OK: faults absorbed, results byte-identical, "
+          "store state converged")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -109,6 +109,16 @@ python -m repro.cli baseline check --dir "$SDIR" --offline \
     --store "file://$MIRROR" "${BASELINE_CASES[@]}"
 echo "store round-trip OK"
 
+echo "== chaos (offline replay under seeded faults) =="
+# Replays the same 4-case offline drift gate through a read-through cache
+# corrupted at rest (bit-flipped chunks, one garbled manifest) behind a
+# flaky mirror driven by a fixed seeded FaultPlan.  Gates on the
+# no-silent-wrong-answer invariant: byte-identical recovery for this
+# deterministic schedule, quarantine/retry counters proving the faults
+# fired.  See docs/robustness.md.
+python scripts/chaos_check.py
+echo "chaos OK"
+
 if [[ "$FULL" == 1 ]]; then
     echo "== overhead benchmark (BENCH_overhead.json) =="
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \

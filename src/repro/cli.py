@@ -125,7 +125,8 @@ def _resolve_spec(spec: str, session: Session) -> _Resolved:
         f"({session.store.root if session.store else 'no store'})")
 
 
-def _open_store(uri: str | None, remote: str | None = None) -> ArtifactStore:
+def _open_store(uri: str | None, remote: str | None = None,
+                timeout: float | None = None) -> ArtifactStore:
     if remote and uri is not None and "://" in str(uri):
         # a URI store is itself remote-backed; silently ignoring --remote
         # would discard the user's read-through cache expectation
@@ -133,16 +134,18 @@ def _open_store(uri: str | None, remote: str | None = None) -> ArtifactStore:
             "error: --remote needs a LOCAL --store path to cache into; "
             f"--store {uri!r} is already a remote URI")
     if uri is None:
-        return ArtifactStore(remote=remote) if remote else ArtifactStore()
+        return (ArtifactStore(remote=remote, store_timeout=timeout)
+                if remote else ArtifactStore())
     if remote:
-        return ArtifactStore(uri, remote=remote)
-    return ArtifactStore.from_uri(uri)
+        return ArtifactStore(uri, remote=remote, store_timeout=timeout)
+    return ArtifactStore.from_uri(uri, store_timeout=timeout)
 
 
 def _make_session(args) -> Session:
     return Session(backend=backend_from_name(args.backend),
                    store=_open_store(args.store,
-                                     getattr(args, "remote", None)),
+                                     getattr(args, "remote", None),
+                                     getattr(args, "store_timeout", None)),
                    num_input_samples=args.samples)
 
 
@@ -154,6 +157,11 @@ def _add_common(p: argparse.ArgumentParser) -> None:
     p.add_argument("--remote", default=None, metavar="URI",
                    help="read-through upstream store: cache misses pull "
                         "manifests/chunks recorded elsewhere")
+    p.add_argument("--store-timeout", type=float, default=None,
+                   metavar="SECONDS",
+                   help="connect/read deadline per http(s) store fetch "
+                        "(default: $MAGNETON_STORE_TIMEOUT or 30); an "
+                        "unreachable mirror fails typed instead of hanging")
     p.add_argument("--backend", default="analytic",
                    choices=("analytic", "replay", "hlo"))
     p.add_argument("--samples", type=int, default=2,
@@ -240,7 +248,8 @@ def _parse_bytes(text: str) -> int:
 
 
 def cmd_artifacts(args) -> int:
-    store = _open_store(args.store)
+    store = _open_store(args.store,
+                        timeout=getattr(args, "store_timeout", None))
     action = getattr(args, "action", None)
     if action == "prune":
         try:
@@ -323,8 +332,11 @@ def cmd_baseline(args) -> int:
 
     session = Session(backend=backend_from_name(args.backend),
                       num_input_samples=args.samples)
+    artifact_store = (ArtifactStore.from_uri(
+        args.store, store_timeout=getattr(args, "store_timeout", None))
+        if args.store is not None else None)
     store = BaselineStore(
-        args.dir, session=session, artifact_store=args.store,
+        args.dir, session=session, artifact_store=artifact_store,
         sketch_only=not getattr(args, "full_values", False))
     cases = _baseline_cases(args.case)
     if args.action == "record":
@@ -412,6 +424,8 @@ def build_parser() -> argparse.ArgumentParser:
     pa = sub.add_parser("artifacts",
                         help="list, GC, transfer or migrate the store")
     pa.add_argument("--store", default=None)
+    pa.add_argument("--store-timeout", type=float, default=None,
+                    metavar="SECONDS")
     pa.set_defaults(fn=cmd_artifacts, action=None)
     pasub = pa.add_subparsers(dest="action")
 
@@ -468,6 +482,10 @@ def build_parser() -> argparse.ArgumentParser:
                         help="golden artifact store override: a path, a "
                              "file:// NFS mirror, or a readonly http(s):// "
                              "mirror for offline checks")
+        px.add_argument("--store-timeout", type=float, default=None,
+                        metavar="SECONDS",
+                        help="connect/read deadline per http(s) store fetch "
+                             "(default: $MAGNETON_STORE_TIMEOUT or 30)")
         px.add_argument("--backend", default="analytic",
                         choices=("analytic", "replay", "hlo"))
         px.add_argument("--samples", type=int, default=2,

@@ -51,8 +51,8 @@ import numpy as np
 from repro.core.energy import EnergyProfile, OpEnergy
 from repro.core.graph import OpGraph, OpNode, TensorEdge
 from repro.core.hlo_costs import PerOpCosts
-from repro.core.store import (LocalStore, RemoteStore, Store, open_store,
-                              chunk_digest, split_chunks)
+from repro.core.store import (LocalStore, RemoteStore, Store, StoreError,
+                              open_store, chunk_digest, split_chunks)
 from repro.core.tensor_match import TensorSignature
 
 # v3 split the monolithic per-key .npz into a JSON manifest + sha256-chunked
@@ -332,6 +332,11 @@ class CandidateArtifact:
     # runtime-only: chunk transport for lazy raw-value reads (set on load)
     _chunk_source: Store | None = dataclasses.field(
         default=None, repr=False, compare=False)
+    # runtime-only: store failures downgraded to fetch misses (see
+    # _fetch_from_chunks); Session.compare reads these to declare degraded
+    # provenance instead of silently re-executing around a broken store
+    fetch_errors: list[str] = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
 
     @property
     def num_samples(self) -> int:
@@ -370,6 +375,12 @@ class CandidateArtifact:
                            for d in ref.chunks)
         except KeyError:
             return None          # chunk pruned / partial mirror: treat as miss
+        except (StoreError, OSError) as e:
+            # store unreachable/corrupt beyond repair: record why and treat
+            # as a miss — live artifacts re-execute, loaded artifacts raise
+            # the typed ArtifactValueError (never silent wrong values)
+            self.fetch_errors.append(f"s{k}/t{tid}: {type(e).__name__}: {e}")
+            return None
         return np.frombuffer(buf, dtype=np.dtype(ref.dtype)).reshape(ref.shape)
 
     def fetcher(self) -> Callable[[int, Sequence[int]], dict[int, np.ndarray]]:
@@ -693,7 +704,8 @@ class ArtifactStore:
     def __init__(self, root: str | Path | None = None, *,
                  backend: Store | None = None,
                  remote: "Store | str | None" = None,
-                 persist_raw_values: bool = True):
+                 persist_raw_values: bool = True,
+                 store_timeout: float | None = None):
         if backend is not None:
             self.backend = backend
             self.root = Path(getattr(backend, "root", ".")) \
@@ -702,22 +714,26 @@ class ArtifactStore:
             if root is None:
                 root = os.environ.get(_STORE_ENV, _DEFAULT_STORE)
             self.root = Path(root).expanduser()
-            upstream = open_store(remote) if remote is not None else None
+            upstream = (open_store(remote, timeout=store_timeout)
+                        if remote is not None else None)
             self.backend = LocalStore(self.root, upstream=upstream)
         self.persist_raw_values = persist_raw_values
 
     @classmethod
     def from_uri(cls, uri: "str | Path | ArtifactStore | None",
+                 *, store_timeout: float | None = None,
                  **kwargs) -> "ArtifactStore":
         """``--store`` resolution: plain paths open a LocalStore-backed
         store; ``file://``/``http(s)://`` URIs open a RemoteStore-backed
-        one (http mirrors are readonly)."""
+        one (http mirrors are readonly).  ``store_timeout`` bounds http
+        reads (seconds; the ``--store-timeout`` CLI flag)."""
         if isinstance(uri, ArtifactStore):
             return uri
         if uri is None:
-            return cls(**kwargs)
+            return cls(store_timeout=store_timeout, **kwargs)
         if "://" in str(uri):
-            return cls(backend=RemoteStore(str(uri)), **kwargs)
+            return cls(backend=RemoteStore(str(uri), timeout=store_timeout),
+                       **kwargs)
         return cls(uri, **kwargs)
 
     @property
@@ -810,7 +826,7 @@ class ArtifactStore:
             for d in set(self._chunk_refs(manifest)):
                 try:
                     total += self.backend.chunk_bytes(d)
-                except (KeyError, OSError):
+                except (KeyError, OSError, StoreError):
                     pass
             return total
         legacy = self._legacy_path(key)
@@ -824,12 +840,12 @@ class ArtifactStore:
         for key in self.backend.manifest_keys():
             try:
                 total += self.backend.manifest_bytes(key)
-            except (KeyError, OSError):
+            except (KeyError, OSError, StoreError):
                 continue
         for d in self.backend.chunk_keys():
             try:
                 total += self.backend.chunk_bytes(d)
-            except (KeyError, OSError):
+            except (KeyError, OSError, StoreError):
                 continue
         for key in self.legacy_keys():
             legacy = self._legacy_path(key)
@@ -846,7 +862,7 @@ class ArtifactStore:
         for key in self.backend.manifest_keys():
             try:
                 manifest = self.backend.read_manifest(key)
-            except (KeyError, OSError):
+            except (KeyError, OSError, StoreError):
                 continue
             for d in self._chunk_refs(manifest):
                 refs[d] = refs.get(d, 0) + 1
@@ -890,7 +906,7 @@ class ArtifactStore:
                 else:
                     st = self._legacy_path(key).stat()
                     mtime, size, refs = st.st_mtime_ns, st.st_size, []
-            except (OSError, KeyError, AttributeError):
+            except (OSError, KeyError, AttributeError, StoreError):
                 continue
             # ns resolution: same-second writes (coarse-mtime filesystems,
             # rapid captures) must not fall through to hash-ordered ties
@@ -905,7 +921,7 @@ class ArtifactStore:
         for d in refcount:
             try:
                 chunk_size[d] = self.backend.chunk_bytes(d)
-            except (KeyError, OSError):
+            except (KeyError, OSError, StoreError):
                 chunk_size[d] = 0
 
         protected = set(keep)
@@ -1023,7 +1039,7 @@ class ArtifactStore:
             try:
                 manifest = self.backend.read_manifest(key)
                 msize = self.backend.manifest_bytes(key)
-            except (KeyError, OSError):
+            except (KeyError, OSError, StoreError):
                 continue
             n_manifests += 1
             manifest_bytes += msize
@@ -1046,7 +1062,7 @@ class ArtifactStore:
         for d in self.backend.chunk_keys():
             try:
                 chunk_bytes += self.backend.chunk_bytes(d)
-            except (KeyError, OSError):
+            except (KeyError, OSError, StoreError):
                 continue
             chunk_count += 1
         legacy = self.legacy_keys()

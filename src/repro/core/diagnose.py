@@ -38,8 +38,15 @@ class Diagnosis:
     ops_b: list[str]
     # which energy backend's numbers this diagnosis rests on (the session
     # backend label, e.g. 'tpu_v5e' / 'hlo+tpu_v5e' / 'replay'); None on
-    # reports serialized before the field existed
+    # reports serialized before the field existed.  A ' [degraded]' suffix
+    # means some rung of the session's degradation ladder fired — the
+    # report's meta['degraded'] lists exactly what was downgraded.
     priced_by: str | None = None
+
+    @property
+    def degraded(self) -> bool:
+        from repro.core.session import DEGRADED_MARK
+        return bool(self.priced_by) and DEGRADED_MARK in self.priced_by
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "Diagnosis":

@@ -74,10 +74,18 @@ class Report:
     def waste_findings(self) -> list[Finding]:
         return [f for f in self.findings if f.classification == "energy_waste"]
 
+    @property
+    def is_degraded(self) -> bool:
+        """True when any rung of the degradation ladder fired — the result
+        is honest but reduced-fidelity (see ``meta['degraded']``)."""
+        return bool(self.meta.get("degraded"))
+
     def render(self, *, max_findings: int = 10) -> str:
         lines = []
         lines.append(f"=== Magneton differential energy report: "
                      f"A={self.name_a} vs B={self.name_b} ===")
+        for note in self.meta.get("degraded", ()):
+            lines.append(f"!!! DEGRADED: {note}")
         lines.append(f"total energy  A: {self.total_energy_a_j:.4e} J   "
                      f"B: {self.total_energy_b_j:.4e} J   "
                      f"(Δ {self._total_delta():+.1f}% A vs B)")

@@ -41,15 +41,20 @@ import jax
 import numpy as np
 
 from repro.core import interp
-from repro.core.artifact import (ArtifactStore, CandidateArtifact,
-                                 artifact_key)
+from repro.core.artifact import (ArtifactStore, ArtifactValueError,
+                                 CandidateArtifact, artifact_key)
 from repro.core.diagnose import diagnose_region
 from repro.core.energy import (AnalyticalBackend, EnergyBackend,
                                EnergyProfile, subgraph_energy, subgraph_time)
 from repro.core.graph import OpGraph, trace
 from repro.core.report import Finding, Report
+from repro.core.store import StoreError
 from repro.core.subgraph_match import MatchedRegion, match_subgraphs
 from repro.core.tensor_match import TensorMatcher
+
+# The marker appended to ``priced_by`` / ``energy_model`` labels when any
+# rung of the degradation ladder fired — a report always declares fidelity.
+DEGRADED_MARK = "[degraded]"
 
 DEFAULT_SEED_BASE = 17     # legacy perturbation seeds: 17, 18, ...
 
@@ -281,6 +286,15 @@ class Session:
     perf_tolerance: float = 0.01
     match_rtol: float = 1e-3
     num_input_samples: int = 2
+    # Graceful-degradation ladder (docs/robustness.md).  When True, a
+    # capture whose backend fails to price falls back to
+    # ``fallback_backend`` (default: an AnalyticalBackend on the same
+    # hardware spec), and a compare whose raw-value store is unreachable
+    # retries sketch-only; every downgrade is declared in the result's
+    # ``degraded`` provenance.  When False, those failures raise instead —
+    # BaselineStore forces False so goldens are never silently degraded.
+    allow_degraded: bool = True
+    fallback_backend: EnergyBackend | None = None
 
     def __post_init__(self):
         if isinstance(self.store, (str, Path)):
@@ -331,16 +345,29 @@ class Session:
             _raise_uncapturable(fn, args, name, e)
         key = artifact_key(graph, args, sample_seeds, self.backend.id)
 
-        if use_cache and self.store is not None and self.store.has(key):
-            art = self.store.load(key)
-            art.name = name            # names are labels, not identity
-            art.config = dict(config) if config is not None else art.config
-            art.attach(graph, args)
-            art.meta["cache_hit"] = True
-            if gate_against is not None:
-                _check_same_task(gate_against.outputs, art.outputs,
-                                 output_rtol)
-            return art
+        store_warnings: list[str] = []
+        if use_cache and self.store is not None:
+            try:
+                hit = self.store.has(key)
+            except (StoreError, OSError) as e:
+                # unreachable store: fall through to a fresh live capture
+                # (full fidelity — only the cache shortcut is lost)
+                if not self.allow_degraded:
+                    raise
+                hit = False
+                store_warnings.append(
+                    f"cache probe failed ({type(e).__name__}: {e}); "
+                    "re-capturing live")
+            if hit:
+                art = self.store.load(key)
+                art.name = name        # names are labels, not identity
+                art.config = dict(config) if config is not None else art.config
+                art.attach(graph, args)
+                art.meta["cache_hit"] = True
+                if gate_against is not None:
+                    _check_same_task(gate_against.outputs, art.outputs,
+                                     output_rtol)
+                return art
 
         samples = make_samples(args, sample_seeds)
         outs0, stats0 = interp.capture_tensor_stats(graph, *samples[0])
@@ -351,21 +378,63 @@ class Session:
             sample_stats.append(interp.capture_tensor_stats(graph, *s)[1])
         outputs = [np.asarray(o) for o in jax.tree_util.tree_leaves(outs0)]
 
-        profile = self.backend.profile(graph, args)
+        backend = self.backend
+        degraded: list[str] = []
+        try:
+            profile = backend.profile(graph, args)
+        except Exception as e:
+            fallback = self._fallback_for(backend)
+            if not self.allow_degraded or fallback is None:
+                raise
+            profile = fallback.profile(graph, args)
+            degraded.append(
+                f"energy backend {backend.label!r} failed "
+                f"({type(e).__name__}: {e}); re-priced with fallback "
+                f"{fallback.label!r}")
+            backend = fallback
+            # the price changed identity: re-address under the backend that
+            # actually produced it, so the degraded capture never aliases a
+            # healthy one in the store
+            key = artifact_key(graph, args, sample_seeds, backend.id)
 
         art = CandidateArtifact(
             name=name, key=key, graph=graph, sample_stats=sample_stats,
             outputs=outputs, profile=profile,
-            backend_id=self.backend.id, backend_label=self.backend.label,
+            backend_id=backend.id, backend_label=backend.label,
             sample_seeds=sample_seeds,
             config=dict(config) if config is not None else None,
             meta={"nodes": len(graph.nodes),
                   "num_samples": len(samples),
                   **(dict(extra_meta) if extra_meta else {})})
+        if degraded:
+            art.meta["degraded"] = degraded
+        if store_warnings:
+            art.meta["store_warnings"] = store_warnings
         art._samples = samples
         if self.store is not None and not self.store.readonly:
-            self.store.save(art)
+            try:
+                self.store.save(art)
+            except (StoreError, OSError) as e:
+                if not self.allow_degraded:
+                    raise
+                # the result itself is full-fidelity, but it is no longer
+                # replayable offline — a downgrade worth declaring
+                art.meta.setdefault("degraded", []).append(
+                    f"artifact not persisted ({type(e).__name__}: {e}); "
+                    "offline replay unavailable for this capture")
         return art
+
+    def _fallback_for(self, backend: EnergyBackend) -> EnergyBackend | None:
+        """The next rung down the pricing ladder, or None at the bottom."""
+        if self.fallback_backend is not None:
+            if self.fallback_backend.id != backend.id:
+                return self.fallback_backend
+            return None
+        if isinstance(backend, AnalyticalBackend):
+            return None                      # already the bottom rung
+        spec = getattr(backend, "spec", None)
+        return (AnalyticalBackend(spec=spec) if spec is not None
+                else AnalyticalBackend())
 
     def load(self, key: str) -> CandidateArtifact:
         if self.store is None:
@@ -374,7 +443,8 @@ class Session:
 
     # -- compare ------------------------------------------------------------
     def compare(self, art_a: CandidateArtifact, art_b: CandidateArtifact, *,
-                output_rtol: float = 1e-2, persist: bool = True) -> Report:
+                output_rtol: float = 1e-2, persist: bool = True,
+                allow_degraded: bool | None = None) -> Report:
         """Match + classify + diagnose two artifacts; no re-capture.
 
         Works on any mix of live and loaded artifacts.  Phase-2 tensor
@@ -383,7 +453,16 @@ class Session:
         comparison once run live can be re-run offline from disk
         bit-identically.  ``rank()`` passes ``persist=False`` and saves
         each artifact once at exit instead of once per pairwise compare.
+
+        ``allow_degraded`` (default: the session's setting) controls the
+        degradation ladder: when raw phase-2 values are unreachable the
+        match is retried sketch-only — pairs the persisted digests/spectra
+        cannot decide are conservatively dropped — and the report's
+        ``degraded`` provenance declares exactly what was downgraded.  With
+        it off, the underlying typed error propagates instead.
         """
+        if allow_degraded is None:
+            allow_degraded = self.allow_degraded
         if art_a.backend_id != art_b.backend_id:
             raise ValueError(
                 f"artifacts were priced by different energy backends "
@@ -397,33 +476,75 @@ class Session:
 
         _check_same_task(art_a.outputs, art_b.outputs, output_rtol)
 
+        # capture-time downgrades carry into every report built from the
+        # artifact — fidelity provenance is transitive
+        degraded: list[str] = []
+        for side, art in (("A", art_a), ("B", art_b)):
+            degraded.extend(f"{side}: {note}"
+                            for note in art.meta.get("degraded", ()))
+
         matcher = TensorMatcher(rtol=self.match_rtol)
-        eq_pairs = matcher.match_streamed(
-            art_a.sample_stats, art_b.sample_stats,
-            art_a.fetcher(), art_b.fetcher(),
-            provider_a=art_a.spectra_provider(),
-            provider_b=art_b.spectra_provider())
+        try:
+            eq_pairs = matcher.match_streamed(
+                art_a.sample_stats, art_b.sample_stats,
+                art_a.fetcher(), art_b.fetcher(),
+                provider_a=art_a.spectra_provider(),
+                provider_b=art_b.spectra_provider())
+        except (ArtifactValueError, StoreError, OSError) as e:
+            if not allow_degraded:
+                raise
+            # raw chunks unreachable: sketch-only retry — persisted digests
+            # + spectra decide what they can, the rest is dropped (the
+            # result under-matches rather than guesses)
+            matcher = TensorMatcher(rtol=self.match_rtol)
+            eq_pairs = matcher.match_streamed(
+                art_a.sample_stats, art_b.sample_stats,
+                art_a.fetcher(), art_b.fetcher(),
+                provider_a=art_a.spectra_provider(),
+                provider_b=art_b.spectra_provider(),
+                dry_only=True)
+            dropped = (matcher.last_stats.undecided_dropped
+                       if matcher.last_stats else 0)
+            degraded.append(
+                f"sketch-only compare: raw tensor values unreachable "
+                f"({type(e).__name__}: {e}); {dropped} undecidable pair(s) "
+                "treated as unmatched")
         regions = match_subgraphs(art_a.graph, art_b.graph, eq_pairs)
 
+        priced_by = art_a.backend_label + (f" {DEGRADED_MARK}" if degraded
+                                           else "")
         findings = [self._classify(i, r, art_a.graph, art_b.graph,
                                    art_a.profile, art_b.profile,
                                    art_a.config, art_b.config,
-                                   priced_by=art_a.backend_label)
+                                   priced_by=priced_by)
                     for i, r in enumerate(regions)]
-        report = Report(
-            name_a=art_a.name, name_b=art_b.name, findings=findings,
-            total_energy_a_j=art_a.profile.total_energy_j,
-            total_energy_b_j=art_b.profile.total_energy_j,
-            meta={"regions": len(regions),
-                  "eq_tensor_pairs": len(eq_pairs),
-                  "nodes_a": len(art_a.graph.nodes),
-                  "nodes_b": len(art_b.graph.nodes),
-                  "energy_model": art_a.backend_label})
+        meta = {"regions": len(regions),
+                "eq_tensor_pairs": len(eq_pairs),
+                "nodes_a": len(art_a.graph.nodes),
+                "nodes_b": len(art_b.graph.nodes),
+                "energy_model": priced_by}
+        if degraded:
+            meta["degraded"] = degraded
+        store_warnings = list(art_a.fetch_errors) + list(art_b.fetch_errors)
         if persist and self.store is not None and not self.store.readonly:
             for art in (art_a, art_b):
                 if art._dirty:
-                    self.store.save(art)
-        return report
+                    try:
+                        self.store.save(art)
+                    except (StoreError, OSError) as e:
+                        if not allow_degraded:
+                            raise
+                        store_warnings.append(
+                            f"persist of {art.name!r} failed "
+                            f"({type(e).__name__}: {e}); this comparison "
+                            "will re-fetch values when replayed")
+        if store_warnings:
+            meta["store_warnings"] = store_warnings
+        return Report(
+            name_a=art_a.name, name_b=art_b.name, findings=findings,
+            total_energy_a_j=art_a.profile.total_energy_j,
+            total_energy_b_j=art_b.profile.total_energy_j,
+            meta=meta)
 
     # -- rank ---------------------------------------------------------------
     def rank(self, artifacts: Sequence[CandidateArtifact], *,

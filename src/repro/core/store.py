@@ -28,12 +28,16 @@ migration) lives in :class:`~repro.core.artifact.ArtifactStore`.
 
 from __future__ import annotations
 
+import dataclasses
+import errno
 import hashlib
 import json
 import os
+import random
 import tempfile
+import time
 from pathlib import Path
-from typing import Protocol, runtime_checkable
+from typing import Callable, Protocol, runtime_checkable
 from urllib.parse import urlparse
 from urllib.request import url2pathname
 
@@ -44,9 +48,138 @@ CHUNK_BYTES = 4 << 20
 
 _INDEX_NAME = "index.json"       # remote listing for http mirrors
 
+# Fallback read timeout (seconds) for http(s) mirrors; --store-timeout and
+# the RemoteStore(timeout=...) kwarg override it.
+_TIMEOUT_ENV = "MAGNETON_STORE_TIMEOUT"
+DEFAULT_STORE_TIMEOUT_S = 30.0
 
-class StoreReadOnlyError(RuntimeError):
+
+# ---------------------------------------------------------------------------
+# error taxonomy
+# ---------------------------------------------------------------------------
+
+class StoreError(RuntimeError):
+    """Base class for typed store failures (transport, policy, integrity)."""
+
+
+class StoreReadOnlyError(StoreError):
     """A write was attempted on a readonly store (e.g. an http mirror)."""
+
+
+class TransientStoreError(StoreError):
+    """A failure worth retrying: flaky transport, busy mount, 5xx mirror."""
+
+
+class StoreTimeoutError(TransientStoreError):
+    """A read exceeded its deadline (still transient: retry may succeed)."""
+
+
+class StoreCorruptionError(StoreError):
+    """Stored bytes failed integrity verification and no good copy remains."""
+
+
+class ChunkCorruptionError(StoreCorruptionError):
+    """A chunk's bytes no longer hash to its content address.
+
+    Raised only after the local copy has been quarantined and (when an
+    ``upstream`` exists) a verified re-fetch has been attempted — callers
+    never observe silently-wrong chunk bytes.
+    """
+
+    def __init__(self, digest: str, detail: str):
+        super().__init__(f"chunk {digest[:12]}… corrupt: {detail}")
+        self.digest = digest
+
+
+# errno values that indicate a retryable filesystem/transport hiccup rather
+# than a permanent condition (missing file, permission, bad argument).
+_TRANSIENT_ERRNOS = frozenset(
+    getattr(errno, name) for name in
+    ("EIO", "EAGAIN", "EBUSY", "ETIMEDOUT", "ECONNRESET", "ECONNABORTED",
+     "ECONNREFUSED", "ENETUNREACH", "ENETRESET", "EHOSTUNREACH", "ESTALE")
+    if hasattr(errno, name))
+
+_TRANSIENT_HTTP_CODES = frozenset({408, 425, 429, 500, 502, 503, 504})
+
+
+def is_transient_error(exc: BaseException) -> bool:
+    """Classify an exception as transient (retry) vs permanent (surface).
+
+    Transient: :class:`TransientStoreError` (incl. timeouts), socket/OS
+    timeouts, connection resets, NFS ``ESTALE``, http 408/429/5xx, and
+    non-HTTP ``URLError`` (DNS blips, refused connections).  Permanent:
+    missing keys, readonly stores, corruption, and everything else.
+    """
+    from urllib.error import HTTPError, URLError
+    if isinstance(exc, (StoreCorruptionError, StoreReadOnlyError)):
+        return False
+    if isinstance(exc, (TransientStoreError, TimeoutError)):
+        return True
+    if isinstance(exc, HTTPError):
+        return exc.code in _TRANSIENT_HTTP_CODES
+    if isinstance(exc, URLError):
+        return True
+    if isinstance(exc, ConnectionError):
+        return True
+    if isinstance(exc, OSError):
+        return exc.errno in _TRANSIENT_ERRNOS
+    return False
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Exponential backoff with jitter and a per-policy retry budget.
+
+    ``call`` runs a thunk, retrying on exceptions ``classify`` deems
+    transient.  Delays follow ``base_delay_s * 2**attempt`` capped at
+    ``max_delay_s``, each multiplied by a seeded jitter factor in
+    ``[1-jitter, 1+jitter]`` so fleets don't retry in lockstep yet test
+    schedules stay deterministic.  ``budget`` bounds the *total* number of
+    retries over the policy's lifetime — a store stuck behind a dead mirror
+    degrades to fast typed failures instead of retrying forever on every
+    read.
+    """
+
+    max_attempts: int = 4
+    base_delay_s: float = 0.05
+    max_delay_s: float = 2.0
+    jitter: float = 0.5
+    budget: int = 64
+    seed: int = 0
+    sleep: Callable[[float], None] = time.sleep
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+        self.retries_spent = 0
+
+    def delay_for(self, attempt: int) -> float:
+        base = min(self.base_delay_s * (2 ** attempt), self.max_delay_s)
+        if self.jitter <= 0:
+            return base
+        return base * self._rng.uniform(1 - self.jitter, 1 + self.jitter)
+
+    def call(self, fn: Callable[[], "object"], *, what: str = "store read",
+             classify: Callable[[BaseException], bool] = is_transient_error,
+             counters: dict[str, int] | None = None):
+        last: BaseException | None = None
+        for attempt in range(self.max_attempts):
+            try:
+                return fn()
+            except Exception as e:            # SimulatedCrash (BaseException) passes through
+                if not classify(e):
+                    raise
+                last = e
+                if (attempt + 1 >= self.max_attempts
+                        or self.retries_spent >= self.budget):
+                    break
+                self.retries_spent += 1
+                if counters is not None:
+                    counters["retries"] = counters.get("retries", 0) + 1
+                self.sleep(self.delay_for(attempt))
+        if isinstance(last, StoreError):
+            raise last
+        raise TransientStoreError(
+            f"{what} failed after {self.max_attempts} attempt(s): {last}") from last
 
 
 def chunk_digest(data: bytes) -> str:
@@ -65,7 +198,8 @@ def _fresh_counters() -> dict[str, int]:
             "chunk_reads": 0, "chunk_bytes_read": 0,
             "chunk_writes": 0, "chunk_bytes_written": 0,
             "chunk_dedup_hits": 0,
-            "upstream_manifest_reads": 0, "upstream_chunk_reads": 0}
+            "upstream_manifest_reads": 0, "upstream_chunk_reads": 0,
+            "retries": 0, "chunks_quarantined": 0, "verify_failures": 0}
 
 
 @runtime_checkable
@@ -134,6 +268,20 @@ class _FsLayout:
             return []
         return sorted(p.name for p in d.glob("??/*") if p.is_file())
 
+    def quarantine_dir(self) -> Path:
+        return self.root / "quarantine"
+
+    def quarantine(self, path: Path) -> Path:
+        """Move a failed-verification file out of the serving tree.
+
+        The original name is kept (content addresses are unique), so a
+        later forensic diff against a good copy is a plain file compare.
+        """
+        dest = self.quarantine_dir() / path.name
+        dest.parent.mkdir(parents=True, exist_ok=True)
+        os.replace(path, dest)
+        return dest
+
 
 class LocalStore:
     """On-disk store with atomic writes and an optional read-through upstream.
@@ -145,29 +293,55 @@ class LocalStore:
 
     readonly = False
 
-    def __init__(self, root: str | Path, upstream: "Store | None" = None):
+    def __init__(self, root: str | Path, upstream: "Store | None" = None,
+                 retry: "RetryPolicy | None" = None):
         self.root = Path(root).expanduser()
         self._fs = _FsLayout(self.root)
         self.upstream = upstream
+        self.retry = retry if retry is not None else RetryPolicy()
         self.counters = _fresh_counters()
+
+    def _pull(self, fn, what: str):
+        """Upstream fetch with transient-error retry (backoff + jitter)."""
+        return self.retry.call(fn, what=what, counters=self.counters)
+
+    def _quarantine(self, path: Path) -> Path:
+        self.counters["chunks_quarantined"] += 1
+        self.counters["verify_failures"] += 1
+        return self._fs.quarantine(path)
 
     # -- manifests ----------------------------------------------------------
     def has_manifest(self, key: str) -> bool:
         if self._fs.manifest_path(key).exists():
             return True
-        return self.upstream is not None and self.upstream.has_manifest(key)
+        return self.upstream is not None and self._pull(
+            lambda: self.upstream.has_manifest(key), f"has_manifest({key[:12]}…)")
 
     def read_manifest(self, key: str) -> dict:
         path = self._fs.manifest_path(key)
         self.counters["manifest_reads"] += 1
-        if not path.exists():
-            if self.upstream is None or not self.upstream.has_manifest(key):
-                raise KeyError(key)
-            payload = self.upstream.read_manifest(key)
-            self.counters["upstream_manifest_reads"] += 1
-            _atomic_write(path, json.dumps(payload).encode())
-            return payload
-        return json.loads(path.read_text())
+        quarantined = None
+        if path.exists():
+            try:
+                return json.loads(path.read_text())
+            except json.JSONDecodeError:
+                # torn/garbled at rest: move it aside, fall through to the
+                # upstream (a later retry of the whole operation sees a
+                # clean miss and re-captures/re-pulls — convergent).
+                quarantined = self._quarantine(path)
+        if self.upstream is None or not self._pull(
+                lambda: self.upstream.has_manifest(key),
+                f"has_manifest({key[:12]}…)"):
+            if quarantined is not None:
+                raise StoreCorruptionError(
+                    f"manifest {key} failed to parse and no upstream holds a "
+                    f"replacement; bad copy quarantined at {quarantined}")
+            raise KeyError(key)
+        payload = self._pull(lambda: self.upstream.read_manifest(key),
+                             f"manifest {key[:12]}…")
+        self.counters["upstream_manifest_reads"] += 1
+        _atomic_write(path, json.dumps(payload).encode())
+        return payload
 
     def write_manifest(self, key: str, payload: dict) -> None:
         self.counters["manifest_writes"] += 1
@@ -179,7 +353,8 @@ class LocalStore:
     def manifest_keys(self) -> list[str]:
         keys = set(self._fs.manifest_keys())
         if self.upstream is not None:
-            keys.update(self.upstream.manifest_keys())
+            keys.update(self._pull(lambda: self.upstream.manifest_keys(),
+                                   "manifest listing"))
         return sorted(keys)
 
     def manifest_bytes(self, key: str) -> int:
@@ -192,18 +367,50 @@ class LocalStore:
     def has_chunk(self, digest: str) -> bool:
         if self._fs.chunk_path(digest).exists():
             return True
-        return self.upstream is not None and self.upstream.has_chunk(digest)
+        return self.upstream is not None and self._pull(
+            lambda: self.upstream.has_chunk(digest), f"has_chunk({digest[:12]}…)")
+
+    def _verified_upstream_chunk(self, digest: str) -> bytes:
+        """Fetch a chunk from upstream and verify it hashes to its address.
+
+        Transport errors are retried by policy; a digest mismatch gets one
+        fresh fetch (the bad read may itself have been a transport artifact)
+        before the typed corruption error escapes.
+        """
+        for _ in range(2):
+            data = self._pull(lambda: self.upstream.read_chunk(digest),
+                              f"chunk {digest[:12]}…")
+            if chunk_digest(data) == digest:
+                return data
+            self.counters["verify_failures"] += 1
+        raise ChunkCorruptionError(
+            digest, f"upstream {getattr(self.upstream, 'uri', self.upstream)} "
+                    "served bytes that failed digest verification twice")
 
     def read_chunk(self, digest: str) -> bytes:
         path = self._fs.chunk_path(digest)
-        if not path.exists():
-            if self.upstream is None or not self.upstream.has_chunk(digest):
+        data = None
+        corrupt_local = False
+        if path.exists():
+            data = path.read_bytes()
+            if chunk_digest(data) != digest:
+                # at-rest corruption (bit rot, torn write on a non-atomic
+                # filesystem): quarantine, then re-fetch a good copy.
+                self._quarantine(path)
+                data, corrupt_local = None, True
+        if data is None:
+            if self.upstream is None or not self._pull(
+                    lambda: self.upstream.has_chunk(digest),
+                    f"has_chunk({digest[:12]}…)"):
+                if corrupt_local:
+                    raise ChunkCorruptionError(
+                        digest, "local copy quarantined under "
+                        f"{self._fs.quarantine_dir()} and no upstream holds "
+                        "a replacement")
                 raise KeyError(digest)
-            data = self.upstream.read_chunk(digest)
+            data = self._verified_upstream_chunk(digest)
             self.counters["upstream_chunk_reads"] += 1
             _atomic_write(path, data)
-        else:
-            data = path.read_bytes()
         self.counters["chunk_reads"] += 1
         self.counters["chunk_bytes_read"] += len(data)
         return data
@@ -236,12 +443,18 @@ class RemoteStore:
       comes from the ``index.json`` that ``ArtifactStore.push`` writes.
     """
 
-    def __init__(self, uri: str):
+    def __init__(self, uri: str, timeout: float | None = None,
+                 retry: "RetryPolicy | None" = None):
         self.uri = str(uri)
         parsed = urlparse(self.uri)
         self._http = parsed.scheme in ("http", "https")
         self.readonly = self._http
         self.counters = _fresh_counters()
+        self.retry = retry if retry is not None else RetryPolicy()
+        if timeout is None:
+            timeout = float(os.environ.get(_TIMEOUT_ENV,
+                                           DEFAULT_STORE_TIMEOUT_S))
+        self.timeout = timeout
         self._bulk_depth = 0
         if self._http:
             self._base = self.uri.rstrip("/")
@@ -258,18 +471,36 @@ class RemoteStore:
             self._fs = _FsLayout(self.root)
 
     # -- http plumbing ------------------------------------------------------
-    def _get(self, rel: str) -> bytes | None:
+    def _get_once(self, rel: str) -> bytes | None:
+        import socket
         from urllib.error import HTTPError, URLError
         from urllib.request import urlopen
         try:
-            with urlopen(f"{self._base}/{rel}", timeout=30) as r:
+            with urlopen(f"{self._base}/{rel}", timeout=self.timeout) as r:
                 return r.read()
         except HTTPError as e:
             if e.code == 404:
                 return None
+            if e.code in _TRANSIENT_HTTP_CODES:
+                raise TransientStoreError(
+                    f"remote store {self.uri}: http {e.code} on {rel}") from e
             raise
+        except socket.timeout as e:
+            raise StoreTimeoutError(
+                f"remote store {self.uri}: {rel} timed out "
+                f"after {self.timeout:g}s") from e
         except URLError as e:
-            raise IOError(f"remote store {self.uri} unreachable: {e}") from e
+            if isinstance(e.reason, (socket.timeout, TimeoutError)):
+                raise StoreTimeoutError(
+                    f"remote store {self.uri}: {rel} timed out "
+                    f"after {self.timeout:g}s") from e
+            raise TransientStoreError(
+                f"remote store {self.uri} unreachable: {e}") from e
+
+    def _get(self, rel: str) -> bytes | None:
+        return self.retry.call(lambda: self._get_once(rel),
+                               what=f"{self.uri}/{rel}",
+                               counters=self.counters)
 
     def _deny_write(self) -> None:
         raise StoreReadOnlyError(
@@ -288,7 +519,14 @@ class RemoteStore:
             path = self._fs.manifest_path(key)
             if not path.exists():
                 raise KeyError(key)
-            return json.loads(path.read_text())
+            try:
+                return json.loads(path.read_text())
+            except json.JSONDecodeError as e:
+                self.counters["verify_failures"] += 1
+                dest = self._fs.quarantine(path)
+                raise StoreCorruptionError(
+                    f"manifest {key} on mirror {self.uri} failed to parse "
+                    f"({e}); quarantined at {dest}") from e
         data = self._get(f"manifests/{key}.json")
         if data is None:
             raise KeyError(key)
@@ -364,11 +602,27 @@ class RemoteStore:
             if not path.exists():
                 raise KeyError(digest)
             data = path.read_bytes()
+            if chunk_digest(data) != digest:
+                self.counters["verify_failures"] += 1
+                self.counters["chunks_quarantined"] += 1
+                dest = self._fs.quarantine(path)
+                raise ChunkCorruptionError(
+                    digest, f"mirror copy on {self.uri} failed digest "
+                            f"verification; quarantined at {dest}")
         else:
-            got = self._get(f"chunks/{digest[:2]}/{digest}")
-            if got is None:
-                raise KeyError(digest)
-            data = got
+            data = None
+            for _ in range(2):                # one fresh fetch on mismatch
+                got = self._get(f"chunks/{digest[:2]}/{digest}")
+                if got is None:
+                    raise KeyError(digest)
+                if chunk_digest(got) == digest:
+                    data = got
+                    break
+                self.counters["verify_failures"] += 1
+            if data is None:
+                raise ChunkCorruptionError(
+                    digest, f"http mirror {self.uri} served bytes that "
+                            "failed digest verification twice")
         self.counters["chunk_reads"] += 1
         self.counters["chunk_bytes_read"] += len(data)
         return data
@@ -403,10 +657,13 @@ class RemoteStore:
         return len(data)
 
 
-def open_store(uri: "str | Path | Store") -> "Store":
+def open_store(uri: "str | Path | Store", *, timeout: float | None = None,
+               retry: "RetryPolicy | None" = None) -> "Store":
     """Map a ``--store`` value onto a Store: an existing Store passes
     through; a URI (``file://``, ``http(s)://``) opens a RemoteStore; a
-    plain path opens a LocalStore rooted there."""
+    plain path opens a LocalStore rooted there.  ``timeout`` (http read
+    deadline, seconds) and ``retry`` apply only when a new RemoteStore /
+    LocalStore is constructed here."""
     if isinstance(uri, (LocalStore, RemoteStore)):
         return uri
     if not isinstance(uri, (str, Path)):
@@ -416,5 +673,5 @@ def open_store(uri: "str | Path | Store") -> "Store":
         raise TypeError(f"cannot open a store from {type(uri).__name__}")
     text = str(uri)
     if "://" in text:
-        return RemoteStore(text)
-    return LocalStore(text)
+        return RemoteStore(text, timeout=timeout, retry=retry)
+    return LocalStore(text, retry=retry)

@@ -482,6 +482,7 @@ class MatchStats:
     fetched_bytes: int = 0         # total values materialized in phase 2
     peak_value_bytes: int = 0      # peak resident values (one sample's worth)
     decided_dry: int = 0           # pair-verdicts served by persisted evidence
+    undecided_dropped: int = 0     # dry_only: pairs undecidable without values
     phase1_s: float = 0.0
     phase2_s: float = 0.0
 
@@ -537,6 +538,7 @@ class TensorMatcher:
         *,
         provider_a: "SpectraProvider | None" = None,
         provider_b: "SpectraProvider | None" = None,
+        dry_only: bool = False,
     ) -> list[tuple[int, int]]:
         """Two-phase match from streamed cheap signatures.
 
@@ -546,6 +548,12 @@ class TensorMatcher:
         ``provider_*`` supply persisted phase-2 evidence (value digests +
         memoized spectra): pairs whose verdict they decide never fetch a
         value — a replay of a recorded comparison is sketch-only.
+
+        ``dry_only=True`` is the degraded mode for unreachable value stores:
+        no fetch is ever issued, pairs the persisted evidence cannot decide
+        are conservatively *dropped* (counted in
+        ``last_stats.undecided_dropped``) instead of being fetched — the
+        result under-matches rather than guesses.
         """
         self._check_samples(stats_a, stats_b)
         n = len(stats_a)
@@ -636,6 +644,10 @@ class TensorMatcher:
             for ta, tb in surviving:
                 verdict = self._spectra_gate(la, ta, lb, tb, dry=True)
                 if verdict is None:
+                    if dry_only:
+                        decided[(ta, tb)] = False
+                        st.undecided_dropped += 1
+                        continue
                     need_a.add(ta)
                     need_b.add(tb)
                 else:

@@ -29,6 +29,9 @@ def main() -> None:
     p.add_argument("--batch-size", type=int, default=4)
     p.add_argument("--attn-impl", default="xla")
     p.add_argument("--energy-audit", action="store_true")
+    p.add_argument("--audit-timeout", type=float, default=None,
+                   help="wall-clock budget (s) for one energy audit before "
+                        "the watchdog abandons it (default: engine config)")
     args = p.parse_args()
 
     cfg = get_config(args.arch)
@@ -62,7 +65,18 @@ def main() -> None:
         print(f"  req {r.rid}: {r.generated}")
 
     if args.energy_audit:
-        print(engine.energy_report(prompt_len=args.prompt_len).render())
+        # error-bounded audit: a broken/hung profiler reports its failure
+        # and leaves the serving results above intact
+        report = engine.audit(prompt_len=args.prompt_len,
+                              timeout_s=args.audit_timeout)
+        if report is not None:
+            print(report.render())
+        else:
+            print("energy audit unavailable: "
+                  f"{engine.stats.get('audit_last_error', 'breaker open')} "
+                  f"(failures={engine.stats['audit_failures']}, "
+                  f"timeouts={engine.stats['audit_timeouts']}, "
+                  f"breaker_open={engine.stats['audit_breaker_open']})")
 
 
 if __name__ == "__main__":

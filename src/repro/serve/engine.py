@@ -6,11 +6,18 @@ decode batch full (continuous batching); finished sequences free their slot
 for the next queued request.  The engine exposes an optional Magneton energy
 audit per phase (``energy_report()``) — the paper's profiler as a deployment
 feature.
+
+The audit path sits behind an error boundary (:meth:`ServeEngine.audit`):
+a watchdog thread bounds how long an audit may run, every failure is
+absorbed into ``stats`` counters, and a circuit breaker disables further
+audits after ``audit_breaker_threshold`` consecutive failures — a broken
+profiler must never take the serving path down with it.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any
 
@@ -39,22 +46,34 @@ class EngineConfig:
     max_len: int = 256
     eos_id: int = -1                # -1: never stop early
     attn_impl: str = "xla"
+    # audit error boundary (docs/robustness.md): wall-clock budget for one
+    # energy audit, and how many consecutive failures open the breaker
+    audit_timeout_s: float = 120.0
+    audit_breaker_threshold: int = 3
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, mesh: Mesh | None = None,
-                 ecfg: EngineConfig = EngineConfig()):
+                 ecfg: EngineConfig | None = None):
         assert cfg.is_causal, "encoder-only models have no decode path"
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
-        self.ecfg = ecfg
+        # None default: a shared `ecfg=EngineConfig()` dataclass default
+        # would alias one mutable config across every engine construction
+        self.ecfg = ecfg if ecfg is not None else EngineConfig()
         self._prefill = jax.jit(make_prefill_step(
-            cfg, mesh, max_len=ecfg.max_len, attn_impl=ecfg.attn_impl))
+            cfg, mesh, max_len=self.ecfg.max_len,
+            attn_impl=self.ecfg.attn_impl))
         self._decode = jax.jit(make_decode_step(cfg, mesh,
-                                                attn_impl=ecfg.attn_impl))
+                                                attn_impl=self.ecfg.attn_impl))
         self.stats = {"prefill_calls": 0, "decode_calls": 0,
-                      "tokens_generated": 0, "prefill_s": 0.0, "decode_s": 0.0}
+                      "tokens_generated": 0, "prefill_s": 0.0, "decode_s": 0.0,
+                      # audit-health counters (the audit error boundary)
+                      "audit_calls": 0, "audit_ok": 0, "audit_failures": 0,
+                      "audit_timeouts": 0, "audit_skipped": 0,
+                      "audit_degraded": 0, "audit_consecutive_failures": 0,
+                      "audit_breaker_open": False}
 
     # -- batch serving --------------------------------------------------------
     def generate(self, requests: list[Request]) -> list[Request]:
@@ -154,3 +173,64 @@ class ServeEngine:
         art_waste = session.capture(wasteful, (tok,), name="lmhead-all")
         art_eff = session.capture(efficient, (tok,), name="lmhead-last")
         return session.compare(art_waste, art_eff)
+
+    def audit(self, *, prompt_len: int = 32, session=None,
+              timeout_s: float | None = None):
+        """Error-bounded :meth:`energy_report`: never raises, never hangs.
+
+        Runs the audit on a watchdog daemon thread with a wall-clock budget
+        (``timeout_s``, default ``ecfg.audit_timeout_s``).  Returns the
+        :class:`~repro.core.report.Report` on success, ``None`` on any
+        failure/timeout/open-breaker — serving always continues.  Health is
+        tracked in ``stats``: after ``ecfg.audit_breaker_threshold``
+        consecutive failures the circuit breaker opens and later calls are
+        counted as ``audit_skipped`` without running anything, until
+        :meth:`reset_audit_breaker`.
+        """
+        if self.stats["audit_breaker_open"]:
+            self.stats["audit_skipped"] += 1
+            return None
+        self.stats["audit_calls"] += 1
+        budget = timeout_s if timeout_s is not None \
+            else self.ecfg.audit_timeout_s
+        box: dict[str, Any] = {}
+
+        def run():
+            try:
+                box["report"] = self.energy_report(prompt_len=prompt_len,
+                                                   session=session)
+            except BaseException as e:        # incl. SimulatedCrash in tests
+                box["error"] = e
+
+        # daemon watchdog: a hung audit (dead store mount, wedged compile)
+        # is abandoned at the deadline and must not block shutdown either
+        t = threading.Thread(target=run, name="magneton-audit", daemon=True)
+        t.start()
+        t.join(budget)
+        if t.is_alive():
+            self.stats["audit_timeouts"] += 1
+            self._audit_failed(f"audit exceeded {budget:g}s watchdog budget")
+            return None
+        if "error" in box:
+            self._audit_failed(f"{type(box['error']).__name__}: "
+                               f"{box['error']}")
+            return None
+        report = box.get("report")
+        self.stats["audit_ok"] += 1
+        self.stats["audit_consecutive_failures"] = 0
+        if report is not None and report.is_degraded:
+            self.stats["audit_degraded"] += 1
+        return report
+
+    def _audit_failed(self, reason: str) -> None:
+        self.stats["audit_failures"] += 1
+        self.stats["audit_consecutive_failures"] += 1
+        self.stats["audit_last_error"] = reason
+        if (self.stats["audit_consecutive_failures"]
+                >= self.ecfg.audit_breaker_threshold):
+            self.stats["audit_breaker_open"] = True
+
+    def reset_audit_breaker(self) -> None:
+        """Re-arm auditing after the underlying fault has been fixed."""
+        self.stats["audit_breaker_open"] = False
+        self.stats["audit_consecutive_failures"] = 0

@@ -38,6 +38,7 @@ from repro.core.artifact import ArtifactStore, ArtifactValueError
 from repro.core.diagnose import DIAGNOSIS_KINDS
 from repro.core.report import Report
 from repro.core.session import Session
+from repro.core.store import StoreError
 from repro.zoo.cases import Case
 
 BASELINE_FORMAT_VERSION = 1
@@ -242,6 +243,11 @@ class BaselineStore:
         self.artifacts.persist_raw_values = not sketch_only
         self.session = session or Session()
         self.session.store = self.artifacts
+        # Baselines are the fidelity reference: a degraded capture or
+        # sketch-only-degraded compare must never be silently recorded as
+        # (or diffed against) golden truth.  Failures surface as typed
+        # errors / Drift records instead of riding the degradation ladder.
+        self.session.allow_degraded = False
 
     # -- paths / committed JSON --------------------------------------------
     def baseline_path(self, case_id: str) -> Path:
@@ -353,22 +359,32 @@ class BaselineStore:
         attempted instrumented execution would raise).
         """
         expected = self.load(case.id)
-        if offline:
-            art_a, art_b = self._offline_artifacts(case)
-        else:
-            art_a = self.session.capture(
-                case.inefficient, case.make_args(), name=f"{case.id}-ineff",
-                config=case.config_a,
-                sample_seeds=expected.sample_seeds,
-                extra_meta={"zoo_case": case.id, "zoo_side": "ineff"})
-            art_b = self.session.capture(
-                case.efficient, case.make_args(), name=f"{case.id}-eff",
-                config=case.config_b,
-                sample_seeds=expected.sample_seeds,
-                extra_meta={"zoo_case": case.id, "zoo_side": "eff"})
-            # a live check (re)populates the golden store, so a subsequent
-            # offline replay can run against exactly what was just checked
-            self._update_index(case.id, art_a.key, art_b.key)
+        try:
+            if offline:
+                art_a, art_b = self._offline_artifacts(case)
+            else:
+                art_a = self.session.capture(
+                    case.inefficient, case.make_args(),
+                    name=f"{case.id}-ineff", config=case.config_a,
+                    sample_seeds=expected.sample_seeds,
+                    extra_meta={"zoo_case": case.id, "zoo_side": "ineff"})
+                art_b = self.session.capture(
+                    case.efficient, case.make_args(), name=f"{case.id}-eff",
+                    config=case.config_b,
+                    sample_seeds=expected.sample_seeds,
+                    extra_meta={"zoo_case": case.id, "zoo_side": "eff"})
+                # a live check (re)populates the golden store, so a
+                # subsequent offline replay can run against exactly what was
+                # just checked
+                self._update_index(case.id, art_a.key, art_b.key)
+        except StoreError as e:
+            # a corrupt/unreachable golden store (the session is strict:
+            # allow_degraded=False, so it surfaces instead of degrading) is
+            # declared as drift — the check did NOT reproduce the baseline
+            # and CI must say why
+            return [Drift(case.id, "store",
+                          "golden store reachable and intact",
+                          f"{type(e).__name__}: {e}")]
         if art_a.backend_id != expected.backend_id:
             return [Drift(case.id, "backend_id", expected.backend_id,
                           art_a.backend_id)]
@@ -383,6 +399,13 @@ class BaselineStore:
             return [Drift(case.id, "offline_replay",
                           "all phase-2 fetches served from the golden store",
                           f"unmaterialized fetch: {e}")]
+        except StoreError as e:
+            # a corrupt/unreachable golden store is declared as drift, not
+            # silently degraded around: the check did NOT reproduce the
+            # baseline and CI must say why
+            return [Drift(case.id, "store",
+                          "golden store reachable and intact",
+                          f"{type(e).__name__}: {e}")]
         actual = Baseline.from_report(
             case, report, backend_id=art_a.backend_id,
             sample_seeds=art_a.sample_seeds, energy_rtol=expected.energy_rtol)

@@ -36,6 +36,7 @@ import pytest
 
 _RECORD_ENV = "MAGNETON_RECORD_BASELINES"
 _DIR_ENV = "MAGNETON_BASELINE_DIR"
+_STRICT_ENV = "MAGNETON_ENERGY_STRICT"
 _DEFAULT_DIR = "tests/baselines"
 _KERNEL_SUBDIR = "kernels"
 
@@ -53,6 +54,11 @@ def pytest_addoption(parser):
     group.addoption(
         "--energy-record", action="store_true", default=False,
         help="record missing/changed energy baselines instead of failing")
+    group.addoption(
+        "--energy-strict", action="store_true", default=False,
+        help="treat an unreachable/unreadable baseline store as a test "
+             "FAILURE; the default skips the gate with the store error as "
+             f"the reason (also {_STRICT_ENV}=1)")
     parser.addini("energy_baseline_dir", default=_DEFAULT_DIR,
                   help="root directory for recorded energy baselines")
 
@@ -73,9 +79,12 @@ def energy_gate(request, energy_baseline_dir) -> Callable:
     dir and the ``--energy-record`` flag."""
     record = bool(request.config.getoption("--energy-record")
                   or os.environ.get(_RECORD_ENV))
+    strict = bool(request.config.getoption("--energy-strict")
+                  or os.environ.get(_STRICT_ENV))
 
     def gate(fn, args, *, baseline: str, **kw):
         kw.setdefault("record", record)
+        kw.setdefault("strict", strict)
         kw.setdefault("baseline_dir", energy_baseline_dir)
         return assert_no_energy_regression(fn, args, baseline, **kw)
 
@@ -92,6 +101,16 @@ def _resolve_baseline(baseline: str | Path, baseline_dir: str | Path | None
     return root / _KERNEL_SUBDIR / f"{p}.npz"
 
 
+def _store_unavailable(what: str, exc: BaseException, strict: bool):
+    """Unreachable/unreadable baseline store: skip by default, fail under
+    ``--energy-strict``.  Never lets the gate pass silently."""
+    msg = (f"energy baseline store unavailable while {what}: "
+           f"{type(exc).__name__}: {exc}")
+    if strict:
+        pytest.fail(msg + " (--energy-strict)", pytrace=False)
+    pytest.skip(msg + "; pass --energy-strict to fail instead")
+
+
 def assert_no_energy_regression(fn: Callable, args: Sequence[Any],
                                 baseline: str | Path, *,
                                 name: str | None = None,
@@ -99,6 +118,7 @@ def assert_no_energy_regression(fn: Callable, args: Sequence[Any],
                                 energy_rtol: float = 0.05,
                                 output_rtol: float = 1e-2,
                                 record: bool | None = None,
+                                strict: bool | None = None,
                                 baseline_dir: str | Path | None = None):
     """Fail (via ``pytest.fail``) if ``fn`` regressed vs its baseline.
 
@@ -112,11 +132,15 @@ def assert_no_energy_regression(fn: Callable, args: Sequence[Any],
     when the baseline was just recorded or the capture is bit-identical).
     """
     from repro.core.artifact import CandidateArtifact
+    from repro.core.store import StoreError
+
     from repro.core.session import Session
 
     path = _resolve_baseline(baseline, baseline_dir)
     if record is None:
         record = bool(os.environ.get(_RECORD_ENV))
+    if strict is None:
+        strict = bool(os.environ.get(_STRICT_ENV))
     session = session or Session()
     name = name or getattr(fn, "__name__", "candidate")
 
@@ -126,7 +150,10 @@ def assert_no_energy_regression(fn: Callable, args: Sequence[Any],
         # intentional energy change is accepted by re-running with the flag
         art = session.capture(fn, args, name=name)
         art.materialize()               # offline-replayable golden artifact
-        art.save(path)
+        try:
+            art.save(path)
+        except (StoreError, OSError) as e:
+            _store_unavailable(f"recording baseline {path}", e, strict)
         return None
     if not path.exists():
         pytest.fail(
@@ -134,14 +161,26 @@ def assert_no_energy_regression(fn: Callable, args: Sequence[Any],
             f"{_RECORD_ENV}=1 (or --energy-record) and commit the file",
             pytrace=False)
 
-    base = CandidateArtifact.load(path)
+    try:
+        base = CandidateArtifact.load(path)
+    except (StoreError, OSError) as e:
+        # the file exists but can't be read (dead mount, permissions,
+        # directory-in-place-of-file) — an infrastructure problem, not an
+        # energy regression
+        _store_unavailable(f"loading baseline {path}", e, strict)
     if base.backend_id != session.backend.id:
         pytest.fail(
             f"baseline {path} was priced by backend {base.backend_id!r} but "
             f"the session uses {session.backend.id!r}; re-record the "
             "baseline or pass a matching session", pytrace=False)
-    art = session.capture(fn, args, name=name,
-                          sample_seeds=base.sample_seeds)
+    try:
+        art = session.capture(fn, args, name=name,
+                              sample_seeds=base.sample_seeds)
+    except StoreError as e:
+        # session artifact store down and the session is strict
+        # (allow_degraded=False); only StoreError — an OSError here could
+        # come from the candidate fn itself and must stay a real failure
+        _store_unavailable(f"capturing candidate {name!r}", e, strict)
     if art.key == base.key:
         return None                     # bit-identical capture: no drift
 
@@ -152,7 +191,10 @@ def assert_no_energy_regression(fn: Callable, args: Sequence[Any],
             f"total modeled energy regressed {pct:+.1f}% "
             f"({base.total_energy_j:.4e} J -> {art.total_energy_j:.4e} J, "
             f"tolerance {energy_rtol:.1%})")
-    report = session.compare(art, base, output_rtol=output_rtol)
+    try:
+        report = session.compare(art, base, output_rtol=output_rtol)
+    except StoreError as e:
+        _store_unavailable(f"comparing {name!r} against {path}", e, strict)
     regressions = [f for f in report.waste_findings if f.wasteful_side == "A"]
     for f in regressions:
         diag = f.diagnosis

@@ -1,0 +1,615 @@
+"""Chaos suite: seeded fault injection against the artifact-store stack.
+
+The invariant under test (docs/robustness.md): every operation run under a
+fault schedule ends in exactly one of
+
+  * byte-identical success — retry/quarantine/re-fetch absorbed the fault,
+  * a declared degraded result — ``meta['degraded']`` + the ``[degraded]``
+    pricing mark say exactly what was downgraded,
+  * a clean typed failure — the ``StoreError`` family, ``BaselineError``,
+    or a ``Drift`` record,
+
+and never a silent wrong answer, never orphan store state.  Fault schedules
+are seeded (:class:`~repro.core.faults.FaultPlan`), so each scenario diffs a
+faulted run against a fault-free run of the same workload.
+"""
+
+import errno
+import hashlib
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.artifact import ArtifactStore
+from repro.core.energy import AnalyticalBackend
+from repro.core.faults import (FAULT_KINDS, FaultPlan, FaultSpec, FaultyStore,
+                               SimulatedCrash)
+from repro.core.session import DEGRADED_MARK, Session
+from repro.core.store import (ChunkCorruptionError, LocalStore, RemoteStore,
+                              RetryPolicy, StoreError, StoreReadOnlyError,
+                              StoreTimeoutError, TransientStoreError,
+                              chunk_digest, is_transient_error)
+from repro.testing.baselines import BaselineStore
+from repro.zoo import cases
+
+
+def _policy(**kw):
+    """A RetryPolicy that never actually sleeps (tests stay fast)."""
+    kw.setdefault("sleep", lambda s: None)
+    return RetryPolicy(**kw)
+
+
+def _fingerprint(root: Path) -> dict[str, str]:
+    """relative path -> sha256 for every file under root (quarantine and
+    tmp files excluded): the byte-identical-store comparator."""
+    out = {}
+    for p in sorted(root.rglob("*")):
+        rel = p.relative_to(root)
+        if not p.is_file() or rel.parts[0] == "quarantine" \
+                or p.suffix == ".tmp":
+            continue
+        out[str(rel)] = hashlib.sha256(p.read_bytes()).hexdigest()
+    return out
+
+
+@pytest.fixture(scope="module")
+def captured():
+    """One live capture of the fast-lane twin pair, shared by the suite."""
+    case = cases.get_case("c6-matpow")
+    session = Session(store=None)
+    art = session.capture(case.inefficient, case.make_args(), name="x")
+    return case, art
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+def test_retry_recovers_and_counts():
+    sleeps = []
+    policy = RetryPolicy(sleep=sleeps.append, seed=7)
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] < 3:
+            raise TransientStoreError("blip")
+        return "ok"
+
+    counters = {"retries": 0}
+    assert policy.call(flaky, what="x", counters=counters) == "ok"
+    assert state["n"] == 3
+    assert policy.retries_spent == 2
+    assert counters["retries"] == 2
+    assert len(sleeps) == 2
+    # exponential backoff with jitter, bounded by max_delay * (1 + jitter)
+    assert all(0 < s <= policy.max_delay_s * (1 + policy.jitter)
+               for s in sleeps)
+
+
+def test_retry_gives_up_with_typed_error():
+    policy = _policy(max_attempts=3)
+    calls = {"n": 0}
+
+    def dead():
+        calls["n"] += 1
+        raise OSError(errno.EIO, "disk hiccup")
+
+    with pytest.raises(TransientStoreError, match="after 3 attempt"):
+        policy.call(dead, what="read")
+    assert calls["n"] == 3
+
+
+def test_retry_never_masks_permanent_errors():
+    policy = _policy()
+    calls = {"n": 0}
+
+    def denied():
+        calls["n"] += 1
+        raise StoreReadOnlyError("no")
+
+    with pytest.raises(StoreReadOnlyError):
+        policy.call(denied)
+    assert calls["n"] == 1                     # zero retries on permanent
+
+
+def test_retry_budget_bounds_lifetime_retries():
+    policy = _policy(max_attempts=4, budget=1)
+
+    def count_attempts():
+        calls = {"n": 0}
+
+        def dead():
+            calls["n"] += 1
+            raise TransientStoreError("down")
+
+        with pytest.raises(TransientStoreError):
+            policy.call(dead)
+        return calls["n"]
+
+    assert count_attempts() == 2               # 1 try + the whole budget
+    assert count_attempts() == 1               # budget spent: fail fast
+
+
+def test_transient_classification():
+    from urllib.error import HTTPError
+    assert is_transient_error(TransientStoreError("x"))
+    assert is_transient_error(StoreTimeoutError("x"))
+    assert is_transient_error(OSError(errno.EIO, "io"))
+    assert is_transient_error(ConnectionResetError())
+    assert is_transient_error(HTTPError("u", 503, "unavailable", {}, None))
+    assert not is_transient_error(HTTPError("u", 403, "forbidden", {}, None))
+    assert not is_transient_error(FileNotFoundError(2, "gone"))
+    assert not is_transient_error(ChunkCorruptionError("ab" * 32, "bad"))
+    assert not is_transient_error(StoreReadOnlyError("ro"))
+    assert not is_transient_error(KeyError("k"))
+    assert not is_transient_error(ValueError("v"))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultyStore mechanics
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_is_deterministic():
+    def run(seed):
+        plan = FaultPlan([FaultSpec("read_chunk", "io_error",
+                                    probability=0.4)], seed=seed)
+        return [plan.draw("read_chunk", f"k{i}") is not None
+                for i in range(64)]
+
+    assert run(3) == run(3)                    # same seed, same schedule
+    fired = sum(run(3))
+    assert 0 < fired < 64                      # probability actually applied
+
+
+def test_fault_spec_after_times_and_op_matching():
+    plan = FaultPlan([FaultSpec("write_manifest", "crash", after=2, times=1)])
+    assert plan.draw("write_manifest", "a") is None     # matching call 1
+    assert plan.draw("read_chunk", "a") is None         # other op: uncounted
+    assert plan.draw("write_manifest", "b") is None     # matching call 2
+    spec = plan.draw("write_manifest", "c")             # call 3 fires
+    assert spec is not None and spec.kind == "crash"
+    assert plan.draw("write_manifest", "d") is None     # times=1 exhausted
+    assert plan.log == [("write_manifest", "c", "crash")]
+    assert plan.injected == 1
+
+
+def test_unknown_fault_kind_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("read_chunk", "gremlin")
+    assert "io_error" in FAULT_KINDS
+
+
+def test_faulty_store_with_empty_plan_is_transparent(tmp_path):
+    plan = FaultPlan([])
+    store = FaultyStore(LocalStore(tmp_path), plan)
+    data = b"payload" * 100
+    d = chunk_digest(data)
+    store.write_chunk(d, data)
+    store.write_manifest("k", {"v": 1})
+    assert store.read_chunk(d) == data
+    assert store.read_manifest("k") == {"v": 1}
+    assert store.has_chunk(d) and store.has_manifest("k")
+    assert plan.injected == 0
+    assert store.counters["chunk_writes"] == 1      # __getattr__ delegation
+    assert not store.readonly
+
+
+def test_stale_manifest_serves_prior_payload(tmp_path):
+    plan = FaultPlan([FaultSpec("read_manifest", "stale_manifest", times=1)])
+    store = FaultyStore(LocalStore(tmp_path), plan)
+    store.write_manifest("k", {"v": 1})
+    store.write_manifest("k", {"v": 2})
+    assert store.read_manifest("k") == {"v": 1}     # lagging replica
+    assert store.read_manifest("k") == {"v": 2}     # caught up
+
+
+# ---------------------------------------------------------------------------
+# chaos schedule 1: transient I/O on a flaky file:// mirror
+# ---------------------------------------------------------------------------
+
+def _seed_mirror(root: Path, n: int = 3) -> dict[str, bytes]:
+    mirror = RemoteStore(f"file://{root}")
+    rng = np.random.default_rng(0)
+    chunks = {}
+    for _ in range(n):
+        data = rng.integers(0, 256, 512, dtype=np.uint8).tobytes()
+        d = chunk_digest(data)
+        mirror.write_chunk(d, data)
+        chunks[d] = data
+    mirror.write_manifest("golden", {"chunks": sorted(chunks)})
+    return chunks
+
+
+def _flaky_specs():
+    # every rung deterministic: each read path faulted, all within the
+    # retry layer's per-call attempt limit
+    return [FaultSpec("read_chunk", "io_error", times=2),
+            FaultSpec("read_manifest", "timeout", times=1),
+            FaultSpec("has_manifest", "io_error", times=1)]
+
+
+def test_schedule_transient_io_recovers_byte_identical(tmp_path):
+    """Schedule #1: transient I/O faults on every upstream read path are
+    absorbed by retry/backoff — results byte-identical to a fault-free run
+    of the exact same workload."""
+    chunks = _seed_mirror(tmp_path / "mirror")
+
+    def run(faulty: bool, tag: str):
+        plan = FaultPlan(_flaky_specs(), seed=11)
+        upstream = RemoteStore(f"file://{tmp_path / 'mirror'}")
+        if faulty:
+            upstream = FaultyStore(upstream, plan)
+        local = LocalStore(tmp_path / tag, upstream=upstream,
+                           retry=_policy(seed=1))
+        man = local.read_manifest("golden")
+        data = {d: local.read_chunk(d) for d in man["chunks"]}
+        return plan, local, man, data
+
+    plan, local, man, data = run(True, "cache-faulty")
+    _, _, man0, data0 = run(False, "cache-clean")
+    assert (man, data) == (man0, data0)        # byte-identical under faults
+    assert data == chunks
+    assert plan.injected == 4                  # the schedule actually fired
+    assert local.counters["retries"] >= plan.injected
+    # the caches themselves converged byte-for-byte too
+    assert _fingerprint(tmp_path / "cache-faulty") == \
+        _fingerprint(tmp_path / "cache-clean")
+
+    # determinism: replaying the same plan over the same workload injects
+    # the identical fault sequence
+    plan2, _, _, _ = run(True, "cache-faulty-2")
+    assert plan2.log == plan.log
+
+
+def test_hard_error_is_not_retried(tmp_path):
+    _seed_mirror(tmp_path / "mirror")
+    plan = FaultPlan([FaultSpec("read_manifest", "hard_error")])
+    local = LocalStore(tmp_path / "local",
+                       upstream=FaultyStore(
+                           RemoteStore(f"file://{tmp_path / 'mirror'}"), plan),
+                       retry=_policy())
+    with pytest.raises(StoreError, match="injected hard_error"):
+        local.read_manifest("golden")
+    assert plan.injected == 1                  # one raise, zero retries
+    assert local.counters["retries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# chaos schedule 2: corruption -> quarantine -> verified re-fetch
+# ---------------------------------------------------------------------------
+
+def test_schedule_corruption_quarantined_and_healed(tmp_path):
+    """Schedule #2: at-rest corruption in the local cache.  The read
+    quarantines the bad copy, re-fetches a verified replacement from the
+    upstream, heals the cache, and returns byte-identical data."""
+    chunks = _seed_mirror(tmp_path / "mirror")
+    local = LocalStore(tmp_path / "local",
+                       upstream=RemoteStore(f"file://{tmp_path / 'mirror'}"),
+                       retry=_policy())
+    d = sorted(chunks)[0]
+    assert local.read_chunk(d) == chunks[d]    # warm the cache
+    path = local._fs.chunk_path(d)
+    blob = bytearray(path.read_bytes())
+    blob[0] ^= 0xFF
+    path.write_bytes(bytes(blob))              # flip one byte at rest
+
+    assert local.read_chunk(d) == chunks[d]            # byte-identical
+    assert chunk_digest(path.read_bytes()) == d        # cache healed
+    assert (local._fs.quarantine_dir() / d).exists()   # forensics kept
+    assert local.counters["chunks_quarantined"] == 1
+    assert local.counters["verify_failures"] >= 1
+
+
+def test_corrupt_chunk_without_upstream_is_typed_failure(tmp_path):
+    local = LocalStore(tmp_path)
+    data = b"x" * 64
+    d = chunk_digest(data)
+    local.write_chunk(d, data)
+    local._fs.chunk_path(d).write_bytes(b"y" * 64)
+    with pytest.raises(ChunkCorruptionError) as ei:
+        local.read_chunk(d)
+    assert ei.value.digest == d
+    assert (local._fs.quarantine_dir() / d).exists()
+    with pytest.raises(KeyError):              # quarantined: clean miss now,
+        local.read_chunk(d)                    # never wrong bytes
+
+
+def test_bitflip_in_flight_absorbed_by_verified_refetch(tmp_path):
+    chunks = _seed_mirror(tmp_path / "mirror")
+    d = sorted(chunks)[0]
+    plan = FaultPlan([FaultSpec("read_chunk", "bit_flip", times=1)], seed=5)
+    local = LocalStore(tmp_path / "local",
+                       upstream=FaultyStore(
+                           RemoteStore(f"file://{tmp_path / 'mirror'}"), plan),
+                       retry=_policy())
+    assert local.read_chunk(d) == chunks[d]    # second fetch verified clean
+    assert plan.injected == 1
+    assert local.counters["verify_failures"] == 1
+
+
+def test_torn_and_bitflipped_writes_never_served(tmp_path):
+    """Data faults on the write path land corrupt bytes under a correct
+    content address; read-side digest verification refuses to serve them."""
+    plan = FaultPlan([FaultSpec("write_chunk", "torn_write", times=1),
+                      FaultSpec("write_chunk", "bit_flip", times=1)], seed=2)
+    store = FaultyStore(LocalStore(tmp_path), plan)
+    torn, flipped = b"t" * 300, b"f" * 300
+    d_torn, d_flip = chunk_digest(torn), chunk_digest(flipped)
+    store.write_chunk(d_torn, torn)            # first write drawn torn
+    store.write_chunk(d_flip, flipped)         # second drawn bit_flip
+    assert plan.injected == 2
+    for d in (d_torn, d_flip):
+        with pytest.raises(ChunkCorruptionError):
+            store.read_chunk(d)
+
+
+def test_garbled_manifest_quarantined_then_clean_miss(tmp_path):
+    local = LocalStore(tmp_path)
+    local.write_manifest("k", {"v": 1})
+    local._fs.manifest_path("k").write_text("{not json")
+    from repro.core.store import StoreCorruptionError
+    with pytest.raises(StoreCorruptionError, match="quarantined"):
+        local.read_manifest("k")
+    assert (local._fs.quarantine_dir() / "k.json").exists()
+    with pytest.raises(KeyError):
+        local.read_manifest("k")               # clean miss afterwards
+
+
+# ---------------------------------------------------------------------------
+# chaos schedule 3: mid-save crash points
+# ---------------------------------------------------------------------------
+
+def test_schedule_crash_mid_save_converges(tmp_path, captured):
+    """Schedule #3: process death between the chunk writes and the manifest
+    publish.  The interrupted store answers a clean miss; the re-run
+    converges to a store byte-identical to one never interrupted."""
+    case, art = captured
+    plan = FaultPlan([FaultSpec("write_manifest", "crash", times=1)])
+    store = ArtifactStore(backend=FaultyStore(
+        LocalStore(tmp_path / "faulty"), plan))
+    with pytest.raises(SimulatedCrash):
+        store.save(art)
+    assert plan.injected == 1
+    assert not store.has(art.key)              # clean miss, never torn
+    with pytest.raises(KeyError):
+        store.load(art.key)
+
+    store.save(art)                            # crash point exhausted
+    assert store.has(art.key)
+
+    clean = ArtifactStore(tmp_path / "clean")
+    clean.save(art)
+    assert _fingerprint(tmp_path / "faulty") == _fingerprint(tmp_path / "clean")
+
+
+def test_interrupted_push_converges_without_orphans(tmp_path):
+    """Satellite: `artifacts push` killed mid-transfer (crash-point hook on
+    the 2nd chunk write).  The re-run converges to a mirror byte-identical
+    to an uninterrupted push — no duplicate chunks, no orphans."""
+    case = cases.get_case("c6-matpow")
+    src = ArtifactStore(tmp_path / "src", persist_raw_values=True)
+    session = Session(store=src)
+    a = session.capture(case.inefficient, case.make_args(), name="ineff")
+    b = session.capture(case.efficient, case.make_args(), name="eff")
+    session.compare(a, b, output_rtol=case.output_rtol)
+
+    ref = tmp_path / "ref-mirror"
+    src.push(f"file://{ref}")                  # uninterrupted reference
+
+    plan = FaultPlan([FaultSpec("write_chunk", "crash", after=1, times=1)])
+    mirror_root = tmp_path / "mirror"
+    dst = FaultyStore(RemoteStore(f"file://{mirror_root}"), plan)
+    with pytest.raises(SimulatedCrash):
+        src.push(dst)
+    assert plan.injected == 1
+
+    res = src.push(dst)                        # re-run converges
+    assert res["manifests"] == 2
+    assert res["chunks_skipped"] >= 1          # survivor chunk not re-sent
+    keys = RemoteStore(f"file://{mirror_root}").chunk_keys()
+    assert len(keys) == len(set(keys))         # no duplicates
+    assert _fingerprint(mirror_root) == _fingerprint(ref)
+
+
+def test_interrupted_migrate_converges(tmp_path, captured):
+    """Satellite: `artifacts migrate` killed before the manifest publish.
+    The legacy npz survives (nothing lost), and the re-run converges
+    byte-identically to an uninterrupted migration."""
+    case, art = captured
+
+    def seed_legacy(root: Path):
+        root.mkdir(parents=True, exist_ok=True)
+        art.save(root / f"{art.key}.npz")
+
+    seed_legacy(tmp_path / "clean")
+    ArtifactStore(tmp_path / "clean").migrate()
+
+    seed_legacy(tmp_path / "faulty")
+    plan = FaultPlan([FaultSpec("write_manifest", "crash", times=1)])
+    store = ArtifactStore(backend=FaultyStore(
+        LocalStore(tmp_path / "faulty"), plan))
+    with pytest.raises(SimulatedCrash):
+        store.migrate()
+    assert store.legacy_keys() == [art.key]    # npz intact: nothing lost
+    assert not store.backend.has_manifest(art.key)
+
+    res = store.migrate()
+    assert res["migrated"] == 1
+    assert store.legacy_keys() == []
+    assert _fingerprint(tmp_path / "faulty") == _fingerprint(tmp_path / "clean")
+
+
+# ---------------------------------------------------------------------------
+# graceful-degradation ladder
+# ---------------------------------------------------------------------------
+
+class _BoomBackend:
+    id = "boom-v1"
+    label = "boom"
+
+    def profile(self, graph, args):
+        raise RuntimeError("profiler exploded")
+
+
+def test_backend_failure_falls_back_and_declares(tmp_path):
+    case = cases.get_case("c6-matpow")
+    session = Session(backend=_BoomBackend())
+    art_a = session.capture(case.inefficient, case.make_args(), name="ineff")
+    art_b = session.capture(case.efficient, case.make_args(), name="eff")
+    assert art_a.backend_id == AnalyticalBackend().id    # bottom rung
+    assert any("fallback" in n for n in art_a.meta["degraded"])
+
+    rep = session.compare(art_a, art_b, output_rtol=case.output_rtol)
+    assert rep.is_degraded
+    assert DEGRADED_MARK in rep.meta["energy_model"]
+    assert any(n.startswith("A:") for n in rep.meta["degraded"])
+    assert "!!! DEGRADED" in rep.render()
+    for f in rep.waste_findings:               # provenance reaches diagnoses
+        if f.diagnosis is not None:
+            assert f.diagnosis.degraded
+            assert DEGRADED_MARK in f.diagnosis.priced_by
+
+
+def test_backend_failure_strict_mode_raises():
+    case = cases.get_case("c6-matpow")
+    session = Session(backend=_BoomBackend(), allow_degraded=False)
+    with pytest.raises(RuntimeError, match="profiler exploded"):
+        session.capture(case.inefficient, case.make_args(), name="x")
+
+
+def test_unreachable_values_degrade_to_sketch_only(tmp_path, monkeypatch):
+    """Raw phase-2 values unreachable mid-compare: the session retries the
+    match sketch-only and declares the downgrade instead of failing (or
+    worse, guessing)."""
+    from repro.core import tensor_match
+    case = cases.get_case("c6-matpow")
+    session = Session(store=str(tmp_path))
+    a = session.capture(case.inefficient, case.make_args(), name="ineff")
+    b = session.capture(case.efficient, case.make_args(), name="eff")
+
+    orig = tensor_match.TensorMatcher.match_streamed
+    state = {"calls": 0}
+
+    def flaky(self, *args, **kw):
+        state["calls"] += 1
+        if state["calls"] == 1 and not kw.get("dry_only"):
+            raise TransientStoreError("chunk store unreachable")
+        return orig(self, *args, **kw)
+
+    monkeypatch.setattr(tensor_match.TensorMatcher, "match_streamed", flaky)
+    rep = session.compare(a, b, output_rtol=case.output_rtol)
+    assert state["calls"] == 2                 # full, then sketch-only retry
+    assert rep.is_degraded
+    assert any("sketch-only" in n for n in rep.meta["degraded"])
+    assert DEGRADED_MARK in rep.meta["energy_model"]
+
+    # strict mode: same fault propagates typed instead
+    state["calls"] = 0
+    with pytest.raises(TransientStoreError, match="unreachable"):
+        session.compare(a, b, output_rtol=case.output_rtol,
+                        allow_degraded=False)
+
+
+def test_cache_probe_failure_degrades_to_live_capture(tmp_path):
+    case = cases.get_case("c6-matpow")
+    plan = FaultPlan([FaultSpec("has_manifest", "hard_error", times=1)])
+    session = Session(store=ArtifactStore(backend=FaultyStore(
+        LocalStore(tmp_path), plan)))
+    art = session.capture(case.inefficient, case.make_args(), name="x")
+    assert any("cache probe failed" in w
+               for w in art.meta["store_warnings"])
+    assert "degraded" not in art.meta          # full fidelity: just no cache
+    assert session.store.has(art.key)          # and it was persisted after
+
+
+def test_unpersistable_capture_is_declared(tmp_path):
+    case = cases.get_case("c6-matpow")
+    plan = FaultPlan([FaultSpec("write_manifest", "hard_error", times=1)])
+    session = Session(store=ArtifactStore(backend=FaultyStore(
+        LocalStore(tmp_path), plan)))
+    art = session.capture(case.inefficient, case.make_args(), name="x")
+    assert any("not persisted" in n for n in art.meta["degraded"])
+
+
+# ---------------------------------------------------------------------------
+# golden baselines stay strict
+# ---------------------------------------------------------------------------
+
+def test_baseline_store_forces_strict_session(tmp_path):
+    bs = BaselineStore(tmp_path)
+    assert bs.session.allow_degraded is False
+
+
+def test_baseline_check_reports_store_failure_as_drift(tmp_path):
+    case = cases.get_case("c6-matpow")
+    bs = BaselineStore(tmp_path)
+    bs.record(case)
+    assert bs.check(case, offline=True) == []  # healthy store: no drift
+
+    plan = FaultPlan([FaultSpec("read_manifest", "hard_error")])
+    bs.artifacts.backend = FaultyStore(bs.artifacts.backend, plan)
+    drifts = bs.check(case, offline=True)
+    assert [d.field for d in drifts] == ["store"]
+    assert "hard_error" in str(drifts[0].actual)
+
+
+def test_baseline_live_check_store_failure_is_drift_not_degraded(tmp_path):
+    case = cases.get_case("c6-matpow")
+    bs = BaselineStore(tmp_path)
+    bs.record(case)
+    plan = FaultPlan([FaultSpec("has_manifest", "hard_error")])
+    bs.artifacts.backend = FaultyStore(bs.artifacts.backend, plan)
+    drifts = bs.check(case, offline=False)
+    assert [d.field for d in drifts] == ["store"]
+
+
+# ---------------------------------------------------------------------------
+# pytest-plugin energy gate: skip vs --energy-strict
+# ---------------------------------------------------------------------------
+
+def _double(x):
+    return x * 2.0
+
+
+def test_energy_gate_skips_when_baseline_unreadable(tmp_path):
+    from repro.testing.pytest_plugin import assert_no_energy_regression
+    baseline = tmp_path / "g.npz"
+    baseline.mkdir(parents=True)               # a directory where the npz
+    args = (np.ones((4,), np.float32),)        # should be -> IsADirectoryError
+    with pytest.raises(pytest.skip.Exception,
+                       match="store unavailable.*--energy-strict"):
+        assert_no_energy_regression(_double, args, baseline, strict=False)
+    with pytest.raises(pytest.fail.Exception, match="store unavailable"):
+        assert_no_energy_regression(_double, args, baseline, strict=True)
+
+
+def test_energy_gate_store_failure_during_capture(tmp_path):
+    from repro.testing.pytest_plugin import assert_no_energy_regression
+    baseline = tmp_path / "k.npz"
+    args = (np.ones((8,), np.float32),)
+    assert assert_no_energy_regression(_double, args, baseline,
+                                       record=True) is None
+    plan = FaultPlan([FaultSpec("has_manifest", "hard_error")])
+    sess = Session(store=ArtifactStore(backend=FaultyStore(
+        LocalStore(tmp_path / "store"), plan)), allow_degraded=False)
+    with pytest.raises(pytest.skip.Exception, match="capturing candidate"):
+        assert_no_energy_regression(_double, args, baseline, session=sess,
+                                    strict=False)
+    with pytest.raises(pytest.fail.Exception, match="capturing candidate"):
+        assert_no_energy_regression(_double, args, baseline, session=sess,
+                                    strict=True)
+
+
+def test_energy_gate_healthy_path_still_gates(tmp_path):
+    """Strict flag changes only the unreachable-store behavior: a healthy
+    store still records and passes."""
+    from repro.testing.pytest_plugin import assert_no_energy_regression
+    baseline = tmp_path / "k.npz"
+    args = (np.ones((8,), np.float32),)
+    assert_no_energy_regression(_double, args, baseline, record=True)
+    report = assert_no_energy_regression(_double, args, baseline,
+                                         strict=True)
+    assert report is None                      # bit-identical capture

@@ -1,10 +1,13 @@
 """Serve engine: continuous batching, slot reuse, stats, decode parity."""
 
+import time
+
 import jax
 import numpy as np
 import pytest
 
 from repro import configs
+from repro.core.faults import SimulatedCrash
 from repro.models import transformer as tf
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 
@@ -49,3 +52,83 @@ def test_greedy_determinism(engine):
     eng.generate([a])
     eng.generate([b])
     assert a.generated == b.generated
+
+
+# -- audit error boundary -----------------------------------------------------
+
+def _small_ecfg(**kw):
+    return EngineConfig(batch_size=2, max_len=48, **kw)
+
+
+def test_engine_default_configs_are_independent(engine):
+    """Regression: a mutable `ecfg=EngineConfig()` dataclass-style default
+    aliased one config object across every engine construction."""
+    cfg, eng = engine
+    e1 = ServeEngine(cfg, eng.params)
+    e2 = ServeEngine(cfg, eng.params)
+    assert e1.ecfg is not e2.ecfg
+    e1.ecfg.batch_size = 99
+    assert e2.ecfg.batch_size == EngineConfig().batch_size
+    assert EngineConfig().batch_size != 99
+    assert eng.ecfg.batch_size == 2            # module engine untouched
+
+
+def test_audit_crash_counts_and_opens_breaker(engine, monkeypatch):
+    cfg, base = engine
+    eng = ServeEngine(cfg, base.params,
+                      ecfg=_small_ecfg(audit_breaker_threshold=2))
+
+    def boom(**kw):
+        raise SimulatedCrash("audit process died")
+
+    monkeypatch.setattr(eng, "energy_report", boom)
+    assert eng.audit() is None                 # never raises
+    assert eng.stats["audit_failures"] == 1
+    assert not eng.stats["audit_breaker_open"]
+    assert eng.audit() is None
+    assert eng.stats["audit_breaker_open"]     # threshold reached
+    assert "SimulatedCrash" in eng.stats["audit_last_error"]
+
+    assert eng.audit() is None                 # breaker open: not attempted
+    assert eng.stats["audit_calls"] == 2
+    assert eng.stats["audit_skipped"] == 1
+
+    eng.reset_audit_breaker()
+    monkeypatch.setattr(eng, "energy_report", lambda **kw: None)
+    eng.audit()
+    assert eng.stats["audit_ok"] == 1
+    assert eng.stats["audit_consecutive_failures"] == 0
+
+
+def test_audit_watchdog_timeout(engine, monkeypatch):
+    cfg, base = engine
+    eng = ServeEngine(cfg, base.params, ecfg=_small_ecfg())
+    monkeypatch.setattr(eng, "energy_report",
+                        lambda **kw: time.sleep(2.0))
+    assert eng.audit(timeout_s=0.05) is None
+    assert eng.stats["audit_timeouts"] == 1
+    assert "watchdog" in eng.stats["audit_last_error"]
+
+
+def test_serving_survives_force_killed_audit(engine, monkeypatch):
+    """Smoke test from the issue: the audit force-killed out from under the
+    engine; every request still completes and the breaker is open."""
+    cfg, base = engine
+    eng = ServeEngine(cfg, base.params,
+                      ecfg=_small_ecfg(audit_breaker_threshold=1))
+
+    def killed(**kw):
+        raise SimulatedCrash("audit force-killed")
+
+    monkeypatch.setattr(eng, "energy_report", killed)
+    assert eng.audit() is None
+    assert eng.stats["audit_breaker_open"]
+
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 256, 6, dtype=np.int32),
+                    max_new_tokens=4) for i in range(4)]
+    eng.generate(reqs)
+    assert all(len(r.generated) == 4 for r in reqs)
+    assert eng.stats["audit_breaker_open"]     # still open, serving unharmed
+    assert eng.audit() is None
+    assert eng.stats["audit_skipped"] == 1

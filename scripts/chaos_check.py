@@ -19,6 +19,12 @@ every case must end
 and the schedule must demonstrably have *fired* (plan log, quarantine and
 retry counters) — a chaos stage whose faults never trigger gates nothing.
 
+A second scenario (``run_audit_chaos``) points the seeded ``FaultyStore``
+at the *writable* remote path: a live-audit drift check whose conditional
+puts flake must degrade per the ladder (in-memory artifact, ``[degraded]``
+provenance, flush retried later) without ever dropping a sample or
+corrupting ``index.json``.  See docs/serving.md.
+
 Run from the repo root (scripts/ci.sh does):
     PYTHONPATH=src python scripts/chaos_check.py
 """
@@ -49,6 +55,15 @@ FLAKY_SPECS = [
     FaultSpec("read_chunk", "io_error", times=2),
     FaultSpec("read_manifest", "timeout", times=1),
     FaultSpec("has_chunk", "io_error", times=1),
+]
+
+# live-audit write path (repro.audit over the writable http remote): the
+# first drift check's artifact save, golden election and log flush all hit
+# injected write faults, then the schedule exhausts and the retaken check
+# must deliver everything — per the ladder, never by raising into serving
+AUDIT_FLAKY_SPECS = [
+    FaultSpec("write_chunk", "io_error", times=1),
+    FaultSpec("write_manifest", "io_error", times=2),
 ]
 
 
@@ -109,10 +124,95 @@ def _replay(bdir: Path, cache: Path, upstream) -> tuple:
     return local, outcomes
 
 
+def run_audit_chaos(tmp: Path) -> int:
+    """Flaky conditional puts under the live-audit sampled path.
+
+    A seeded :class:`FaultyStore` wraps the *writable* http remote that an
+    :class:`EngineAuditor` flushes into.  The gate is the graceful-
+    degradation ladder (docs/serving.md): the faulted drift check must
+    complete with an in-memory artifact carrying ``[degraded]``
+    provenance, the failed log flush must keep every event for the next
+    attempt (no lost samples), and once the schedule exhausts the retaken
+    check must persist goldens + logs while ``index.json`` stays exactly
+    the manifest listing (never torn by a failed CAS)."""
+    import json
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.audit import AuditConfig, EngineAuditor, classify, log_key
+    from repro.core.artifact import ArtifactStore
+    from repro.core.session import Session
+    from repro.testing.httpstore import serve_store
+
+    def probe(rc):
+        x = np.linspace(0.0, 1.0, 64, dtype=np.float32).reshape(8, 8)
+        return (lambda x: jnp.tanh(x @ x)), (x,), {"chaos_class": rc.key}
+
+    with serve_store(tmp / "fleet") as srv:
+        plan = FaultPlan(AUDIT_FLAKY_SPECS, seed=7)
+        remote = RemoteStore(srv.url, writable=True,
+                             retry=RetryPolicy(sleep=lambda s: None, seed=2))
+        store = ArtifactStore(backend=FaultyStore(remote, plan))
+        auditor = EngineAuditor(
+            probe, "chaos-fingerprint",
+            AuditConfig(engine_id="chaos-engine", recheck_every=1),
+            session=Session(store=store))
+        rc = classify("decode", 2, 12)
+
+        # sample 1: every write op faults — the ladder must absorb all of it
+        ev1 = auditor.sample(rc, "every_n", latency_s=0.001)
+        if not (ev1.kind == "check" and ev1.degraded):
+            print(f"audit-chaos: faulted check not degraded-clean: "
+                  f"{ev1.to_payload()}")
+            return 1
+        if auditor.flush_failures < 1 or len(auditor.log) != 1:
+            print(f"audit-chaos: flush failure not declared or event lost "
+                  f"(failures={auditor.flush_failures}, "
+                  f"log={len(auditor.log)})")
+            return 1
+
+        # sample 2: schedule exhausted — everything must now be delivered
+        ev2 = auditor.sample(rc, "every_n", latency_s=0.001)
+        reader = RemoteStore(srv.url,
+                             retry=RetryPolicy(sleep=lambda s: None))
+        flushed = reader.read_manifest(log_key("chaos-engine"))
+        if ev2.kind != "check" or ev2.degraded:
+            print(f"audit-chaos: retaken check still degraded: "
+                  f"{ev2.to_payload()}")
+            return 1
+        if len(flushed["log"]["events"]) != 2 \
+                or flushed["flush_failures"] != 1:
+            print(f"audit-chaos: delivered log lost samples or history: "
+                  f"{flushed['log']['events']} / "
+                  f"failures={flushed['flush_failures']}")
+            return 1
+
+        # index.json survived the failed CAS byte-valid and complete
+        index = json.loads((srv.root / "index.json").read_text())
+        listed = sorted(p.stem
+                        for p in (srv.root / "manifests").glob("*.json"))
+        if index["manifests"] != listed:
+            print(f"audit-chaos: index.json diverged from manifest "
+                  f"listing: {index['manifests']} vs {listed}")
+            return 1
+        if plan.injected < sum(s.times for s in AUDIT_FLAKY_SPECS):
+            print(f"audit-chaos: write-fault schedule did not fire "
+                  f"(injected={plan.injected}, log={plan.log})")
+            return 1
+    print(f"audit-chaos OK: {plan.injected} write faults absorbed "
+          f"({plan.log}), degraded provenance declared, no lost samples, "
+          "index intact")
+    return 0
+
+
 def main() -> int:
     tmp = Path(tempfile.mkdtemp(prefix="magneton-chaos-"))
     try:
-        return run(tmp)
+        rc = run(tmp)
+        if rc != 0:
+            return rc
+        return run_audit_chaos(tmp)
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 

@@ -109,6 +109,17 @@ python -m repro.cli baseline check --dir "$SDIR" --offline \
     --store "file://$MIRROR" "${BASELINE_CASES[@]}"
 echo "store round-trip OK"
 
+echo "== serving-audit (sampled live auditing + writable fleet store) =="
+# Gates the repro.audit subsystem (docs/serving.md): amortized sampled-
+# audit overhead < 5% vs audit-off on warm steady-state traffic, a
+# planted decode mutation must raise a drift alarm naming its diagnosis
+# kind against the healthy fleet golden, and two engines racing on one
+# writable http store must converge byte-identically under the
+# conditional-put dialect with no lost samples.  Emits
+# BENCH_serve_audit.json.
+python scripts/serve_audit_check.py
+echo "serving-audit OK"
+
 echo "== chaos (offline replay under seeded faults) =="
 # Replays the same 4-case offline drift gate through a read-through cache
 # corrupted at rest (bit-flipped chunks, one garbled manifest) behind a

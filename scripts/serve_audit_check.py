@@ -1,0 +1,235 @@
+#!/usr/bin/env python
+"""CI serving-audit stage: overhead, drift alarms, fleet-store convergence.
+
+Gates the always-on sampled auditing subsystem (repro.audit,
+docs/serving.md) on three acceptance bounds:
+
+1. **Amortized overhead** — serving the same deterministic traffic with
+   sampled auditing on (warm steady state: goldens elected, every sample a
+   lightweight log event) must cost < 5% wall-clock vs auditing off.
+2. **Mutated-config alarm** — an engine whose decode probe carries a
+   planted waste mutation must raise a drift alarm against the healthy
+   fleet golden, naming the planted diagnosis kind.
+3. **Conditional-put convergence** — two engines racing on one writable
+   http store (the loopback S3/GCS stand-in) must converge to a
+   byte-identical store regardless of interleaving: index.json equals the
+   manifest listing, every chunk digest-verifies, no samples are lost.
+
+Emits BENCH_serve_audit.json for the perf trajectory.
+
+Run from the repo root (scripts/ci.sh does):
+    PYTHONPATH=src python scripts/serve_audit_check.py
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+from common import emit_json  # noqa: E402
+
+from repro import configs                                   # noqa: E402
+from repro.audit import fleet_status                        # noqa: E402
+from repro.models import transformer as tf                  # noqa: E402
+from repro.serve.engine import (EngineConfig, Request,      # noqa: E402
+                                ServeEngine)
+from repro.testing.httpstore import serve_store             # noqa: E402
+
+N_REQS = 16
+MAX_NEW = 6
+PROMPT_LEN = 12
+TIMED_RUNS = 5
+OVERHEAD_BOUND = 0.05
+
+
+def _mkreqs(vocab: int, seed: int = 0) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, PROMPT_LEN,
+                                        dtype=np.int32).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i in range(N_REQS)]
+
+
+def _timed_serves(eng: ServeEngine, vocab: int) -> float:
+    """Median wall-clock of TIMED_RUNS identical serve rounds (warm)."""
+    times = []
+    for _ in range(TIMED_RUNS):
+        reqs = _mkreqs(vocab)
+        t0 = time.perf_counter()
+        eng.generate(reqs)
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def _ecfg(**kw) -> EngineConfig:
+    return EngineConfig(batch_size=2, max_len=48, audit_timeout_s=300.0, **kw)
+
+
+def check_overhead(cfg, params, tmp: Path) -> dict:
+    eng_off = ServeEngine(cfg, params, ecfg=_ecfg())
+    eng_off.generate(_mkreqs(cfg.vocab_size))               # jit warm-up
+    t_off = _timed_serves(eng_off, cfg.vocab_size)
+
+    eng_on = ServeEngine(cfg, params, ecfg=_ecfg(
+        audit_sample_every=8, store=str(tmp / "overhead-store"),
+        engine_id="bench"))
+    # warm-up: jit + the one-time per-class full captures / golden election
+    eng_on.generate(_mkreqs(cfg.vocab_size))
+    sampled_before = eng_on.stats["audit_sampled"]
+    t_on = _timed_serves(eng_on, cfg.vocab_size)
+    sampled_during = eng_on.stats["audit_sampled"] - sampled_before
+
+    overhead = (t_on - t_off) / t_off
+    print(f"serve-audit: steady-state serve {t_off*1e3:.1f} ms audit-off vs "
+          f"{t_on*1e3:.1f} ms audit-on ({sampled_during} samples taken "
+          f"during timed runs) -> amortized overhead {overhead:+.2%}")
+    assert sampled_during > 0, \
+        "timed runs took no samples; the overhead measurement is vacuous"
+    assert overhead < OVERHEAD_BOUND, (
+        f"amortized audit overhead {overhead:+.2%} exceeds the "
+        f"{OVERHEAD_BOUND:.0%} acceptance bound")
+    return {"serve_s_audit_off": t_off, "serve_s_audit_on": t_on,
+            "amortized_overhead": overhead,
+            "samples_during_timed_runs": sampled_during,
+            "alarms": eng_on.stats["audit_alarms"]}
+
+
+def check_mutated_alarm(cfg, params, tmp: Path) -> dict:
+    store = str(tmp / "alarm-store")
+    healthy = ServeEngine(cfg, params, ecfg=_ecfg(
+        audit_sample_every=4, store=store, engine_id="healthy"))
+    healthy.generate(_mkreqs(cfg.vocab_size))
+    assert healthy.stats["audit_alarms"] == 0, \
+        "healthy engine must not alarm against its own goldens"
+
+    mutated = ServeEngine(cfg, params, ecfg=_ecfg(
+        audit_sample_every=4, store=store, engine_id="mutated",
+        audit_mutate_decode="redundant_recompute"))
+    mutated.generate(_mkreqs(cfg.vocab_size))
+    alarms = mutated.auditor.alarms
+    print(f"serve-audit: mutated engine raised {len(alarms)} alarms: "
+          + "; ".join(f"{a.class_key} {a.energy_delta:+.1%} "
+                      f"kind={a.diagnosis_kind}" for a in alarms))
+    assert alarms, "mutated decode step must raise a drift alarm"
+    assert any(a.diagnosis_kind == "api_difference" for a in alarms), (
+        "redundant_recompute plants an api_difference; alarms carried "
+        f"{[a.diagnosis_kind for a in alarms]}")
+    status = fleet_status(store)
+    assert status["total_alarms"] >= len(alarms)
+    return {"alarms": len(alarms),
+            "diagnosis_kinds": sorted({a.diagnosis_kind for a in alarms
+                                       if a.diagnosis_kind}),
+            "max_energy_delta": max(a.energy_delta for a in alarms)}
+
+
+def _store_fingerprint(root: Path) -> dict:
+    """Byte fingerprint of the store, excluding per-engine ``audit--*``
+    logs (they carry real latencies, the one nondeterministic input)."""
+    out = {}
+    for p in sorted(root.rglob("*")):
+        rel = p.relative_to(root)
+        if not p.is_file() or p.name.startswith("audit--"):
+            continue
+        out[str(rel)] = hashlib.sha256(p.read_bytes()).hexdigest()
+    return out
+
+
+def _race_once(cfg, params, root: Path, order: tuple[str, str]) -> dict:
+    """Two engines serve concurrently into one writable http store."""
+    with serve_store(root) as srv:
+        engines = {eid: ServeEngine(cfg, params, ecfg=_ecfg(
+            audit_sample_every=4, store=srv.url, engine_id=eid))
+            for eid in order}
+        threads = [threading.Thread(
+            target=lambda e=engines[eid]: e.generate(_mkreqs(cfg.vocab_size)))
+            for eid in order]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        status = fleet_status(str(root))
+    # no lost samples: every engine's flushed log agrees with its sampler
+    for eid in order:
+        eng = engines[eid]
+        summary = eng.auditor.summary()
+        flushed = next(e for e in status["engines"]
+                       if e["engine_id"] == eid)
+        assert flushed["sampled"] == summary["sampled"] > 0, (
+            f"{eid}: flushed {flushed['sampled']} samples vs "
+            f"{summary['sampled']} taken")
+        assert eng.auditor.flush_failures == 0
+    return {"status": status,
+            "fingerprint": _store_fingerprint(root),
+            "sampled": {eid: engines[eid].auditor.summary()["sampled"]
+                        for eid in order}}
+
+
+def check_convergence(cfg, params, tmp: Path) -> dict:
+    a = _race_once(cfg, params, tmp / "race-a", ("engine-a", "engine-b"))
+    b = _race_once(cfg, params, tmp / "race-b", ("engine-b", "engine-a"))
+
+    # byte-identical convergence regardless of interleaving/start order
+    assert a["fingerprint"] == b["fingerprint"], (
+        "two racing writers left different store bytes: "
+        f"{sorted(set(a['fingerprint']) ^ set(b['fingerprint']))[:6]}")
+    assert a["sampled"] == b["sampled"], "sample schedules must be seeded"
+
+    # index.json is exactly the manifest listing (no lost index updates)
+    for root in (tmp / "race-a", tmp / "race-b"):
+        index = json.loads((root / "index.json").read_text())
+        listed = sorted(p.stem for p in (root / "manifests").glob("*.json"))
+        assert index["manifests"] == listed, (
+            f"{root}: index {len(index['manifests'])} keys vs "
+            f"{len(listed)} manifest files")
+        # every chunk digest-verifies: no torn/orphan conditional puts
+        n_chunks = 0
+        for p in (root / "chunks").rglob("*"):
+            if p.is_file():
+                n_chunks += 1
+                assert hashlib.sha256(
+                    p.read_bytes()).hexdigest() == p.name, \
+                    f"chunk {p.name} fails digest verification"
+        assert n_chunks > 0
+    print(f"serve-audit: two racing engines converged byte-identically "
+          f"({len(a['fingerprint'])} store objects, "
+          f"{a['sampled']} samples per engine, "
+          f"{a['status']['total_alarms']} alarms)")
+    assert a["status"]["total_alarms"] == 0
+    return {"store_objects": len(a["fingerprint"]),
+            "engines": len(a["status"]["engines"]),
+            "sampled": a["sampled"]}
+
+
+def main() -> int:
+    tmp = Path(tempfile.mkdtemp(prefix="magneton-serve-audit-"))
+    try:
+        cfg = configs.get_config("gpt2-small").reduced(num_layers=2)
+        params = tf.model_init(cfg, jax.random.key(0))
+        overhead = check_overhead(cfg, params, tmp)
+        alarm = check_mutated_alarm(cfg, params, tmp)
+        convergence = check_convergence(cfg, params, tmp)
+        emit_json("BENCH_serve_audit.json", {
+            "arch": cfg.name, "requests": N_REQS, "max_new": MAX_NEW,
+            "timed_runs": TIMED_RUNS, "overhead_bound": OVERHEAD_BOUND,
+            "overhead": overhead, "mutated_alarm": alarm,
+            "convergence": convergence})
+        print("serve-audit OK: overhead bounded, mutated config alarms, "
+              "racing writers converge")
+        return 0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,23 @@
+"""Always-on sampled energy auditing for live serving (docs/serving.md).
+
+The subsystem that turns a serving engine into a self-auditing service:
+deterministic sampling policies (:mod:`repro.audit.sampler`), request-class
+keying with per-class golden baselines and drift alarms
+(:mod:`repro.audit.classes`, :mod:`repro.audit.auditor`), a bounded audit
+log (:mod:`repro.audit.log`), and cross-engine fleet aggregation over a
+shared writable store (:mod:`repro.audit.fleet`).
+"""
+
+from repro.audit.auditor import (AuditConfig, DriftAlarm, EngineAuditor,
+                                 golden_key, log_key, sanitize_id)
+from repro.audit.classes import (PHASES, RequestClass, classify, pow2_bucket)
+from repro.audit.fleet import fleet_status, render_fleet_status
+from repro.audit.log import AuditEvent, AuditLog
+from repro.audit.sampler import REASONS, SampleDecision, Sampler
+
+__all__ = [
+    "AuditConfig", "AuditEvent", "AuditLog", "DriftAlarm", "EngineAuditor",
+    "PHASES", "REASONS", "RequestClass", "SampleDecision", "Sampler",
+    "classify", "fleet_status", "golden_key", "log_key", "pow2_bucket",
+    "render_fleet_status", "sanitize_id",
+]

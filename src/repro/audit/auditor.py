@@ -1,0 +1,306 @@
+"""EngineAuditor: per-request-class baselines and continuous drift checks.
+
+The auditor owns the live-audit state for one serving engine: a
+deterministic :class:`~repro.audit.sampler.Sampler`, an
+:class:`~repro.audit.log.AuditLog`, the per-class artifact lineage, and
+the connection to a (possibly shared, writable-remote) fleet store.
+
+Drift semantics — each request class is checked against its *own* golden
+baseline:
+
+* The golden is a reserved ``audit-class--<digest>`` manifest keyed by
+  ``sha256(class_key | config_fingerprint | backend_id)``.  It names the
+  golden's content-addressed artifact key and modeled energy — and
+  deliberately NOT the engine that wrote it, so two identical engines
+  racing to elect a golden write byte-identical records (a benign
+  last-writer-wins race under the conditional-put dialect).
+* Because probe inputs are canonical and seeded from the class key, an
+  unchanged engine re-captures the *same* artifact key as the golden —
+  drift checks on a healthy engine are cache hits, no compare needed.
+* A changed engine captures a different key; the auditor loads the golden
+  artifact and runs the ordinary sketch-capable offline
+  ``session.compare(golden, fresh)``.  An alarm fires when the fresh side
+  is the confirmed-wasteful side or its modeled energy regresses beyond
+  ``energy_rtol`` — and it carries the full :class:`Diagnosis` (kind,
+  deviation point, priced_by, degraded mark), not just a scalar delta.
+
+Every sampled event lands in the audit log, which is flushed whole to the
+store as the engine's ``audit--<engine_id>`` manifest — immediately for
+check/alarm/error events, batched per ``flush_every`` for lightweight
+captures, with a final flush when the engine drains.  A failed flush
+keeps the events in memory for the next attempt (no lost samples, per the
+graceful-degradation ladder).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+from typing import Any, Callable
+
+from repro.audit.classes import RequestClass, classify
+from repro.audit.log import AuditEvent, AuditLog
+from repro.audit.sampler import SampleDecision, Sampler
+from repro.core.report import Report
+from repro.core.session import Session
+from repro.core.store import StoreError
+from repro.testing.baselines import rel_diff
+
+GOLDEN_SCHEMA = 1
+GOLDEN_PREFIX = "audit-class--"
+LOG_PREFIX = "audit--"
+
+
+def sanitize_id(engine_id: str) -> str:
+    """Engine ids become manifest-key components; keep them path-safe."""
+    return re.sub(r"[^A-Za-z0-9._-]+", "-", engine_id).strip("-") or "engine"
+
+
+def golden_key(class_key: str, fingerprint: str, backend_id: str) -> str:
+    digest = hashlib.sha256(
+        f"{class_key}|{fingerprint}|{backend_id}".encode()).hexdigest()
+    return f"{GOLDEN_PREFIX}{digest[:20]}"
+
+
+def log_key(engine_id: str) -> str:
+    return f"{LOG_PREFIX}{sanitize_id(engine_id)}"
+
+
+@dataclasses.dataclass
+class AuditConfig:
+    """Knobs for one engine's live auditing (threaded from launch flags)."""
+
+    engine_id: str = "engine"
+    store: str | None = None         # fleet store URI; None = in-memory only
+    sample_every: int = 0            # every-Nth cadence (0 = off)
+    slo_ms: float | None = None      # latency SLO for headroom gating
+    slo_headroom: float = 0.5
+    seed: int = 0
+    energy_rtol: float = 0.05        # relative energy drift that alarms
+    # 0: one full drift check per class per process (later samples are
+    # lightweight log events — keeps amortized overhead tiny); N>0: a full
+    # re-check every N samples of that class.  Config changes always force
+    # a full check regardless.
+    recheck_every: int = 0
+    log_capacity: int = 256
+    # lightweight capture events are batched: the log flushes to the store
+    # immediately on check/alarm/error events, but only every N captures
+    # (plus a final flush at end-of-serve) — keeps the steady-state sampled
+    # path at ring-append cost instead of a store write per sample
+    flush_every: int = 8
+    store_timeout: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftAlarm:
+    """One confirmed per-class drift, carrying the diagnosis."""
+
+    class_key: str
+    energy_delta: float              # (fresh - golden) / golden, signed
+    diagnosis_kind: str | None       # Diagnosis.kind, when one was produced
+    detail: str
+    degraded: bool                   # check ran on a degradation-ladder rung
+
+    def to_payload(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class EngineAuditor:
+    """Live-audit state machine for one engine (see module docstring).
+
+    ``probe_factory(rc)`` must return ``(fn, args, config)`` — the
+    canonical, seeded probe for a request class.  It is engine-supplied
+    (:meth:`repro.serve.engine.ServeEngine._audit_probe`) so the auditor
+    stays model-agnostic.
+    """
+
+    def __init__(self, probe_factory: Callable[[RequestClass], tuple],
+                 fingerprint: str, cfg: AuditConfig | None = None, *,
+                 session: Session | None = None):
+        self.cfg = cfg if cfg is not None else AuditConfig()
+        self.probe_factory = probe_factory
+        self.fingerprint = fingerprint
+        if session is not None:
+            self.session = session
+        elif self.cfg.store is not None:
+            self.session = Session(store=self.cfg.store, store_writable=True)
+        else:
+            self.session = Session()
+        self.sampler = Sampler(every=self.cfg.sample_every,
+                               slo_ms=self.cfg.slo_ms,
+                               headroom=self.cfg.slo_headroom,
+                               seed=self.cfg.seed)
+        self.log = AuditLog(capacity=self.cfg.log_capacity)
+        self.alarms: list[DriftAlarm] = []
+        self.flush_failures = 0
+        self.last_error: str | None = None
+        # per-class lineage: samples since the last full drift check, and
+        # in-memory goldens for store-less operation
+        self._since_check: dict[str, int] = {}
+        self._local_goldens: dict[str, dict] = {}
+        self._unflushed = 0
+
+    # -- scheduling ---------------------------------------------------------
+    def observe(self, phase: str, batch: int, seq_len: int, *,
+                latency_s: float | None = None
+                ) -> tuple[RequestClass, SampleDecision]:
+        """Classify one engine step and advance its sample schedule."""
+        rc = classify(phase, batch, seq_len)
+        dec = self.sampler.observe(rc.key, latency_s=latency_s,
+                                   fingerprint=self.fingerprint)
+        return rc, dec
+
+    # -- the sampled path (runs inside the engine's watchdog boundary) ------
+    def sample(self, rc: RequestClass, reason: str, *,
+               latency_s: float | None = None) -> AuditEvent:
+        """Take one scheduled sample: a full drift check when due, a
+        lightweight log event otherwise.  Check/alarm/error events flush
+        the log immediately; captures are batched per ``flush_every``."""
+        due = self._since_check.get(rc.key)
+        full = (due is None                          # first sample of class
+                or reason == "config_change"         # redeploy: check now
+                or (self.cfg.recheck_every > 0
+                    and due + 1 >= self.cfg.recheck_every))
+        try:
+            if full:
+                ev = self._drift_check(rc, reason, latency_s=latency_s)
+                self._since_check[rc.key] = 0
+            else:
+                ev = self.log.record(rc.key, reason, "capture",
+                                     latency_s=latency_s)
+                self._since_check[rc.key] = due + 1
+        except Exception as e:
+            self.last_error = f"{type(e).__name__}: {e}"
+            ev = self.log.record(rc.key, reason, "error",
+                                 latency_s=latency_s,
+                                 detail=self.last_error)
+            self.flush()
+            raise
+        self._unflushed += 1
+        if ev.kind != "capture" or \
+                self._unflushed >= max(1, self.cfg.flush_every):
+            self.flush()
+        return ev
+
+    def _drift_check(self, rc: RequestClass, reason: str, *,
+                     latency_s: float | None) -> AuditEvent:
+        fn, args, config = self.probe_factory(rc)
+        art = self.session.capture(
+            fn, args, name=f"audit:{rc.key}", config=config,
+            extra_meta={"audit_class": rc.key,
+                        "audit_fingerprint": self.fingerprint})
+        golden, elected = self._load_or_elect_golden(rc, art)
+
+        if elected or golden["artifact_key"] == art.key:
+            # healthy fast path: the fresh capture IS the golden lineage
+            # (content-addressed identity) — zero drift by construction
+            return self.log.record(rc.key, reason, "check",
+                                   latency_s=latency_s, energy_delta=0.0,
+                                   degraded=bool(art.meta.get("degraded")))
+
+        report = self._compare_to_golden(golden, art)
+        fresh_j = art.profile.total_energy_j
+        golden_j = float(golden.get("energy_j", report.total_energy_a_j))
+        delta = ((fresh_j - golden_j) / golden_j if golden_j > 0
+                 else (0.0 if fresh_j <= 0 else float("inf")))
+        fresh_waste = [f for f in report.waste_findings
+                       if f.wasteful_side == "B"]
+        regressed = (fresh_j > golden_j
+                     and rel_diff(fresh_j, golden_j) > self.cfg.energy_rtol)
+        alarming = bool(fresh_waste) or regressed
+        if not alarming:
+            return self.log.record(rc.key, reason, "check",
+                                   latency_s=latency_s, energy_delta=delta,
+                                   degraded=report.is_degraded)
+
+        diag = next((f.diagnosis for f in fresh_waste
+                     if f.diagnosis is not None), None)
+        detail = (diag.detail if diag is not None else
+                  f"modeled energy regressed {delta:+.1%} vs golden "
+                  f"(rtol {self.cfg.energy_rtol:g})")
+        alarm = DriftAlarm(class_key=rc.key, energy_delta=delta,
+                           diagnosis_kind=diag.kind if diag else None,
+                           detail=detail, degraded=report.is_degraded)
+        self.alarms.append(alarm)
+        return self.log.record(rc.key, reason, "alarm",
+                               latency_s=latency_s, energy_delta=delta,
+                               diagnosis_kind=alarm.diagnosis_kind,
+                               detail=detail, degraded=report.is_degraded)
+
+    def _compare_to_golden(self, golden: dict,
+                           art) -> Report:
+        golden_art = self.session.load(golden["artifact_key"])
+        # the drift check must never mutate the golden record, so compare
+        # golden as side A / fresh as side B and skip persisting phase-2
+        # values back (the fresh artifact was already saved by capture)
+        return self.session.compare(golden_art, art, persist=False)
+
+    # -- golden election ----------------------------------------------------
+    def _golden_key(self, rc: RequestClass) -> str:
+        return golden_key(rc.key, self.fingerprint, self.session.backend.id)
+
+    def _load_or_elect_golden(self, rc: RequestClass,
+                              art) -> tuple[dict, bool]:
+        """Return (golden record, whether this call elected it)."""
+        record = {"schema": GOLDEN_SCHEMA, "class_key": rc.key,
+                  "fingerprint": self.fingerprint,
+                  "backend_id": self.session.backend.id,
+                  "artifact_key": art.key,
+                  "energy_j": art.profile.total_energy_j}
+        key = self._golden_key(rc)
+        store = self.session.store
+        if store is None:
+            golden = self._local_goldens.setdefault(key, record)
+            return golden, golden is record
+        try:
+            if store.backend.has_manifest(key):
+                return store.backend.read_manifest(key), False
+            store.backend.write_manifest(key, record)
+            return record, True
+        except (StoreError, OSError) as e:
+            # store unreachable: fall back to the in-process golden so the
+            # check still runs; declared via last_error, never raises
+            self.last_error = f"golden election degraded: " \
+                              f"{type(e).__name__}: {e}"
+            golden = self._local_goldens.setdefault(key, record)
+            return golden, golden is record
+
+    # -- persistence --------------------------------------------------------
+    def flush(self) -> bool:
+        """Write the whole audit log to the fleet store.  Returns False
+        (and keeps every event in memory) when the store is absent or the
+        write fails — the next flush retries with nothing lost."""
+        store = self.session.store
+        if store is None:
+            return False
+        payload = self.to_payload()
+        try:
+            store.backend.write_manifest(log_key(self.cfg.engine_id), payload)
+            self._unflushed = 0
+            return True
+        except (StoreError, OSError) as e:
+            self.flush_failures += 1
+            self.last_error = f"log flush failed: {type(e).__name__}: {e}"
+            return False
+
+    def to_payload(self) -> dict:
+        """The engine's ``audit--`` manifest body (JSON-safe)."""
+        return {"schema": GOLDEN_SCHEMA,
+                "engine_id": self.cfg.engine_id,
+                "fingerprint": self.fingerprint,
+                "sampler": self.sampler.to_payload(),
+                "log": self.log.to_payload(),
+                "alarms": [a.to_payload() for a in self.alarms],
+                "flush_failures": self.flush_failures,
+                "last_error": self.last_error}
+
+    def summary(self) -> dict[str, Any]:
+        """Compact JSON-safe health summary for ``ServeEngine.health()``."""
+        return {"classes": sorted(self.sampler.counts),
+                "observed": sum(self.sampler.counts.values()),
+                "sampled": sum(self.sampler.sampled.values()),
+                "slo_skipped": self.sampler.slo_skipped,
+                "alarms": self.log.alarm_count(),
+                "flush_failures": self.flush_failures,
+                "last_error": self.last_error}

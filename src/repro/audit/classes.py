@@ -1,0 +1,79 @@
+"""Request-class keying: phase × batch bucket × sequence-length bucket.
+
+A serving engine never audits individual requests — it audits *classes* of
+traffic, each with its own golden baseline and artifact lineage.  A class
+is (phase, batch bucket, sequence-length bucket) with power-of-two buckets,
+so an engine serving mixed prompt lengths accumulates a handful of stable
+classes instead of one artifact key per request shape.
+
+The class key doubles as the canonical-probe seed (the auditor derives a
+deterministic probe input from it), so every engine in a fleet that sees
+the same class under the same config captures the *same* content-addressed
+artifact — the property that makes cross-engine golden sharing and
+conditional-put convergence work.  Key schema (docs/serving.md)::
+
+    <phase>/b<batch_floor>/s<seq_lo>-<seq_hi>     e.g.  decode/b4/s32-63
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PHASES = ("prefill", "decode")
+
+_KEY_RE = re.compile(r"^(prefill|decode)/b(\d+)/s(\d+)-(\d+)$")
+
+
+def pow2_bucket(n: int) -> tuple[int, int]:
+    """The power-of-two bucket ``[lo, 2*lo - 1]`` containing ``n >= 1``."""
+    n = max(1, int(n))
+    lo = 1
+    while lo * 2 <= n:
+        lo *= 2
+    return lo, lo * 2 - 1
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class RequestClass:
+    """One traffic class: the unit of golden baselines and drift alarms."""
+
+    phase: str                       # 'prefill' | 'decode'
+    batch: int                       # batch bucket floor (power of two)
+    seq_lo: int                      # sequence-length bucket [lo, hi]
+    seq_hi: int
+
+    def __post_init__(self):
+        if self.phase not in PHASES:
+            raise ValueError(f"phase must be one of {PHASES}, "
+                             f"got {self.phase!r}")
+
+    @property
+    def key(self) -> str:
+        return f"{self.phase}/b{self.batch}/s{self.seq_lo}-{self.seq_hi}"
+
+    # canonical probe shape: the bucket floor on both axes, so every
+    # request that lands in this class maps to one deterministic capture
+    @property
+    def probe_batch(self) -> int:
+        return self.batch
+
+    @property
+    def probe_seq_len(self) -> int:
+        return self.seq_lo
+
+    @classmethod
+    def from_key(cls, key: str) -> "RequestClass":
+        m = _KEY_RE.match(key)
+        if m is None:
+            raise ValueError(f"malformed request-class key {key!r} "
+                             "(want <phase>/b<batch>/s<lo>-<hi>)")
+        return cls(phase=m.group(1), batch=int(m.group(2)),
+                   seq_lo=int(m.group(3)), seq_hi=int(m.group(4)))
+
+
+def classify(phase: str, batch: int, seq_len: int) -> RequestClass:
+    """Map one observed engine step onto its request class."""
+    blo, _ = pow2_bucket(batch)
+    slo, shi = pow2_bucket(seq_len)
+    return RequestClass(phase=phase, batch=blo, seq_lo=slo, seq_hi=shi)

@@ -1,0 +1,138 @@
+"""Fleet aggregation: one dashboard over many engines sharing one store.
+
+Every engine flushes its audit log to a reserved ``audit--<engine_id>``
+manifest and elects per-class goldens as ``audit-class--<digest>``
+manifests (see :mod:`repro.audit.auditor`).  ``fleet_status`` walks a
+store — local, ``file://``, or a writable http mirror — and folds those
+records into a cross-engine view: per-class energy trend, drift alarms,
+sample counts, and each engine's degradation rungs.  This is the data
+behind ``python -m repro.cli fleet status --store ...``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.audit.auditor import GOLDEN_PREFIX, LOG_PREFIX
+from repro.core.store import Store, open_store
+
+
+def _open(store, *, timeout: float | None = None,) -> Store:
+    if isinstance(store, Store):
+        return store
+    return open_store(str(store), timeout=timeout)
+
+
+def fleet_status(store, *, timeout: float | None = None) -> dict[str, Any]:
+    """Aggregate every engine's audit state in ``store`` (URI or Store)."""
+    backend = _open(store, timeout=timeout)
+    engines: list[dict[str, Any]] = []
+    goldens: list[dict[str, Any]] = []
+    classes: dict[str, dict[str, Any]] = {}
+    n_artifacts = 0
+
+    def cls(key: str) -> dict[str, Any]:
+        return classes.setdefault(key, {
+            "observed": 0, "sampled": 0, "checks": 0, "alarms": 0,
+            "engines": [], "energy_j": None, "energy_deltas": [],
+            "diagnosis_kinds": [], "degraded": 0})
+
+    for key in sorted(backend.manifest_keys()):
+        if key.startswith(GOLDEN_PREFIX):
+            rec = backend.read_manifest(key)
+            goldens.append(rec)
+            c = cls(rec.get("class_key", "?"))
+            c["energy_j"] = rec.get("energy_j")
+            continue
+        if not key.startswith(LOG_PREFIX):
+            n_artifacts += 1
+            continue
+
+        payload = backend.read_manifest(key)
+        sampler = payload.get("sampler", {})
+        log = payload.get("log", {})
+        alarms = payload.get("alarms", [])
+        engines.append({
+            "engine_id": payload.get("engine_id", key[len(LOG_PREFIX):]),
+            "fingerprint": payload.get("fingerprint", ""),
+            "observed": sum(sampler.get("counts", {}).values()),
+            "sampled": sum(sampler.get("sampled", {}).values()),
+            "slo_skipped": sampler.get("slo_skipped", 0),
+            "alarms": len(alarms),
+            "flush_failures": payload.get("flush_failures", 0),
+            "last_error": payload.get("last_error"),
+            "degraded_events": sum(1 for ev in log.get("events", ())
+                                   if ev.get("degraded")),
+        })
+        for ck, n in sampler.get("counts", {}).items():
+            cls(ck)["observed"] += n
+        for ck, n in sampler.get("sampled", {}).items():
+            c = cls(ck)
+            c["sampled"] += n
+            if payload.get("engine_id") not in c["engines"]:
+                c["engines"].append(payload.get("engine_id"))
+        # the ring keeps recent events in seq order: fold them into the
+        # per-class energy trend (deltas vs that class's golden)
+        for ev in log.get("events", ()):
+            c = cls(ev.get("class_key", "?"))
+            if ev.get("kind") in ("check", "alarm"):
+                c["checks"] += 1
+                if ev.get("energy_delta") is not None:
+                    c["energy_deltas"].append(ev["energy_delta"])
+            if ev.get("kind") == "alarm":
+                c["alarms"] += 1
+                if ev.get("diagnosis_kind"):
+                    c["diagnosis_kinds"].append(ev["diagnosis_kind"])
+            if ev.get("degraded"):
+                c["degraded"] += 1
+
+    for c in classes.values():
+        deltas = c.pop("energy_deltas")
+        c["drift_last"] = deltas[-1] if deltas else None
+        c["drift_max"] = max(deltas) if deltas else None
+        c["diagnosis_kinds"] = sorted(set(c["diagnosis_kinds"]))
+        c["engines"].sort(key=str)
+    return {"store": getattr(backend, "uri", str(getattr(backend, "root",
+                                                         store))),
+            "engines": sorted(engines, key=lambda e: str(e["engine_id"])),
+            "classes": {k: classes[k] for k in sorted(classes)},
+            "goldens": len(goldens),
+            "artifacts": n_artifacts,
+            "total_alarms": sum(e["alarms"] for e in engines)}
+
+
+def render_fleet_status(status: dict[str, Any]) -> str:
+    lines = [f"=== Magneton fleet status: {status['store']} ===",
+             f"engines: {len(status['engines'])}   "
+             f"request classes: {len(status['classes'])}   "
+             f"goldens: {status['goldens']}   "
+             f"artifacts: {status['artifacts']}   "
+             f"alarms: {status['total_alarms']}"]
+    for e in status["engines"]:
+        flags = []
+        if e["alarms"]:
+            flags.append(f"ALARMS={e['alarms']}")
+        if e["flush_failures"]:
+            flags.append(f"flush_failures={e['flush_failures']}")
+        if e["degraded_events"]:
+            flags.append(f"degraded={e['degraded_events']}")
+        lines.append(f"-- engine {e['engine_id']}: "
+                     f"{e['observed']} observed, {e['sampled']} sampled, "
+                     f"{e['slo_skipped']} slo-skipped"
+                     + (f"   [{' '.join(flags)}]" if flags else ""))
+        if e["last_error"]:
+            lines.append(f"   last error: {e['last_error']}")
+    for key, c in status["classes"].items():
+        drift = ("n/a" if c["drift_last"] is None
+                 else f"{c['drift_last']:+.2%}")
+        energy = ("n/a" if c["energy_j"] is None
+                  else f"{c['energy_j']:.3e} J")
+        line = (f"   {key}: golden {energy}, drift {drift}, "
+                f"{c['sampled']}/{c['observed']} sampled, "
+                f"{c['checks']} checks, {c['alarms']} alarms")
+        if c["diagnosis_kinds"]:
+            line += f"  <- {', '.join(c['diagnosis_kinds'])}"
+        if c["degraded"]:
+            line += f"  [degraded x{c['degraded']}]"
+        lines.append(line)
+    return "\n".join(lines)

@@ -1,0 +1,97 @@
+"""Bounded audit log: what the engine sampled, found, and flushed.
+
+The :class:`AuditLog` is a ring buffer of :class:`AuditEvent` records —
+old events roll off, but per-class *counts* (observations, samples,
+alarms) are monotonic and survive the ring, so fleet aggregation never
+under-reports a long-running engine just because its buffer wrapped.
+
+The whole log serializes to one JSON payload and is flushed to the
+fleet store as a reserved ``audit--<engine_id>`` manifest (see
+:mod:`repro.core.store` reserved namespace).  A failed flush keeps every
+event in memory for the next attempt — samples are never dropped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterator
+
+LOG_SCHEMA = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditEvent:
+    """One sampled audit: a capture, a drift check, or an alarm."""
+
+    seq: int                         # monotonic per-engine sequence number
+    class_key: str                   # RequestClass.key
+    reason: str                      # sampler reason ('every_n', ...)
+    kind: str                        # 'capture' | 'check' | 'alarm' | 'error'
+    latency_s: float | None = None   # engine step latency that triggered it
+    energy_delta: float | None = None  # relative energy drift vs golden
+    diagnosis_kind: str | None = None  # Diagnosis.kind when kind == 'alarm'
+    detail: str = ""
+    degraded: bool = False           # capture/compare ran on a degraded rung
+
+    def to_payload(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "AuditEvent":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in payload.items() if k in fields})
+
+
+class AuditLog:
+    """Ring buffer of audit events with monotonic per-class counters."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._events: deque[AuditEvent] = deque(maxlen=self.capacity)
+        self._seq = 0
+        self.dropped = 0                       # events rolled off the ring
+        self.counts: dict[str, dict[str, int]] = {}   # class -> kind -> n
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def __iter__(self) -> Iterator[AuditEvent]:
+        return iter(self._events)
+
+    def record(self, class_key: str, reason: str, kind: str, **kw) -> AuditEvent:
+        ev = AuditEvent(seq=self._seq, class_key=class_key, reason=reason,
+                        kind=kind, **kw)
+        self._seq += 1
+        if len(self._events) == self.capacity:
+            self.dropped += 1
+        self._events.append(ev)
+        per = self.counts.setdefault(class_key, {})
+        per[kind] = per.get(kind, 0) + 1
+        return ev
+
+    def alarms(self) -> list[AuditEvent]:
+        return [ev for ev in self._events if ev.kind == "alarm"]
+
+    def alarm_count(self) -> int:
+        """Total alarms ever recorded (monotonic, survives ring rollover)."""
+        return sum(per.get("alarm", 0) for per in self.counts.values())
+
+    def to_payload(self) -> dict:
+        return {"schema": LOG_SCHEMA, "capacity": self.capacity,
+                "seq": self._seq, "dropped": self.dropped,
+                "counts": {k: dict(v) for k, v in self.counts.items()},
+                "events": [ev.to_payload() for ev in self._events]}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "AuditLog":
+        log = cls(capacity=int(payload.get("capacity", 256)))
+        for ev in payload.get("events", ()):
+            log._events.append(AuditEvent.from_payload(ev))
+        log._seq = int(payload.get("seq", len(log._events)))
+        log.dropped = int(payload.get("dropped", 0))
+        log.counts = {k: dict(v)
+                      for k, v in payload.get("counts", {}).items()}
+        return log

@@ -1,0 +1,99 @@
+"""Deterministic sampling policies for live audit captures.
+
+Three triggers, all seeded/deterministic so tests can replay a traffic
+trace and get the identical sample schedule:
+
+* **every-Nth** — per-class counters fire every ``every`` observations.
+  Each class gets a seeded phase offset in ``[0, every)`` so a fleet's
+  classes don't all audit on the same wave.
+* **latency-SLO headroom** — with ``slo_ms`` set, a cadence firing is only
+  *taken* when the observed step latency leaves headroom under the SLO
+  (``latency <= headroom * slo``): audits piggyback on quiet periods and
+  never pile onto a request already near its deadline.  Pressured firings
+  are counted (``slo_skipped``) and the cadence moves on — deterministic,
+  no rescheduling.  With ``every == 0`` the headroom test itself is the
+  trigger, rate-limited by a per-class refractory gap.
+* **forced on config change** — a class whose engine-config fingerprint
+  changed since its last observation fires immediately, regardless of
+  cadence: a redeploy must be drift-checked now, not ``N`` requests later.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+REASONS = ("every_n", "slo_headroom", "config_change")
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleDecision:
+    sample: bool
+    reason: str | None = None         # one of REASONS when sample is True
+
+
+class Sampler:
+    """Per-class deterministic sample scheduling (see module docstring)."""
+
+    def __init__(self, every: int = 0, slo_ms: float | None = None,
+                 headroom: float = 0.5, seed: int = 0, slo_gap: int = 32):
+        if every < 0:
+            raise ValueError(f"every must be >= 0, got {every}")
+        self.every = int(every)
+        self.slo_ms = slo_ms
+        self.headroom = float(headroom)
+        self.seed = int(seed)
+        self.slo_gap = int(slo_gap)
+        self.counts: dict[str, int] = {}       # observations per class
+        self.sampled: dict[str, int] = {}      # taken samples per class
+        self.slo_skipped = 0                   # cadence firings under pressure
+        self._fingerprints: dict[str, str] = {}
+        self._last_sample_at: dict[str, int] = {}
+
+    def _phase(self, class_key: str) -> int:
+        """Seeded per-class offset so classes don't fire in lockstep."""
+        h = hashlib.sha256(f"{self.seed}:{class_key}".encode()).digest()
+        return int.from_bytes(h[:4], "big") % self.every
+
+    def _headroom_ok(self, latency_s: float | None) -> bool:
+        if self.slo_ms is None or latency_s is None:
+            return True
+        return latency_s * 1e3 <= self.headroom * self.slo_ms
+
+    def _take(self, class_key: str, reason: str) -> SampleDecision:
+        self.sampled[class_key] = self.sampled.get(class_key, 0) + 1
+        self._last_sample_at[class_key] = self.counts[class_key]
+        return SampleDecision(True, reason)
+
+    def observe(self, class_key: str, *, latency_s: float | None = None,
+                fingerprint: str | None = None) -> SampleDecision:
+        """Advance this class's schedule by one observation and decide."""
+        n = self.counts.get(class_key, 0)
+        self.counts[class_key] = n + 1
+
+        if fingerprint is not None:
+            prev = self._fingerprints.get(class_key)
+            self._fingerprints[class_key] = fingerprint
+            if prev is not None and prev != fingerprint:
+                return self._take(class_key, "config_change")
+
+        if self.every > 0:
+            if n % self.every != self._phase(class_key):
+                return SampleDecision(False)
+            if not self._headroom_ok(latency_s):
+                self.slo_skipped += 1
+                return SampleDecision(False)
+            return self._take(class_key, "every_n")
+
+        if self.slo_ms is not None:
+            since = n - self._last_sample_at.get(class_key, -self.slo_gap)
+            if since >= self.slo_gap and self._headroom_ok(latency_s):
+                return self._take(class_key, "slo_headroom")
+        return SampleDecision(False)
+
+    def to_payload(self) -> dict:
+        """JSON-safe snapshot for audit manifests / ``health()``."""
+        return {"every": self.every, "slo_ms": self.slo_ms,
+                "headroom": self.headroom, "seed": self.seed,
+                "counts": dict(self.counts), "sampled": dict(self.sampled),
+                "slo_skipped": self.slo_skipped}

@@ -12,6 +12,7 @@ Drives the Session/artifact API (core/session.py) from the shell::
   python -m repro.cli artifacts push --to file:///mnt/nfs/magneton
   python -m repro.cli artifacts pull --from http://mirror:8000
   python -m repro.cli artifacts migrate             # legacy .npz -> v3
+  python -m repro.cli fleet status --store URI      # live-audit dashboard
 
 Candidate SPECs are either zoo references ``<case-id>:<ineff|eff>``
 (resolved through the registry in zoo/cases.py and captured on the case's
@@ -317,6 +318,29 @@ def cmd_artifacts(args) -> int:
     return 0
 
 
+def cmd_fleet(args) -> int:
+    from repro.audit.fleet import fleet_status, render_fleet_status
+    from repro.core.store import StoreError
+
+    if args.store is None:
+        raise SystemExit("error: fleet status needs --store URI "
+                         "(the shared store your engines write to)")
+    try:
+        status = fleet_status(args.store,
+                              timeout=getattr(args, "store_timeout", None))
+    except StoreError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if args.json:
+        Path(args.json).write_text(json.dumps(status, indent=2,
+                                              sort_keys=True))
+        print(f"wrote {args.json}")
+    print(render_fleet_status(status))
+    if args.fail_on_alarm and status["total_alarms"]:
+        return 1
+    return 0
+
+
 def _baseline_cases(names) -> list:
     if not names:
         return zoo.list_cases()
@@ -467,6 +491,23 @@ def build_parser() -> argparse.ArgumentParser:
                      help="leave the source .npz files in place")
     pam.add_argument("key", nargs="*", metavar="KEY",
                      help="keys to migrate (default: every legacy entry)")
+
+    pf = sub.add_parser(
+        "fleet", help="cross-engine audit dashboard over a shared store")
+    pfsub = pf.add_subparsers(dest="action", required=True)
+    pfs = pfsub.add_parser(
+        "status", help="per-class energy trend, drift alarms, sample counts "
+                       "and degradation rungs across engines")
+    pfs.add_argument("--store", default=None, metavar="URI",
+                     help="the shared fleet store (path, file:// or "
+                          "http(s):// URI) engines write audit state to")
+    pfs.add_argument("--store-timeout", type=float, default=None,
+                     metavar="SECONDS")
+    pfs.add_argument("--json", default=None,
+                     help="also write the aggregated status JSON")
+    pfs.add_argument("--fail-on-alarm", action="store_true",
+                     help="exit 1 when any engine reports a drift alarm")
+    pfs.set_defaults(fn=cmd_fleet)
 
     pb = sub.add_parser(
         "baseline", help="golden energy baselines: record / check drift")

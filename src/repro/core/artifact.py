@@ -52,7 +52,8 @@ from repro.core.energy import EnergyProfile, OpEnergy
 from repro.core.graph import OpGraph, OpNode, TensorEdge
 from repro.core.hlo_costs import PerOpCosts
 from repro.core.store import (LocalStore, RemoteStore, Store, StoreError,
-                              open_store, chunk_digest, split_chunks)
+                              is_reserved_manifest, open_store, chunk_digest,
+                              split_chunks)
 from repro.core.tensor_match import TensorSignature
 
 # v3 split the monolithic per-key .npz into a JSON manifest + sha256-chunked
@@ -722,17 +723,21 @@ class ArtifactStore:
     @classmethod
     def from_uri(cls, uri: "str | Path | ArtifactStore | None",
                  *, store_timeout: float | None = None,
+                 writable: bool = False,
                  **kwargs) -> "ArtifactStore":
         """``--store`` resolution: plain paths open a LocalStore-backed
         store; ``file://``/``http(s)://`` URIs open a RemoteStore-backed
-        one (http mirrors are readonly).  ``store_timeout`` bounds http
-        reads (seconds; the ``--store-timeout`` CLI flag)."""
+        one.  http mirrors are readonly unless ``writable`` is set, which
+        enables the conditional-put write dialect against servers that
+        support it (S3/GCS-style; see docs/serving.md).  ``store_timeout``
+        bounds http reads (seconds; the ``--store-timeout`` CLI flag)."""
         if isinstance(uri, ArtifactStore):
             return uri
         if uri is None:
             return cls(store_timeout=store_timeout, **kwargs)
         if "://" in str(uri):
-            return cls(backend=RemoteStore(str(uri), timeout=store_timeout),
+            return cls(backend=RemoteStore(str(uri), timeout=store_timeout,
+                                           writable=writable),
                        **kwargs)
         return cls(uri, **kwargs)
 
@@ -768,8 +773,11 @@ class ArtifactStore:
                 or self._legacy_path(key) is not None)
 
     def keys(self) -> list[str]:
-        return sorted(set(self.backend.manifest_keys())
-                      | set(self.legacy_keys()))
+        # reserved (audit-state) manifests share the transport but are not
+        # CandidateArtifact entries; repro.audit.fleet reads them directly
+        keys = {k for k in self.backend.manifest_keys()
+                if not is_reserved_manifest(k)}
+        return sorted(keys | set(self.legacy_keys()))
 
     # -- save / load --------------------------------------------------------
     def save(self, artifact: CandidateArtifact,
@@ -811,8 +819,11 @@ class ArtifactStore:
 
     # -- sizes --------------------------------------------------------------
     def _chunk_refs(self, manifest: Mapping[str, Any]) -> list[str]:
+        # .get: reserved audit-state manifests have neither field and
+        # reference no chunks
         out: list[str] = []
-        for rec in list(manifest["outputs"]) + list(manifest["values"]):
+        for rec in (list(manifest.get("outputs", ()))
+                    + list(manifest.get("values", ()))):
             if rec.get("chunks"):
                 out.extend(rec["chunks"])
         return out
@@ -860,6 +871,8 @@ class ArtifactStore:
     def _refcounts(self) -> dict[str, int]:
         refs: dict[str, int] = {}
         for key in self.backend.manifest_keys():
+            if is_reserved_manifest(key):
+                continue
             try:
                 manifest = self.backend.read_manifest(key)
             except (KeyError, OSError, StoreError):
@@ -958,8 +971,11 @@ class ArtifactStore:
         chunks the destination already holds are skipped)."""
         import contextlib
 
+        # push is inherently a write: URI destinations open writable, so
+        # http(s) mirrors with conditional-put support accept the copy (a
+        # genuinely readonly server still fails typed, per-request)
         dst = dest.backend if isinstance(dest, ArtifactStore) \
-            else open_store(dest)
+            else open_store(dest, writable=True)
         todo = list(keys) if keys is not None else self.keys()
         # a key counts as legacy only while it has no v3 manifest yet —
         # `migrate --keep-legacy` leaves the npz behind, and those entries
@@ -1034,8 +1050,11 @@ class ArtifactStore:
         manifest_bytes = chunkrefs = 0
         logical_values = logical_outputs = meta_bytes = 0
         values_total = values_sketch_only = spectra_entries = 0
-        n_manifests = 0
+        n_manifests = n_audit = 0
         for key in self.backend.manifest_keys():
+            if is_reserved_manifest(key):
+                n_audit += 1
+                continue
             try:
                 manifest = self.backend.read_manifest(key)
                 msize = self.backend.manifest_bytes(key)
@@ -1079,6 +1098,7 @@ class ArtifactStore:
             + legacy_bytes
         return {
             "artifacts": n_manifests,
+            "audit_entries": n_audit,
             "legacy_npz": len(legacy),
             "manifest_bytes": manifest_bytes,
             "chunk_count": chunk_count,

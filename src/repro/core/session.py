@@ -295,12 +295,17 @@ class Session:
     # BaselineStore forces False so goldens are never silently degraded.
     allow_degraded: bool = True
     fallback_backend: EnergyBackend | None = None
+    # URI stores only: open http(s) mirrors with the conditional-put write
+    # dialect so live captures persist straight into a shared fleet store
+    # (repro.audit).  file:// and plain paths are always writable.
+    store_writable: bool = False
 
     def __post_init__(self):
         if isinstance(self.store, (str, Path)):
             # plain path -> local store; file:// and http(s):// URIs -> remote
             # mirror (a hit on either skips all instrumented execution)
-            self.store = ArtifactStore.from_uri(self.store)
+            self.store = ArtifactStore.from_uri(self.store,
+                                                writable=self.store_writable)
         elif self.store is not None and not isinstance(self.store,
                                                        ArtifactStore):
             from repro.core.store import Store

@@ -18,8 +18,13 @@ defines the transport underneath that layout:
   recorded elsewhere on first use and serves them locally afterwards.
 * :class:`RemoteStore` — URI-addressed mirror: a plain path or ``file://``
   URI (NFS-style shared filesystem, read/write) or an ``http(s)://`` base
-  URL (readonly; listing served from the ``index.json`` that
-  ``ArtifactStore.push`` maintains).
+  URL (listing served from the ``index.json`` that writers maintain).
+  http mirrors are readonly by default; opened with ``writable=True`` they
+  speak an S3/GCS-style conditional-put dialect — chunk puts are
+  create-only (``If-None-Match: *``, idempotent by content address) and
+  the shared ``index.json`` is updated by compare-and-swap on its ETag,
+  so many engines can record into one store without losing each other's
+  writes (see docs/serving.md).
 
 ``open_store(uri)`` maps a user-supplied ``--store`` value onto the right
 implementation.  Everything above this layer (dedup, refcount GC, schema
@@ -68,6 +73,13 @@ class StoreReadOnlyError(StoreError):
 
 class TransientStoreError(StoreError):
     """A failure worth retrying: flaky transport, busy mount, 5xx mirror."""
+
+
+class StorePreconditionError(StoreError):
+    """A conditional put lost its race (http 412): the object changed under
+    us.  Not transient for :class:`RetryPolicy` — blindly re-sending the
+    same stale write cannot succeed; callers must re-read and re-merge
+    (the CAS loop in :meth:`RemoteStore._cas_update_index` does)."""
 
 
 class StoreTimeoutError(TransientStoreError):
@@ -182,6 +194,19 @@ class RetryPolicy:
             f"{what} failed after {self.max_attempts} attempt(s): {last}") from last
 
 
+# Manifest keys under this prefix are not CandidateArtifact manifests but
+# audit-subsystem state (per-engine audit logs, per-class golden records —
+# repro.audit).  They ride the same manifest transport (and index.json) so
+# one shared store carries both, but ArtifactStore's artifact-shaped walks
+# (stats, entries, prune, gc refcounts) skip them.
+RESERVED_MANIFEST_PREFIX = "audit-"
+
+
+def is_reserved_manifest(key: str) -> bool:
+    """True for non-artifact manifest keys (audit state, see above)."""
+    return key.startswith(RESERVED_MANIFEST_PREFIX)
+
+
 def chunk_digest(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
 
@@ -199,7 +224,8 @@ def _fresh_counters() -> dict[str, int]:
             "chunk_writes": 0, "chunk_bytes_written": 0,
             "chunk_dedup_hits": 0,
             "upstream_manifest_reads": 0, "upstream_chunk_reads": 0,
-            "retries": 0, "chunks_quarantined": 0, "verify_failures": 0}
+            "retries": 0, "chunks_quarantined": 0, "verify_failures": 0,
+            "index_cas_conflicts": 0}
 
 
 @runtime_checkable
@@ -439,17 +465,34 @@ class RemoteStore:
 
     * plain path / ``file://`` — NFS-style shared directory, read/write;
       the same on-disk layout as :class:`LocalStore`.
-    * ``http(s)://`` — readonly mirror of that layout; ``manifest_keys``
-      comes from the ``index.json`` that ``ArtifactStore.push`` writes.
+    * ``http(s)://`` — mirror of that layout; ``manifest_keys`` comes from
+      the ``index.json`` that writers maintain.  Readonly by default;
+      with ``writable=True`` writes go over S3/GCS-style conditional
+      puts: chunks are created with ``If-None-Match: *`` (a lost race
+      means another writer already published the identical bytes — content
+      addressing makes that a dedup hit, not a conflict), manifests are
+      last-writer-wins (same-key manifests describe the same capture), and
+      the shared ``index.json`` listing is updated by a compare-and-swap
+      loop on its ETag so concurrent writers merge instead of clobbering.
     """
 
+    # bound on index.json CAS round-trips per write before the contention
+    # is surfaced as a (retryable) typed error.  CAS races are lock-free —
+    # every lost round means some other writer's update landed — so the
+    # bound must exceed the foreign progress one call can plausibly
+    # observe, not just a retry count
+    _CAS_ATTEMPTS = 32
+
     def __init__(self, uri: str, timeout: float | None = None,
-                 retry: "RetryPolicy | None" = None):
+                 retry: "RetryPolicy | None" = None,
+                 writable: bool = False):
         self.uri = str(uri)
         parsed = urlparse(self.uri)
         self._http = parsed.scheme in ("http", "https")
-        self.readonly = self._http
+        self.readonly = self._http and not writable
         self.counters = _fresh_counters()
+        self._pending_index_adds: set[str] = set()
+        self._pending_index_removes: set[str] = set()
         self.retry = retry if retry is not None else RetryPolicy()
         if timeout is None:
             timeout = float(os.environ.get(_TIMEOUT_ENV,
@@ -471,40 +514,77 @@ class RemoteStore:
             self._fs = _FsLayout(self.root)
 
     # -- http plumbing ------------------------------------------------------
-    def _get_once(self, rel: str) -> bytes | None:
+    def _request_once(self, method: str, rel: str,
+                      data: bytes | None = None,
+                      headers: dict[str, str] | None = None
+                      ) -> tuple[bytes | None, str | None]:
+        """One http round-trip; returns ``(body, etag)``, ``(None, None)``
+        on 404.  Maps transport failures onto the store error taxonomy:
+        412 → :class:`StorePreconditionError` (conditional put lost its
+        race), 403/405 on a write → :class:`StoreReadOnlyError` (the
+        server genuinely refuses writes), 408/429/5xx and timeouts →
+        transient."""
         import socket
         from urllib.error import HTTPError, URLError
-        from urllib.request import urlopen
+        from urllib.request import Request, urlopen
+        req = Request(f"{self._base}/{rel}", data=data, method=method,
+                      headers=dict(headers or {}))
         try:
-            with urlopen(f"{self._base}/{rel}", timeout=self.timeout) as r:
-                return r.read()
+            with urlopen(req, timeout=self.timeout) as r:
+                return r.read(), r.headers.get("ETag")
         except HTTPError as e:
             if e.code == 404:
-                return None
+                return None, None
+            if e.code == 412:
+                raise StorePreconditionError(
+                    f"remote store {self.uri}: conditional {method} {rel} "
+                    "lost its race (http 412)") from e
+            if e.code in (403, 405) and method in ("PUT", "DELETE"):
+                raise StoreReadOnlyError(
+                    f"remote store {self.uri} rejected {method} {rel} "
+                    f"(http {e.code}); the mirror does not accept writes"
+                ) from e
             if e.code in _TRANSIENT_HTTP_CODES:
                 raise TransientStoreError(
-                    f"remote store {self.uri}: http {e.code} on {rel}") from e
+                    f"remote store {self.uri}: http {e.code} on "
+                    f"{method} {rel}") from e
             raise
         except socket.timeout as e:
             raise StoreTimeoutError(
-                f"remote store {self.uri}: {rel} timed out "
+                f"remote store {self.uri}: {method} {rel} timed out "
                 f"after {self.timeout:g}s") from e
         except URLError as e:
             if isinstance(e.reason, (socket.timeout, TimeoutError)):
                 raise StoreTimeoutError(
-                    f"remote store {self.uri}: {rel} timed out "
+                    f"remote store {self.uri}: {method} {rel} timed out "
                     f"after {self.timeout:g}s") from e
             raise TransientStoreError(
                 f"remote store {self.uri} unreachable: {e}") from e
+
+    def _get_once(self, rel: str) -> bytes | None:
+        return self._request_once("GET", rel)[0]
 
     def _get(self, rel: str) -> bytes | None:
         return self.retry.call(lambda: self._get_once(rel),
                                what=f"{self.uri}/{rel}",
                                counters=self.counters)
 
+    def _put(self, rel: str, data: bytes,
+             headers: dict[str, str] | None = None) -> None:
+        """PUT with transient-error retry.  Precondition failures (412) are
+        not retried here — they need a re-read, which the caller owns."""
+        self.retry.call(lambda: self._request_once("PUT", rel, data, headers),
+                        what=f"PUT {self.uri}/{rel}", counters=self.counters)
+
+    def _delete(self, rel: str) -> None:
+        self.retry.call(lambda: self._request_once("DELETE", rel),
+                        what=f"DELETE {self.uri}/{rel}",
+                        counters=self.counters)
+
     def _deny_write(self) -> None:
         raise StoreReadOnlyError(
-            f"store {self.uri} is readonly (http mirror); push from a "
+            f"store {self.uri} is readonly (http mirror); open it with "
+            "writable=True for a conditional-put server, or push from a "
             "writable store instead")
 
     # -- manifests ----------------------------------------------------------
@@ -534,14 +614,26 @@ class RemoteStore:
 
     def write_manifest(self, key: str, payload: dict) -> None:
         if self._fs is None:
-            self._deny_write()
+            if self.readonly:
+                self._deny_write()
+            # last-writer-wins is safe for the manifest object itself:
+            # manifest keys are content-derived, so two writers racing on
+            # one key are publishing descriptions of the same capture
+            self._put(f"manifests/{key}.json", json.dumps(payload).encode())
+            self.counters["manifest_writes"] += 1
+            self._index_changed(add={key})
+            return
         self.counters["manifest_writes"] += 1
         _atomic_write(self._fs.manifest_path(key), json.dumps(payload).encode())
         self._update_index()
 
     def delete_manifest(self, key: str) -> None:
         if self._fs is None:
-            self._deny_write()
+            if self.readonly:
+                self._deny_write()
+            self._delete(f"manifests/{key}.json")
+            self._index_changed(remove={key})
+            return
         self._fs.manifest_path(key).unlink(missing_ok=True)
         self._update_index()
 
@@ -568,7 +660,8 @@ class RemoteStore:
 
     def bulk(self):
         """Context manager deferring the ``index.json`` rewrite to exit —
-        one directory scan per bulk transfer instead of one per manifest."""
+        one directory scan (fs) / one CAS round (http) per bulk transfer
+        instead of one per manifest."""
         import contextlib
 
         @contextlib.contextmanager
@@ -578,8 +671,16 @@ class RemoteStore:
                 yield self
             finally:
                 self._bulk_depth -= 1
-                if self._bulk_depth == 0 and self._fs is not None:
-                    self._update_index(force=True)
+                if self._bulk_depth == 0:
+                    if self._fs is not None:
+                        self._update_index(force=True)
+                    elif (self._pending_index_adds
+                          or self._pending_index_removes):
+                        adds = set(self._pending_index_adds)
+                        removes = set(self._pending_index_removes)
+                        self._pending_index_adds.clear()
+                        self._pending_index_removes.clear()
+                        self._cas_update_index(add=adds, remove=removes)
         return _bulk()
 
     def _update_index(self, force: bool = False) -> None:
@@ -589,6 +690,58 @@ class RemoteStore:
         payload = {"manifests": self._fs.manifest_keys()}
         _atomic_write(self.root / _INDEX_NAME,
                       json.dumps(payload, indent=1).encode())
+
+    def _index_changed(self, add: set[str] = frozenset(),
+                       remove: set[str] = frozenset()) -> None:
+        """Route an http index delta: defer inside bulk(), else CAS now."""
+        if self._bulk_depth > 0:
+            self._pending_index_adds |= set(add) - set(remove)
+            self._pending_index_removes |= set(remove)
+            self._pending_index_adds -= set(remove)
+            return
+        self._cas_update_index(add=add, remove=remove)
+
+    def _cas_update_index(self, add: set[str] = frozenset(),
+                          remove: set[str] = frozenset()) -> None:
+        """Compare-and-swap merge of this writer's delta into ``index.json``.
+
+        Read the current listing with its ETag, merge (set union/difference
+        — each writer only ever contributes its own keys, so merges from
+        any interleaving converge to the same sorted list), then PUT back
+        conditionally: ``If-Match: <etag>`` against the copy we read, or
+        ``If-None-Match: *`` when the index does not exist yet.  A 412
+        means another writer won the slot; re-read and re-merge.  Bounded
+        by ``_CAS_ATTEMPTS``; persistent contention surfaces as a
+        :class:`TransientStoreError` (the caller's write itself landed —
+        only the listing update should be retried)."""
+        for _ in range(self._CAS_ATTEMPTS):
+            body, etag = self.retry.call(
+                lambda: self._request_once("GET", _INDEX_NAME),
+                what=f"{self.uri}/{_INDEX_NAME}", counters=self.counters)
+            if body is None:
+                current: list[str] = []
+                cond = {"If-None-Match": "*"}
+            else:
+                current = list(json.loads(body.decode()).get("manifests", []))
+                # no ETag from the server: unconditional replace is the
+                # best available (still read-merge-write, just unfenced)
+                cond = {"If-Match": etag} if etag else {}
+            merged = sorted((set(current) | set(add)) - set(remove))
+            if body is not None and merged == sorted(set(current)):
+                return                       # already up to date
+            payload = json.dumps({"manifests": merged}, indent=1).encode()
+            try:
+                self._put(_INDEX_NAME, payload, cond)
+                return
+            except StorePreconditionError:
+                self.counters["index_cas_conflicts"] += 1
+                # brief yield so racing writers interleave instead of
+                # re-colliding in lock-step (no-op sleep under test)
+                self.retry.sleep(self.retry.base_delay_s)
+                continue
+        raise TransientStoreError(
+            f"index.json on {self.uri} lost {self._CAS_ATTEMPTS} CAS races; "
+            "the manifest write itself landed — retry to repair the listing")
 
     # -- chunks -------------------------------------------------------------
     def has_chunk(self, digest: str) -> bool:
@@ -629,7 +782,21 @@ class RemoteStore:
 
     def write_chunk(self, digest: str, data: bytes) -> None:
         if self._fs is None:
-            self._deny_write()
+            if self.readonly:
+                self._deny_write()
+            # idempotent-by-address conditional create: If-None-Match: *
+            # makes the PUT a no-op race-safely — a 412 means another
+            # writer already published this content address, and content
+            # addressing guarantees its bytes equal ours
+            try:
+                self._put(f"chunks/{digest[:2]}/{digest}", data,
+                          {"If-None-Match": "*"})
+            except StorePreconditionError:
+                self.counters["chunk_dedup_hits"] += 1
+                return
+            self.counters["chunk_writes"] += 1
+            self.counters["chunk_bytes_written"] += len(data)
+            return
         path = self._fs.chunk_path(digest)
         if path.exists():
             self.counters["chunk_dedup_hits"] += 1
@@ -640,7 +807,10 @@ class RemoteStore:
 
     def delete_chunk(self, digest: str) -> None:
         if self._fs is None:
-            self._deny_write()
+            if self.readonly:
+                self._deny_write()
+            self._delete(f"chunks/{digest[:2]}/{digest}")
+            return
         self._fs.chunk_path(digest).unlink(missing_ok=True)
 
     def chunk_keys(self) -> list[str]:
@@ -658,12 +828,14 @@ class RemoteStore:
 
 
 def open_store(uri: "str | Path | Store", *, timeout: float | None = None,
-               retry: "RetryPolicy | None" = None) -> "Store":
+               retry: "RetryPolicy | None" = None,
+               writable: bool = False) -> "Store":
     """Map a ``--store`` value onto a Store: an existing Store passes
     through; a URI (``file://``, ``http(s)://``) opens a RemoteStore; a
     plain path opens a LocalStore rooted there.  ``timeout`` (http read
-    deadline, seconds) and ``retry`` apply only when a new RemoteStore /
-    LocalStore is constructed here."""
+    deadline, seconds), ``retry`` and ``writable`` (conditional-put writes
+    against http(s) servers that support them) apply only when a new
+    RemoteStore / LocalStore is constructed here."""
     if isinstance(uri, (LocalStore, RemoteStore)):
         return uri
     if not isinstance(uri, (str, Path)):
@@ -673,5 +845,6 @@ def open_store(uri: "str | Path | Store", *, timeout: float | None = None,
         raise TypeError(f"cannot open a store from {type(uri).__name__}")
     text = str(uri)
     if "://" in text:
-        return RemoteStore(text, timeout=timeout, retry=retry)
+        return RemoteStore(text, timeout=timeout, retry=retry,
+                           writable=writable)
     return LocalStore(text, retry=retry)

@@ -158,9 +158,14 @@ class Drift:
                 f"expected {self.expected!r}, got {self.actual!r}")
 
 
-def _rel_diff(a: float, b: float) -> float:
+def rel_diff(a: float, b: float) -> float:
+    """Symmetric relative difference, safe at zero — the drift metric the
+    baseline gate and the serving-audit drift check (repro.audit) share."""
     scale = max(abs(a), abs(b), 1e-30)
     return abs(a - b) / scale
+
+
+_rel_diff = rel_diff                           # historical private alias
 
 
 def diff_baselines(expected: Baseline, actual: Baseline) -> list[Drift]:

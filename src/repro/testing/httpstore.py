@@ -1,0 +1,164 @@
+"""Loopback conditional-put HTTP store server — an S3/GCS stand-in.
+
+Serves a :class:`~repro.core.store._FsLayout` directory over http with the
+small conditional dialect the writable :class:`~repro.core.store.RemoteStore`
+speaks, so tests and CI can exercise fleet writes without a real object
+store:
+
+* ``GET``/``HEAD`` — body + a strong ``ETag`` (sha256 of the bytes, the
+  GCS-generation/S3-ETag stand-in).
+* ``PUT`` — honours ``If-None-Match: *`` (create-only; 412 if the object
+  exists) and ``If-Match: <etag>`` (replace-only-if-unchanged; 412 on
+  mismatch or absence).  The precondition check and the write happen under
+  one lock, which is exactly the atomicity S3/GCS conditional writes
+  provide.  Unconditional PUTs replace.
+* ``DELETE`` — idempotent remove.
+
+Chaos hooks: set ``server.fail_puts = n`` to have the next ``n`` PUTs
+answer 503 (a transient that :class:`~repro.core.store.RetryPolicy`
+absorbs), and ``server.fail_gets = n`` likewise for reads.
+
+Use as a context manager::
+
+    with serve_store(tmp_path / "fleet") as srv:
+        store = RemoteStore(srv.url, writable=True)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import os
+import tempfile
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from pathlib import Path
+
+
+def _etag(data: bytes) -> str:
+    return '"' + hashlib.sha256(data).hexdigest() + '"'
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "MagnetonStore/1"
+
+    def log_message(self, *args) -> None:      # keep test output quiet
+        pass
+
+    def _target(self) -> Path | None:
+        rel = self.path.lstrip("/")
+        root = self.server.root
+        if not rel:
+            return None
+        path = (root / rel).resolve()
+        if root.resolve() not in path.parents and path != root.resolve():
+            return None                        # traversal attempt
+        return path
+
+    def _deny(self, code: int) -> None:
+        self.send_response(code)
+        self.send_header("Content-Length", "0")
+        self.end_headers()
+
+    def do_GET(self, head: bool = False) -> None:
+        if self.server.fail_gets > 0:
+            self.server.fail_gets -= 1
+            self._deny(503)
+            return
+        path = self._target()
+        with self.server.lock:
+            if path is None or not path.is_file():
+                self._deny(404)
+                return
+            data = path.read_bytes()
+        self.send_response(200)
+        self.send_header("ETag", _etag(data))
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        if not head:
+            self.wfile.write(data)
+
+    def do_HEAD(self) -> None:
+        self.do_GET(head=True)
+
+    def do_PUT(self) -> None:
+        path = self._target()
+        length = int(self.headers.get("Content-Length") or 0)
+        data = self.rfile.read(length)
+        if path is None:
+            self._deny(400)
+            return
+        if self.server.fail_puts > 0:
+            self.server.fail_puts -= 1
+            self._deny(503)
+            return
+        if self.server.reject_writes:
+            self._deny(405)
+            return
+        with self.server.lock:                 # precondition+write atomic
+            exists = path.is_file()
+            if self.headers.get("If-None-Match") == "*" and exists:
+                self._deny(412)
+                return
+            if_match = self.headers.get("If-Match")
+            if if_match is not None and (
+                    not exists or _etag(path.read_bytes()) != if_match):
+                self._deny(412)
+                return
+            path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+            self.server.puts += 1
+        self.send_response(200 if exists else 201)
+        self.send_header("ETag", _etag(data))
+        self.send_header("Content-Length", "0")
+        self.end_headers()
+
+    def do_DELETE(self) -> None:
+        path = self._target()
+        if self.server.reject_writes:
+            self._deny(405)
+            return
+        with self.server.lock:
+            if path is not None and path.is_file():
+                path.unlink()
+        self._deny(204)
+
+
+class StoreHTTPServer(ThreadingHTTPServer):
+    """Threaded loopback server over one store root directory."""
+
+    daemon_threads = True
+
+    def __init__(self, root: str | Path, host: str = "127.0.0.1",
+                 port: int = 0):
+        super().__init__((host, port), _Handler)
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.lock = threading.Lock()
+        self.fail_puts = 0                     # chaos: next n PUTs -> 503
+        self.fail_gets = 0                     # chaos: next n GETs -> 503
+        self.reject_writes = False             # readonly mirror: PUT -> 405
+        self.puts = 0
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        return f"http://{host}:{port}"
+
+
+@contextlib.contextmanager
+def serve_store(root: str | Path):
+    """Run a :class:`StoreHTTPServer` over ``root`` for a ``with`` block."""
+    srv = StoreHTTPServer(root)
+    thread = threading.Thread(target=srv.serve_forever,
+                              name="magneton-httpstore", daemon=True)
+    thread.start()
+    try:
+        yield srv
+    finally:
+        srv.shutdown()
+        srv.server_close()
+        thread.join(timeout=5)

@@ -1,0 +1,259 @@
+"""repro.audit: sampling policies, request classes, drift detection, fleet.
+
+Unit coverage for the deterministic sampler, request-class keying, and the
+audit log; integration coverage for the live-audit loop — a seeded-noise
+soak on an unchanged engine must never alarm, a mutated engine sharing the
+same fleet store must alarm with the planted diagnosis kind, and
+``ServeEngine.health()`` must round-trip through JSON (the adversarial
+report-harness idiom).
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.audit import (AuditConfig, AuditEvent, AuditLog, EngineAuditor,
+                         RequestClass, SampleDecision, Sampler, classify,
+                         fleet_status, golden_key, log_key, pow2_bucket,
+                         render_fleet_status, sanitize_id)
+from repro.models import transformer as tf
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+# -- request classes ----------------------------------------------------------
+
+def test_pow2_buckets():
+    assert pow2_bucket(1) == (1, 1)
+    assert pow2_bucket(2) == (2, 3)
+    assert pow2_bucket(3) == (2, 3)
+    assert pow2_bucket(17) == (16, 31)
+    assert pow2_bucket(0) == (1, 1)            # clamped
+
+
+def test_class_key_roundtrip():
+    rc = classify("decode", batch=5, seq_len=40)
+    assert rc.key == "decode/b4/s32-63"
+    assert RequestClass.from_key(rc.key) == rc
+    assert rc.probe_batch == 4 and rc.probe_seq_len == 32
+
+
+def test_class_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        RequestClass("encode", 1, 1, 1)
+    with pytest.raises(ValueError):
+        RequestClass.from_key("decode/4/32")
+
+
+def test_reserved_key_helpers():
+    assert golden_key("a", "f", "b").startswith("audit-class--")
+    assert log_key("eng/1 *x").startswith("audit--")
+    assert "/" not in log_key("eng/1")[len("audit--"):]
+    assert sanitize_id("///") == "engine"
+
+
+# -- sampler ------------------------------------------------------------------
+
+def test_every_n_fires_n_times_out_of_n_squared():
+    s = Sampler(every=5, seed=3)
+    decisions = [s.observe("c") for _ in range(25)]
+    fired = [d for d in decisions if d.sample]
+    assert len(fired) == 5
+    assert all(d.reason == "every_n" for d in fired)
+    assert s.counts["c"] == 25 and s.sampled["c"] == 5
+
+
+def test_sampler_is_deterministic_and_phase_offset_varies_by_class():
+    a = Sampler(every=8, seed=1)
+    b = Sampler(every=8, seed=1)
+    trace_a = [a.observe("x").sample for _ in range(32)]
+    trace_b = [b.observe("x").sample for _ in range(32)]
+    assert trace_a == trace_b
+    assert a._phase("prefill/b2/s8-15") != a._phase("decode/b2/s8-15") or \
+        a._phase("prefill/b2/s8-15") != a._phase("decode/b4/s32-63")
+
+
+def test_slo_headroom_skips_pressured_firings():
+    s = Sampler(every=2, slo_ms=10.0, headroom=0.5, seed=0)
+    # every firing arrives at 9ms latency: over the 5ms headroom -> skipped
+    fired = [s.observe("c", latency_s=0.009).sample for _ in range(10)]
+    assert sum(fired) == 0
+    assert s.slo_skipped == 5
+    # quiet traffic (1ms) samples normally
+    fired = [s.observe("c", latency_s=0.001).sample for _ in range(10)]
+    assert sum(fired) == 5
+
+
+def test_slo_only_trigger_has_refractory_gap():
+    s = Sampler(every=0, slo_ms=10.0, headroom=0.5, slo_gap=4, seed=0)
+    fired = [s.observe("c", latency_s=0.001).sample for _ in range(12)]
+    assert fired[0] is True
+    assert sum(fired) == 3                      # one per 4-observation gap
+
+
+def test_config_change_forces_sample():
+    s = Sampler(every=1000, seed=0)
+    s.observe("c", fingerprint="v1")
+    dec = s.observe("c", fingerprint="v2")
+    assert dec.sample and dec.reason == "config_change"
+
+
+# -- audit log ----------------------------------------------------------------
+
+def test_log_ring_rolls_but_counts_are_monotonic():
+    log = AuditLog(capacity=4)
+    for i in range(10):
+        log.record("c", "every_n", "alarm" if i % 2 else "check")
+    assert len(log) == 4
+    assert log.dropped == 6
+    assert log.alarm_count() == 5               # survives the ring
+    assert log.counts["c"]["check"] == 5
+
+
+def test_log_payload_roundtrip():
+    log = AuditLog(capacity=8)
+    log.record("a", "every_n", "check", energy_delta=0.01, latency_s=0.002)
+    log.record("b", "config_change", "alarm", diagnosis_kind="api_difference",
+               detail="x", degraded=True)
+    payload = json.loads(json.dumps(log.to_payload()))
+    again = AuditLog.from_payload(payload)
+    assert again.to_payload() == log.to_payload()
+    assert list(again)[1].diagnosis_kind == "api_difference"
+
+
+def test_event_ignores_unknown_payload_fields():
+    ev = AuditEvent.from_payload({"seq": 0, "class_key": "c", "reason": "r",
+                                  "kind": "check", "future_field": 1})
+    assert ev.class_key == "c"
+
+
+# -- live integration ---------------------------------------------------------
+
+N_SOAK = 6
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """One healthy audited engine that has served traffic into a store."""
+    root = tmp_path_factory.mktemp("fleet")
+    cfg = configs.get_config("gpt2-small").reduced(num_layers=2)
+    params = tf.model_init(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, ecfg=EngineConfig(
+        batch_size=2, max_len=48, audit_sample_every=4, store=str(root),
+        engine_id="healthy", audit_timeout_s=300.0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 12,
+                                               dtype=np.int32).astype(np.int32),
+                    max_new_tokens=6) for i in range(4)]
+    eng.generate(reqs)
+    return cfg, params, eng, root
+
+
+def test_live_audit_records_multiple_classes(served):
+    _, _, eng, _ = served
+    a = eng.auditor.summary()
+    assert len(a["classes"]) >= 2               # prefill + decode buckets
+    assert a["sampled"] >= 2
+    assert eng.stats["audit_sampled"] == a["sampled"]
+    assert eng.stats["audit_alarms"] == 0
+
+
+def test_soak_unchanged_engine_never_alarms(served):
+    """Seeded-noise soak: N full drift checks of an unchanged engine class
+    (recheck_every=1 disables the once-per-process shortcut) must produce
+    zero alarms at the declared rtol."""
+    cfg, params, _, root = served
+    eng = ServeEngine(cfg, params, ecfg=EngineConfig(
+        batch_size=2, max_len=48, audit_sample_every=1, store=str(root),
+        engine_id="soak", audit_recheck_every=1, audit_timeout_s=300.0))
+    rc = classify("decode", 2, 12)
+    for i in range(N_SOAK):
+        ev = eng.auditor.sample(rc, "every_n", latency_s=0.001)
+        assert ev.kind == "check", ev.to_payload()
+        assert (ev.energy_delta or 0.0) == 0.0
+    assert eng.auditor.alarms == []
+    assert eng.auditor.log.alarm_count() == 0
+
+
+def test_mutated_engine_alarms_with_diagnosis_kind(served):
+    """An engine whose decode step regressed must alarm against the healthy
+    fleet golden and name the planted diagnosis kind."""
+    cfg, params, _, root = served
+    eng = ServeEngine(cfg, params, ecfg=EngineConfig(
+        batch_size=2, max_len=48, audit_sample_every=1, store=str(root),
+        engine_id="mutated", audit_timeout_s=300.0,
+        audit_mutate_decode="redundant_recompute"))
+    rc = classify("decode", 2, 12)
+    ev = eng.auditor.sample(rc, "every_n")
+    assert ev.kind == "alarm"
+    assert eng.auditor.alarms, "mutated decode step must raise a drift alarm"
+    alarm = eng.auditor.alarms[0]
+    # redundant_recompute plants the c15 recomputation -> api_difference
+    assert alarm.diagnosis_kind == "api_difference"
+    assert alarm.energy_delta > 0.0
+    assert alarm.class_key == rc.key
+
+
+def test_fleet_status_aggregates_engines_and_alarms(served):
+    _, _, _, root = served
+    status = fleet_status(str(root))
+    ids = [e["engine_id"] for e in status["engines"]]
+    assert "healthy" in ids and "soak" in ids and "mutated" in ids
+    assert status["total_alarms"] >= 1
+    dec = status["classes"]["decode/b2/s8-15"]
+    assert dec["alarms"] >= 1
+    assert "api_difference" in dec["diagnosis_kinds"]
+    assert dec["energy_j"] is not None and dec["energy_j"] > 0
+    text = render_fleet_status(status)
+    assert "api_difference" in text and "mutated" in text
+
+
+def test_health_json_roundtrip(served):
+    """Adversarial-harness idiom: health() must survive dumps/loads
+    unchanged — it is served verbatim from a /healthz endpoint."""
+    _, _, eng, _ = served
+    h = eng.health()
+    again = json.loads(json.dumps(h))
+    assert again == h
+    assert "audit_breaker_open" in h and "audit_last_error" in h
+    assert h["audit"]["sampled"] >= 2
+
+
+def test_auditor_without_store_still_checks(served):
+    cfg, params, _, _ = served
+    eng = ServeEngine(cfg, params, ecfg=EngineConfig(
+        batch_size=2, max_len=48, audit_sample_every=1,
+        audit_timeout_s=300.0))
+    rc = classify("decode", 2, 12)
+    ev = eng.auditor.sample(rc, "every_n")
+    assert ev.kind == "check"                   # in-memory golden election
+    assert eng.auditor.flush() is False         # nothing to flush into
+
+
+def test_flush_failure_keeps_events(served, monkeypatch):
+    """A store that rejects audit-log writes must not lose samples or make
+    the sampled path raise — flush fails typed, events stay in memory."""
+    cfg, params, _, root = served
+    eng = ServeEngine(cfg, params, ecfg=EngineConfig(
+        batch_size=2, max_len=48, audit_sample_every=1, store=str(root),
+        engine_id="flaky-flush", audit_timeout_s=300.0))
+    auditor = eng.auditor
+    from repro.core.store import TransientStoreError
+    backend = auditor.session.store.backend
+    real_write = backend.write_manifest
+
+    def flaky(key, payload):
+        if key.startswith("audit--"):           # only the log flush fails
+            raise TransientStoreError("mirror down")
+        return real_write(key, payload)
+
+    monkeypatch.setattr(backend, "write_manifest", flaky)
+    rc = classify("decode", 2, 12)
+    ev = auditor.sample(rc, "every_n")          # must not raise
+    assert ev.kind in ("check", "alarm")
+    assert auditor.flush_failures >= 1
+    assert len(auditor.log) >= 1                # event retained in memory
+    monkeypatch.setattr(backend, "write_manifest", real_write)
+    assert auditor.flush() is True              # next flush delivers it

@@ -1,0 +1,204 @@
+"""Writable http(s) RemoteStore: the conditional-put dialect.
+
+Exercises the loopback S3/GCS stand-in (repro.testing.httpstore) against
+the opt-in writable remote: idempotent-by-address chunk puts, last-writer-
+wins manifests, ETag-CAS index.json merges under real thread contention,
+transient-503 retry absorption, and the readonly default staying intact.
+"""
+
+import json
+import threading
+
+import pytest
+
+from repro.core.artifact import ArtifactStore
+from repro.core.session import Session
+from repro.core.store import (RemoteStore, RetryPolicy,
+                              StorePreconditionError, StoreReadOnlyError,
+                              TransientStoreError, chunk_digest, open_store)
+from repro.testing.httpstore import serve_store
+
+
+def _fast_retry(**kw):
+    return RetryPolicy(base_delay_s=0.001, max_delay_s=0.01,
+                       sleep=lambda s: None, **kw)
+
+
+@pytest.fixture()
+def srv(tmp_path):
+    with serve_store(tmp_path / "fleet") as server:
+        yield server
+
+
+def _wstore(srv) -> RemoteStore:
+    return RemoteStore(srv.url, writable=True, retry=_fast_retry())
+
+
+# -- defaults and denial ------------------------------------------------------
+
+def test_http_store_stays_readonly_by_default(srv):
+    store = RemoteStore(srv.url, retry=_fast_retry())
+    assert store.readonly
+    with pytest.raises(StoreReadOnlyError):
+        store.write_manifest("k", {"v": 1})
+    with pytest.raises(StoreReadOnlyError):
+        store.write_chunk(chunk_digest(b"x"), b"x")
+
+
+def test_open_store_writable_flag(srv):
+    assert open_store(srv.url).readonly
+    assert not open_store(srv.url, writable=True).readonly
+
+
+def test_server_405_maps_to_readonly_error(srv):
+    store = _wstore(srv)
+    srv.reject_writes = True
+    with pytest.raises(StoreReadOnlyError):
+        store.write_manifest("k", {"v": 1})
+
+
+# -- round-trip ---------------------------------------------------------------
+
+def test_manifest_and_chunk_roundtrip(srv):
+    w = _wstore(srv)
+    digest = chunk_digest(b"payload")
+    w.write_chunk(digest, b"payload")
+    w.write_manifest("m1", {"hello": "world"})
+
+    r = RemoteStore(srv.url, retry=_fast_retry())   # independent reader
+    assert r.read_manifest("m1") == {"hello": "world"}
+    assert r.read_chunk(digest) == b"payload"
+    assert r.manifest_keys() == ["m1"]
+    assert r.has_manifest("m1") and not r.has_manifest("nope")
+
+
+def test_delete_manifest_updates_index(srv):
+    w = _wstore(srv)
+    w.write_manifest("a", {})
+    w.write_manifest("b", {})
+    w.delete_manifest("a")
+    assert RemoteStore(srv.url, retry=_fast_retry()).manifest_keys() == ["b"]
+
+
+# -- conditional puts ---------------------------------------------------------
+
+def test_chunk_put_is_idempotent_by_address(srv):
+    w1, w2 = _wstore(srv), _wstore(srv)
+    digest = chunk_digest(b"shared-bytes")
+    w1.write_chunk(digest, b"shared-bytes")
+    before = srv.puts
+    w2.write_chunk(digest, b"shared-bytes")    # 412 -> dedup hit, no write
+    assert srv.puts == before
+    assert w2.counters["chunk_dedup_hits"] == 1
+    assert w2.read_chunk(digest) == b"shared-bytes"
+
+
+def test_stale_if_match_raises_precondition(srv):
+    w = _wstore(srv)
+    w.write_manifest("m", {"v": 1})
+    with pytest.raises(StorePreconditionError):
+        w._request_once("PUT", "manifests/m.json", data=b"{}",
+                        headers={"If-Match": '"not-the-etag"'})
+
+
+def test_index_cas_merges_concurrent_writers(srv):
+    """Two stores interleave writes; neither may clobber the other's keys."""
+    w1, w2 = _wstore(srv), _wstore(srv)
+    w1.write_manifest("from-w1-a", {})
+    w2.write_manifest("from-w2-a", {})
+    w1.write_manifest("from-w1-b", {})
+    w2.write_manifest("from-w2-b", {})
+    keys = RemoteStore(srv.url, retry=_fast_retry()).manifest_keys()
+    assert keys == ["from-w1-a", "from-w1-b", "from-w2-a", "from-w2-b"]
+
+
+def test_index_cas_under_thread_contention(srv):
+    """N threads, one store each, racing on index.json: the CAS loop must
+    converge on the union with no lost updates."""
+    n_threads, per = 4, 6
+    errors = []
+
+    def writer(t):
+        try:
+            w = _wstore(srv)
+            for i in range(per):
+                w.write_manifest(f"t{t}-m{i}", {"t": t, "i": i})
+        except Exception as e:                 # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    keys = RemoteStore(srv.url, retry=_fast_retry()).manifest_keys()
+    assert keys == sorted(f"t{t}-m{i}" for t in range(n_threads)
+                          for i in range(per))
+    # index.json on disk is the same sorted union (byte-determinism)
+    index = json.loads((srv.root / "index.json").read_text())
+    assert index["manifests"] == keys
+
+
+def test_bulk_defers_index_to_one_cas_update(srv):
+    w = _wstore(srv)
+    with w.bulk():
+        for i in range(5):
+            w.write_manifest(f"bulk-{i}", {"i": i})
+        puts_during = srv.puts
+    # 5 manifest PUTs inside the bulk, index.json PUT only at exit
+    assert srv.puts == puts_during + 1
+    assert len(RemoteStore(srv.url,
+                           retry=_fast_retry()).manifest_keys()) == 5
+
+
+# -- transient faults ---------------------------------------------------------
+
+def test_503_put_absorbed_by_retry(srv):
+    w = _wstore(srv)
+    srv.fail_puts = 2
+    w.write_manifest("m", {"ok": True})
+    assert w.counters["retries"] >= 2
+    assert RemoteStore(srv.url,
+                       retry=_fast_retry()).read_manifest("m") == {"ok": True}
+
+
+def test_exhausted_retries_surface_transient(srv):
+    w = RemoteStore(srv.url, writable=True,
+                    retry=_fast_retry(max_attempts=2))
+    srv.fail_puts = 99
+    with pytest.raises(TransientStoreError):
+        w.write_manifest("m", {})
+    srv.fail_puts = 0
+
+
+# -- full artifact stack over the writable remote -----------------------------
+
+def _square(x):
+    return x * x
+
+
+def test_session_capture_persists_to_writable_http(srv):
+    import numpy as np
+    args = (np.arange(6, dtype=np.float32).reshape(2, 3),)
+    s1 = Session(store=srv.url, store_writable=True)
+    art = s1.capture(_square, args, name="sq")
+    assert not art.meta.get("degraded")
+
+    # a second engine (fresh session, same remote) gets a pure cache hit
+    s2 = Session(store=srv.url, store_writable=True)
+    art2 = s2.capture(_square, args, name="sq")
+    assert art2.meta.get("cache_hit")
+    assert art2.key == art.key
+
+
+def test_artifact_store_push_to_http(tmp_path, srv):
+    import numpy as np
+    local = ArtifactStore(tmp_path / "local")
+    s = Session(store=local)
+    s.capture(_square, (np.ones((3, 3), np.float32),), name="sq")
+    res = local.push(srv.url)
+    assert res["manifests"] == 1
+    mirror = ArtifactStore.from_uri(srv.url)
+    assert mirror.keys() == local.keys()

@@ -55,6 +55,15 @@ if [[ "$FULL" != 1 ]]; then
 fi
 echo "backend-parity OK"
 
+echo "== optimize (detect -> transform -> verify loop) =="
+# Full generated scenario matrix: every waste class must be invertible —
+# the diagnosed mutant's inverse rewrite yields a candidate verified
+# EQUIVALENT (the detector's own gate) and strictly cheaper, per scenario,
+# plus one all-rewrites N-way rank demo.  Emits BENCH_optimize.json with
+# per-class win margins.  See docs/optimizer.md.
+python scripts/optimize_check.py
+echo "optimize OK"
+
 echo "== baseline-check (golden artifact replay) =="
 # Copy the COMMITTED expectations aside, record fresh golden artifacts next
 # to them, then (1) the live check diffs fresh findings against the

@@ -1,0 +1,152 @@
+"""CI gate for the detect→transform→verify loop (repro.optimize).
+
+Runs the FULL generated scenario matrix (every clean program x every
+applicable mutation): each mutant is captured, compared against its clean
+twin, diagnosed (the subkind must name the planted class), and optimized
+with the diagnosed inverse rewrite.  Gates:
+
+  * every one of the 8 waste classes is invertible on every scenario where
+    the mutation applies: the diagnosed inverse yields a candidate that is
+    verified EQUIVALENT (detector's own gate) and STRICTLY cheaper,
+  * the diagnosed subkind matches the planted mutation class on every
+    scenario,
+  * one N>>2 demo: a mutant optimized under ALL rewrites ranks target +
+    survivors in a single waste matrix.
+
+Emits BENCH_optimize.json with per-class win margins (min/mean/max % win
+and the per-scenario table) for trend tracking.
+"""
+
+import json
+import statistics
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core.session import Session                       # noqa: E402
+from repro.optimize import optimize                          # noqa: E402
+from repro.testing.mutate import (MUTATIONS,                 # noqa: E402
+                                  generate_scenarios)
+
+
+def main() -> int:
+    t0 = time.time()
+    session = Session()
+    scenarios = generate_scenarios()
+    assert len(scenarios) >= 20, \
+        f"scenario matrix shrank to {len(scenarios)} pairs"
+    covered = {sc.mutation.name for sc in scenarios}
+    assert covered == set(MUTATIONS), \
+        f"classes with no applicable scenario: {set(MUTATIONS) - covered}"
+
+    clean_arts, clean_args = {}, {}
+    rows = []
+    failures = []
+    for sc in scenarios:
+        pname = sc.program.name
+        if pname not in clean_arts:
+            clean_args[pname] = sc.program.make_args()
+            clean_arts[pname] = session.capture(
+                sc.program.fn, clean_args[pname], name=pname)
+        args = clean_args[pname]
+        clean = clean_arts[pname]
+        row = {"scenario": sc.id, "class": sc.mutation.name,
+               "program": pname, "sites": sc.sites}
+        rows.append(row)
+        try:
+            mut_art = session.capture(sc.mutant, args,
+                                      name=sc.mutant.__name__)
+            rep = session.compare(mut_art, clean, output_rtol=1e-2)
+            waste = [f for f in rep.waste_findings
+                     if f.wasteful_side == "A"]
+            diag = next((f.diagnosis for f in waste
+                         if f.diagnosis
+                         and f.diagnosis.subkind == sc.mutation.name), None)
+            if diag is None:
+                got = sorted({f.diagnosis.subkind for f in waste
+                              if f.diagnosis})
+                row["error"] = f"diagnosed subkinds {got}, " \
+                               f"expected {sc.mutation.name!r}"
+                failures.append(row)
+                continue
+            patch = optimize(sc.mutant, args, session=session,
+                             name=sc.mutant.__name__, diagnosis=diag,
+                             rewrite_names=[sc.mutation.name])
+            best = patch.best
+            if best is None:
+                c = patch.candidates[0] if patch.candidates else None
+                row["error"] = ("no verified-cheaper candidate: "
+                                f"{c.status if c else '?'} "
+                                f"({c.reason if c else 'no candidate'})")
+                failures.append(row)
+                continue
+            row.update(win_pct=best.win_pct, win_j=best.win_j,
+                       energy_target_j=patch.target_energy_j,
+                       energy_patched_j=best.energy_j)
+        except Exception as e:                 # scenario-level isolation
+            row["error"] = f"{type(e).__name__}: {e}"
+            failures.append(row)
+
+    by_class = {}
+    for row in rows:
+        by_class.setdefault(row["class"], []).append(row)
+    print("=== optimize: diagnosed-inverse verification matrix ===")
+    class_margins = {}
+    for cls in sorted(by_class):
+        wins = [r["win_pct"] for r in by_class[cls] if "win_pct" in r]
+        n = len(by_class[cls])
+        if wins:
+            class_margins[cls] = {
+                "scenarios": n, "verified": len(wins),
+                "win_pct_min": min(wins), "win_pct_max": max(wins),
+                "win_pct_mean": statistics.fmean(wins)}
+            print(f"{cls:22} {len(wins)}/{n} scenarios verified cheaper; "
+                  f"win {min(wins):5.1f}% .. {max(wins):5.1f}% "
+                  f"(mean {statistics.fmean(wins):5.1f}%)")
+        else:
+            class_margins[cls] = {"scenarios": n, "verified": 0}
+            print(f"{cls:22} 0/{n} scenarios verified")
+    for row in failures:
+        print(f"    FAIL {row['scenario']}: {row['error']}")
+
+    # N>>2 demo: one mutant under ALL rewrites, ranked in a single matrix
+    demo_sc = next(sc for sc in scenarios
+                   if sc.id == "layout_thrash:rmsnorm_linear")
+    demo = optimize(demo_sc.mutant, clean_args[demo_sc.program.name],
+                    session=session, name=demo_sc.mutant.__name__,
+                    subkind="layout_thrash")
+    assert demo.best is not None \
+        and demo.best.inverts == "layout_thrash", "N-way demo lost its win"
+    assert "rank_matrix" in demo.meta, "N-way demo produced no rank matrix"
+    n_ranked = len(demo.meta["rank_matrix"]["names"])
+    print(f"N-way demo: {len(demo.candidates)} rewrites proposed, "
+          f"{n_ranked} candidates ranked, best "
+          f"{demo.best.rewrite} (+{demo.best.win_pct:.1f}%)")
+
+    bench = {"bench": "optimize",
+             "scenarios": len(rows),
+             "verified": sum(1 for r in rows if "win_pct" in r),
+             "failures": len(failures),
+             "per_class": class_margins,
+             "rows": rows,
+             "nway_demo": {"target": demo.target,
+                           "candidates": len(demo.candidates),
+                           "ranked": n_ranked,
+                           "best_win_pct": demo.best.win_pct},
+             "elapsed_s": round(time.time() - t0, 2)}
+    with open("BENCH_optimize.json", "w") as f:
+        json.dump(bench, f, indent=2)
+    print(f"wrote BENCH_optimize.json ({bench['verified']}/"
+          f"{bench['scenarios']} scenarios verified, "
+          f"{bench['elapsed_s']}s)")
+
+    if failures:
+        print(f"optimize check FAILED: {len(failures)} scenarios did not "
+              "verify")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -236,9 +236,83 @@ def cmd_report(args) -> int:
     data = json.loads(Path(args.path).read_text())
     if data.get("kind") == "rank":
         print(RankResult.from_json(data).render())
+    elif data.get("kind") == "patch":
+        from repro.optimize import PatchReport
+        print(PatchReport.from_json(data).render())
     else:
         print(Report.from_json(data).render(max_findings=args.max_findings))
     return 0
+
+
+def cmd_optimize(args) -> int:
+    """Propose + verify inverse rewrites for a wasteful program.
+
+    SPEC is either ``<mutation>:<program>`` (a generated scenario: the
+    clean program is mutated, compared for a diagnosis, and the mutant
+    optimized — the full detect→transform→verify loop) or a zoo
+    ``<case>:<side>`` reference (every rewrite is attempted; no prior
+    diagnosis orients the proposal).
+    """
+    from repro.optimize import optimize
+    from repro.testing.mutate import (MUTATIONS, InapplicableMutationError,
+                                      clean_programs, make_mutant)
+
+    session = _make_session(args)
+    spec = args.spec
+    if ":" not in spec:
+        raise SystemExit(
+            f"bad spec {spec!r}: expected '<mutation>:<program>' "
+            f"(mutations: {sorted(MUTATIONS)}) or a zoo '<case>:<side>'")
+    left, _, right = spec.partition(":")
+    diagnosis = None
+    config = None
+    if left in MUTATIONS:
+        progs = {p.name: p for p in clean_programs()}
+        if right not in progs:
+            raise SystemExit(
+                f"unknown clean program {right!r}; one of {sorted(progs)}")
+        prog = progs[right]
+        fargs = prog.make_args()
+        try:
+            fn, sites = make_mutant(prog.fn, MUTATIONS[left](), fargs)
+        except InapplicableMutationError as e:
+            raise SystemExit(f"error: {e}") from None
+        name = fn.__name__
+        # diagnose first so the proposal is oriented the way a real run
+        # would be: detector flags the waste, its subkind picks the rewrite
+        clean_art = session.capture(prog.fn, fargs, name=prog.name)
+        mut_art = session.capture(fn, fargs, name=name)
+        rep = session.compare(mut_art, clean_art, output_rtol=1e-2)
+        waste = [f for f in rep.waste_findings if f.wasteful_side == "A"]
+        diagnosis = next(
+            (f.diagnosis for f in waste
+             if f.diagnosis and f.diagnosis.subkind),
+            waste[0].diagnosis if waste else None)
+        if diagnosis is None:
+            print("note: detector found no waste region; trying every "
+                  "rewrite without a diagnosis", file=sys.stderr)
+    else:
+        case_id, side = left, right
+        if side not in _SIDES:
+            raise SystemExit(
+                f"bad spec {spec!r}: not a mutation in {sorted(MUTATIONS)} "
+                f"and side {side!r} not in {sorted(_SIDES)}")
+        try:
+            case = zoo.get_case(case_id)
+        except KeyError as e:
+            raise SystemExit(f"error: {e.args[0]}") from None
+        fn, config = case.side(side)
+        fargs = case.make_args()
+        name = f"{case.id}-{side}"
+    patch = optimize(fn, fargs, session=session, name=name,
+                     diagnosis=diagnosis,
+                     rewrite_names=args.rewrite or None,
+                     output_rtol=args.output_rtol, config=config)
+    print(patch.render())
+    if args.json:
+        Path(args.json).write_text(patch.to_json())
+        print(f"wrote {args.json}")
+    return 0 if not args.expect_win or patch.best is not None else 1
 
 
 def _parse_bytes(text: str) -> int:
@@ -253,6 +327,20 @@ def cmd_artifacts(args) -> int:
                         timeout=getattr(args, "store_timeout", None))
     action = getattr(args, "action", None)
     if action == "prune":
+        verb = "would delete" if args.dry_run else "deleted"
+        if args.quarantine:
+            try:
+                evicted = store.prune_quarantine(
+                    max_bytes=(_parse_bytes(args.max_bytes)
+                               if args.max_bytes is not None else None),
+                    dry_run=args.dry_run)
+            except ValueError as e:
+                raise SystemExit(f"error: {e}") from None
+            for name in evicted:
+                print(f"{verb} quarantine/{name}")
+            print(f"{verb} {len(evicted)} quarantined files; quarantine now "
+                  f"{store.quarantine_bytes() / 1024:.1f} KiB")
+            return 0
         try:
             deleted = store.prune(
                 max_bytes=(_parse_bytes(args.max_bytes)
@@ -260,7 +348,6 @@ def cmd_artifacts(args) -> int:
                 keep_latest=args.keep_latest, dry_run=args.dry_run)
         except ValueError as e:
             raise SystemExit(f"error: {e}") from None
-        verb = "would delete" if args.dry_run else "deleted"
         for key in deleted:
             print(f"{verb} {key}")
         print(f"{verb} {len(deleted)} artifacts; store {store.root} now "
@@ -440,10 +527,33 @@ def build_parser() -> argparse.ArgumentParser:
     pr.set_defaults(fn=cmd_rank)
 
     prp = sub.add_parser("report",
-                         help="re-render a stored compare/rank JSON")
+                         help="re-render a stored compare/rank/patch JSON")
     prp.add_argument("path")
     prp.add_argument("--max-findings", type=int, default=10)
     prp.set_defaults(fn=cmd_report)
+
+    po = sub.add_parser(
+        "optimize",
+        help="propose + verify inverse rewrites for a wasteful program")
+    po.add_argument("spec", metavar="SPEC",
+                    help="'<mutation>:<program>' scenario (diagnose the "
+                         "mutant, then optimize it) or a zoo "
+                         "'<case>:<side>' reference (try every rewrite)")
+    po.add_argument("--rewrite", action="append", default=None,
+                    metavar="NAME",
+                    help="only attempt these rewrites (repeatable; "
+                         "default: diagnosed subkind first, rest ride "
+                         "along)")
+    po.add_argument("--json", default=None, help="also write PatchReport "
+                                                 "JSON")
+    po.add_argument("--output-rtol", type=float, default=None,
+                    help="override the per-rewrite functional-equivalence "
+                         "tolerance")
+    po.add_argument("--expect-win", action="store_true",
+                    help="exit 1 unless some candidate verified strictly "
+                         "cheaper")
+    _add_common(po)
+    po.set_defaults(fn=cmd_optimize)
 
     pa = sub.add_parser("artifacts",
                         help="list, GC, transfer or migrate the store")
@@ -465,9 +575,14 @@ def build_parser() -> argparse.ArgumentParser:
 
     pap = _store_sub("prune", "GC the store, oldest first (refcount-aware)")
     pap.add_argument("--max-bytes", default=None, metavar="N[K|M|G]",
-                     help="prune oldest artifacts until the store fits")
+                     help="prune oldest artifacts until the store fits "
+                          "(with --quarantine: until the quarantine fits)")
     pap.add_argument("--keep-latest", type=int, default=0,
                      help="never prune the N most recent artifacts")
+    pap.add_argument("--quarantine", action="store_true",
+                     help="prune the corruption-quarantine directory "
+                          "instead of the artifact store (oldest first; "
+                          "no --max-bytes empties it)")
     pap.add_argument("--dry-run", action="store_true")
 
     pas = _store_sub("stats", "dedup / sketch-only accounting")

@@ -964,6 +964,37 @@ class ArtifactStore:
             total -= freed
         return deleted
 
+    def _quarantine_fs(self):
+        fs = getattr(self.backend, "_fs", None)
+        if fs is None:
+            raise ValueError(
+                f"store {getattr(self.backend, 'uri', self.root)} has no "
+                "local quarantine directory (http mirrors quarantine "
+                "nothing); prune the quarantine on the serving host")
+        return fs
+
+    def quarantine_bytes(self) -> int:
+        """Total bytes held in the store's corruption-quarantine directory."""
+        return sum(size for _, _, size in
+                   self._quarantine_fs().quarantine_entries())
+
+    def prune_quarantine(self, *, max_bytes: int | None = None,
+                         dry_run: bool = False) -> list[str]:
+        """Evict quarantined (corrupt-at-rest) files, oldest first, until
+        the quarantine directory fits ``max_bytes`` (``None``: empty it).
+        Returns the (would-be-)evicted file names.  Unlike :meth:`prune`,
+        nothing here is re-creatable — quarantined files exist only for
+        forensics — so the eviction is a plain size-bounded FIFO."""
+        fs = self._quarantine_fs()
+        evicted = fs.prune_quarantine(max_bytes if max_bytes is not None
+                                      else 0, dry_run=dry_run)
+        if not dry_run and evicted:
+            counters = getattr(self.backend, "counters", None)
+            if counters is not None:
+                counters["quarantine_evictions"] = (
+                    counters.get("quarantine_evictions", 0) + len(evicted))
+        return [p.name for p in evicted]
+
     # -- fleet transfer -----------------------------------------------------
     def push(self, dest: "ArtifactStore | Store | str",
              keys: Sequence[str] | None = None) -> dict[str, int]:

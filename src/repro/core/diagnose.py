@@ -27,6 +27,36 @@ from repro.core.graph import OpGraph, OpNode
 # validates against this tuple instead of re-spelling the strings.
 DIAGNOSIS_KINDS = ("api_difference", "param_difference", "config_difference")
 
+# Finer-grained waste classes, one per mutation in the engine's taxonomy
+# (repro.testing.mutate.MUTATIONS).  The 3 coarse DIAGNOSIS_KINDS say *how*
+# the sides differ; the subkind says *which inverse rewrite* would remove
+# the waste (repro.optimize keys its rewrite registry on these names).
+# ``Diagnosis.subkind`` is None when no class fits — reports and golden
+# baselines serialized before the field existed load unchanged.
+DIAGNOSIS_SUBKINDS = (
+    "dtype_upcast",         # param: dot precision forced to HIGHEST
+    "redundant_recompute",  # api: an identical contraction appears twice
+    "sync_in_loop",         # api: collective inside the hot region
+    "oversized_padding",    # api: pad + slice round-trip around an op
+    "op_split",             # api: fused transcendental decomposed by hand
+    "scan_body",            # param: scan body jaxpr diverges
+    "layout_thrash",        # api: transpose round-trips around an op
+    "storage_upcast",       # api: bf16 values bounced through f32
+)
+
+# Primitive families used to refine a coarse kind into a subkind.  Closed
+# world by design: these mirror what the mutation taxonomy can plant (and
+# what the inverse rewrites can remove), not everything XLA can emit.
+_COLLECTIVE_PRIMS = frozenset({
+    "psum", "psum2", "pbroadcast", "all_reduce", "all_gather", "all_to_all",
+    "ppermute", "reduce_scatter", "shard_map", "pmin", "pmax"})
+_CONTRACTION_PRIMS = ("dot_general", "conv_general_dilated")
+_ELEMENTWISE_PRIMS = frozenset({
+    "add", "sub", "mul", "div", "neg", "exp", "log", "log1p", "expm1",
+    "tanh", "logistic", "rsqrt", "sqrt", "clamp", "max", "min", "pow",
+    "integer_pow", "abs", "sign", "erf", "floor", "ceil", "select_n",
+    "broadcast_in_dim", "convert_element_type"})
+
 
 @dataclasses.dataclass
 class Diagnosis:
@@ -42,6 +72,9 @@ class Diagnosis:
     # means some rung of the session's degradation ladder fired — the
     # report's meta['degraded'] lists exactly what was downgraded.
     priced_by: str | None = None
+    # one of DIAGNOSIS_SUBKINDS, or None when the region does not match any
+    # known waste class (or the report predates the field)
+    subkind: str | None = None
 
     @property
     def degraded(self) -> bool:
@@ -54,7 +87,8 @@ class Diagnosis:
                    detail=d["detail"],
                    key_variables=list(d["key_variables"]),
                    ops_a=list(d["ops_a"]), ops_b=list(d["ops_b"]),
-                   priced_by=d.get("priced_by"))
+                   priced_by=d.get("priced_by"),
+                   subkind=d.get("subkind"))
 
 
 def _common_prefix(p1: Sequence[str], p2: Sequence[str]) -> int:
@@ -119,16 +153,70 @@ def _op_multiset(graph: OpGraph, idxs: Sequence[int]) -> list[str]:
     return sorted(graph.nodes[i].primitive for i in idxs)
 
 
+def infer_subkind(kind: str, ops_wasteful: Sequence[str],
+                  ops_efficient: Sequence[str],
+                  key_variables: Sequence[str]) -> str | None:
+    """Refine a coarse diagnosis kind into a DIAGNOSIS_SUBKINDS entry.
+
+    ``ops_wasteful``/``ops_efficient`` are the region op multisets oriented
+    by which side the energy backend flagged.  Returns None when the region
+    does not look like any known waste class — callers must treat that as
+    "no automated rewrite available", not as an error.
+    """
+    if kind == "api_difference":
+        from collections import Counter
+        extra = Counter(ops_wasteful) - Counter(ops_efficient)
+        if not extra:
+            return None
+        # ordered from most to least specific: a collective beats any
+        # structural tell, movement ops beat the elementwise catch-all
+        if any(p in _COLLECTIVE_PRIMS for p in extra):
+            return "sync_in_loop"
+        if extra.get("transpose", 0) >= 2:
+            return "layout_thrash"
+        if extra.get("pad", 0):
+            return "oversized_padding"
+        # storage bounces add *only* converts (the bounced ops keep their
+        # primitive); a mixed bag of extras that merely includes converts
+        # (e.g. an inlined clip's literal casts) is not a storage upcast
+        if extra.get("convert_element_type", 0) and \
+                set(extra) <= {"convert_element_type", "broadcast_in_dim"}:
+            return "storage_upcast"
+        if any(extra.get(p, 0) for p in _CONTRACTION_PRIMS):
+            return "redundant_recompute"
+        if all(p in _ELEMENTWISE_PRIMS for p in extra):
+            return "op_split"
+        return None
+    # param/config difference: op multisets agree, so the tell is *which*
+    # attribute diverged
+    if any(".precision" in kv or "precision" in kv.split(":", 1)[0]
+           for kv in key_variables):
+        return "dtype_upcast"
+    if any(kv.startswith("scan.") for kv in key_variables):
+        return "scan_body"
+    if any(".preferred_element_type" in kv or ".accum_dtype" in kv
+           for kv in key_variables):
+        return "dtype_upcast"
+    # diverging scan bodies can evade the param diff when the truncated
+    # jaxpr reprs share a prefix; the scan super-node itself is the tell
+    if "scan" in ops_wasteful and "scan" in ops_efficient:
+        return "scan_body"
+    return None
+
+
 def diagnose_region(graph_a: OpGraph, nodes_a: Sequence[int],
                     graph_b: OpGraph, nodes_b: Sequence[int],
                     *,
                     config_a: Mapping[str, Any] | None = None,
                     config_b: Mapping[str, Any] | None = None,
-                    priced_by: str | None = None) -> Diagnosis:
+                    priced_by: str | None = None,
+                    wasteful_side: str = "A") -> Diagnosis:
     """Explain why two equivalent regions consume different energy.
 
     ``priced_by`` names the energy backend whose numbers flagged the region
     (recorded on the diagnosis so reports can cite their pricing source).
+    ``wasteful_side`` ('A' or 'B') orients the subkind inference toward the
+    side the backend says burns more energy.
     """
     ops_a = _op_multiset(graph_a, nodes_a)
     ops_b = _op_multiset(graph_b, nodes_b)
@@ -137,6 +225,9 @@ def diagnose_region(graph_a: OpGraph, nodes_a: Sequence[int],
     deviation = find_deviation_point(paths_a, paths_b)
 
     cfg_diffs = diff_config(config_a, config_b)
+
+    ops_w, ops_e = ((ops_a, ops_b) if wasteful_side == "A"
+                    else (ops_b, ops_a))
 
     if ops_a != ops_b:
         only_a = sorted(set(ops_a) - set(ops_b))
@@ -148,7 +239,9 @@ def diagnose_region(graph_a: OpGraph, nodes_a: Sequence[int],
         return Diagnosis(kind="api_difference", deviation_point=deviation,
                          detail=detail,
                          key_variables=cfg_diffs, ops_a=ops_a, ops_b=ops_b,
-                         priced_by=priced_by)
+                         priced_by=priced_by,
+                         subkind=infer_subkind("api_difference", ops_w,
+                                               ops_e, cfg_diffs))
 
     # same operator multiset -> same API, look for param/config differences
     # pair same-primitive ops in topological order and diff params
@@ -168,6 +261,8 @@ def diagnose_region(graph_a: OpGraph, nodes_a: Sequence[int],
               if key_vars else
               "same operators and attributes; energy difference stems from "
               "tensor shapes/layouts feeding this region")
+    key_vars = sorted(set(key_vars))
     return Diagnosis(kind=kind, deviation_point=deviation, detail=detail,
-                     key_variables=sorted(set(key_vars)), ops_a=ops_a,
-                     ops_b=ops_b, priced_by=priced_by)
+                     key_variables=key_vars, ops_a=ops_a,
+                     ops_b=ops_b, priced_by=priced_by,
+                     subkind=infer_subkind(kind, ops_w, ops_e, key_vars))

@@ -100,6 +100,7 @@ class Report:
             d = f.diagnosis
             if d is not None:
                 lines.append(f"    kind: {d.kind}"
+                             + (f" / {d.subkind}" if d.subkind else "")
                              + (f"  (priced by {d.priced_by})"
                                 if d.priced_by else ""))
                 lines.append(f"    deviation point: {d.deviation_point}")
@@ -153,3 +154,41 @@ def render_rank_matrix(names: Sequence[str], totals: Sequence[float],
         cells = " ".join(f"{waste[i][j]:>10.3e}" for j in order)
         lines.append(f"    {tag[rank]:>9} {cells}")
     return lines
+
+
+def render_patch_report(patch: Any) -> str:
+    """Render a ``repro.optimize.PatchReport`` (duck-typed so core stays
+    import-free of the optimizer package).  Candidates are listed in the
+    report's ranked order; the embedded N-way rank matrix, when present,
+    is appended through ``render_rank_matrix``."""
+    lines = [f"=== Magneton patch report: target={patch.target} ==="]
+    lines.append(f"target energy: {patch.target_energy_j:.4e} J"
+                 + (f"   diagnosed subkind: {patch.subkind}"
+                    if patch.subkind else "   (no diagnosis — all rewrites tried)"))
+    d = getattr(patch, "diagnosis", None)
+    if d is not None:
+        lines.append(f"diagnosis: {d.kind}"
+                     + (f" / {d.subkind}" if d.subkind else "")
+                     + f" at {d.deviation_point}")
+    best = patch.best
+    if best is None:
+        lines.append("no verified-cheaper rewrite found "
+                     f"({len(patch.candidates)} candidate(s) examined)")
+    for i, c in enumerate(patch.candidates):
+        mark = "*" if best is not None and c is best else " "
+        head = (f" {mark}[{i}] {c.rewrite} (inverts {c.inverts}): "
+                f"{c.status}")
+        if c.status == "verified":
+            head += (f", {c.sites} site(s), energy {c.energy_j:.4e} J, "
+                     f"win {c.win_j:+.4e} J ({c.win_pct:+.2f}%)")
+        elif c.energy_j is not None:
+            head += f", energy {c.energy_j:.4e} J"
+        lines.append(head)
+        if c.reason:
+            lines.append(f"      reason: {c.reason}")
+    rank = patch.meta.get("rank_matrix") if patch.meta else None
+    if rank:
+        lines.extend(render_rank_matrix(rank["names"],
+                                        rank["total_energy_j"],
+                                        rank["waste_matrix"]))
+    return "\n".join(lines)

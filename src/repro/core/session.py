@@ -624,7 +624,8 @@ class Session:
             diag = diagnose_region(graph_a, region.nodes_a,
                                    graph_b, region.nodes_b,
                                    config_a=config_a, config_b=config_b,
-                                   priced_by=priced_by)
+                                   priced_by=priced_by,
+                                   wasteful_side=wasteful)
         return Finding(region_idx=idx, energy_a_j=e_a, energy_b_j=e_b,
                        time_a_s=t_a, time_b_s=t_b,
                        nodes_a=list(region.nodes_a), nodes_b=list(region.nodes_b),

@@ -42,7 +42,7 @@ import random
 import tempfile
 import time
 from pathlib import Path
-from typing import Callable, Protocol, runtime_checkable
+from typing import Callable, Protocol, Sequence, runtime_checkable
 from urllib.parse import urlparse
 from urllib.request import url2pathname
 
@@ -225,7 +225,31 @@ def _fresh_counters() -> dict[str, int]:
             "chunk_dedup_hits": 0,
             "upstream_manifest_reads": 0, "upstream_chunk_reads": 0,
             "retries": 0, "chunks_quarantined": 0, "verify_failures": 0,
-            "index_cas_conflicts": 0}
+            "quarantine_evictions": 0, "index_cas_conflicts": 0}
+
+
+# The quarantine directory holds corrupt-at-rest files for forensics, but a
+# store under sustained corruption (a failing disk, a bit-flipping mirror)
+# would otherwise grow it without bound — every quarantined chunk is dead
+# weight that nothing ever reads back automatically.  The cap bounds the
+# directory; oldest casualties are evicted first (the newest corruption is
+# the most likely to still be under investigation).
+QUARANTINE_MAX_BYTES_ENV = "MAGNETON_QUARANTINE_MAX_BYTES"
+DEFAULT_QUARANTINE_MAX_BYTES = 64 * 1024 * 1024
+
+
+def quarantine_cap_bytes() -> int:
+    """The quarantine size cap: ``$MAGNETON_QUARANTINE_MAX_BYTES`` (<= 0
+    disables the cap) or the 64 MiB default.  An unparsable value falls back
+    to the default rather than raising — the cap is enforced on corruption
+    error paths, where a config typo must not mask the real failure."""
+    raw = os.environ.get(QUARANTINE_MAX_BYTES_ENV)
+    if raw is None:
+        return DEFAULT_QUARANTINE_MAX_BYTES
+    try:
+        return int(raw)
+    except ValueError:
+        return DEFAULT_QUARANTINE_MAX_BYTES
 
 
 @runtime_checkable
@@ -297,16 +321,64 @@ class _FsLayout:
     def quarantine_dir(self) -> Path:
         return self.root / "quarantine"
 
-    def quarantine(self, path: Path) -> Path:
+    def quarantine(self, path: Path,
+                   counters: dict[str, int] | None = None) -> Path:
         """Move a failed-verification file out of the serving tree.
 
         The original name is kept (content addresses are unique), so a
         later forensic diff against a good copy is a plain file compare.
+        Enforces the quarantine size cap afterwards (oldest files evicted;
+        the file just moved in is never evicted, even when it alone exceeds
+        the cap — ``os.replace`` keeps its original mtime, which can be
+        arbitrarily old).  Evictions are tallied into ``counters``.
         """
         dest = self.quarantine_dir() / path.name
         dest.parent.mkdir(parents=True, exist_ok=True)
         os.replace(path, dest)
+        cap = quarantine_cap_bytes()
+        if cap > 0:
+            evicted = self.prune_quarantine(cap, protect=(dest,))
+            if counters is not None:
+                counters["quarantine_evictions"] = (
+                    counters.get("quarantine_evictions", 0) + len(evicted))
         return dest
+
+    def quarantine_entries(self) -> list[tuple[int, Path, int]]:
+        """(mtime_ns, path, size) per quarantined file, oldest first."""
+        d = self.quarantine_dir()
+        if not d.exists():
+            return []
+        out = []
+        for p in d.iterdir():
+            if not p.is_file():
+                continue
+            try:
+                st = p.stat()
+            except OSError:
+                continue
+            out.append((st.st_mtime_ns, p, st.st_size))
+        out.sort()
+        return out
+
+    def prune_quarantine(self, max_bytes: int, *,
+                         protect: Sequence[Path] = (),
+                         dry_run: bool = False) -> list[Path]:
+        """Evict oldest quarantined files until the directory holds at most
+        ``max_bytes``.  Returns the (would-be-)evicted paths, oldest first."""
+        entries = self.quarantine_entries()
+        protected = {Path(p) for p in protect}
+        total = sum(size for _, _, size in entries)
+        evicted: list[Path] = []
+        for _, p, size in entries:
+            if total <= max_bytes:
+                break
+            if p in protected:
+                continue
+            if not dry_run:
+                p.unlink(missing_ok=True)
+            evicted.append(p)
+            total -= size
+        return evicted
 
 
 class LocalStore:
@@ -334,7 +406,7 @@ class LocalStore:
     def _quarantine(self, path: Path) -> Path:
         self.counters["chunks_quarantined"] += 1
         self.counters["verify_failures"] += 1
-        return self._fs.quarantine(path)
+        return self._fs.quarantine(path, self.counters)
 
     # -- manifests ----------------------------------------------------------
     def has_manifest(self, key: str) -> bool:
@@ -603,7 +675,7 @@ class RemoteStore:
                 return json.loads(path.read_text())
             except json.JSONDecodeError as e:
                 self.counters["verify_failures"] += 1
-                dest = self._fs.quarantine(path)
+                dest = self._fs.quarantine(path, self.counters)
                 raise StoreCorruptionError(
                     f"manifest {key} on mirror {self.uri} failed to parse "
                     f"({e}); quarantined at {dest}") from e
@@ -758,7 +830,7 @@ class RemoteStore:
             if chunk_digest(data) != digest:
                 self.counters["verify_failures"] += 1
                 self.counters["chunks_quarantined"] += 1
-                dest = self._fs.quarantine(path)
+                dest = self._fs.quarantine(path, self.counters)
                 raise ChunkCorruptionError(
                     digest, f"mirror copy on {self.uri} failed digest "
                             f"verification; quarantined at {dest}")

@@ -1,0 +1,21 @@
+"""repro.optimize — the detect→transform→verify loop.
+
+Inverts the mutation taxonomy (``repro.testing.mutate``) into verified
+rewrite candidates: a :class:`~repro.core.diagnose.Diagnosis` (its
+``subkind``) selects an inverse rewrite, the target's captured jaxpr is
+replayed under it, and the result is re-captured, equivalence-gated, and
+energy-ranked before being reported.  See docs/optimizer.md.
+"""
+
+from repro.optimize.engine import (RewriteContext, RewriteRule,
+                                   build_candidate, replay_jaxpr)
+from repro.optimize.optimizer import optimize, propose
+from repro.optimize.patch import (CANDIDATE_STATUSES, PatchCandidate,
+                                  PatchReport)
+from repro.optimize.rewrites import REWRITES, Rewrite, rewrites_for
+
+__all__ = [
+    "CANDIDATE_STATUSES", "PatchCandidate", "PatchReport", "REWRITES",
+    "Rewrite", "RewriteContext", "RewriteRule", "build_candidate",
+    "optimize", "propose", "replay_jaxpr", "rewrites_for",
+]

@@ -1,0 +1,234 @@
+"""Bidirectional jaxpr rewrite engine shared by the mutation injector and
+the inverse-rewrite optimizer.
+
+This generalizes the replay interpreter that ``repro.testing.mutate`` grew
+for *injecting* waste: a (closed) jaxpr is walked equation by equation, each
+equation's input values are resolved, and a :class:`RewriteRule` gets the
+first shot at producing the outputs — returning ``None`` means "bind the
+equation unchanged".  Two additions make the same machinery run *backwards*
+(removing waste instead of planting it):
+
+* **provenance** — a :class:`RewriteContext` records, for every value the
+  replay produces, the equation and input values that produced it.  Inverse
+  rewrites need this to recognize multi-equation waste idioms from their
+  *last* equation (e.g. the ``div`` that finishes a hand-split tanh, the
+  down-convert that finishes a bf16→f32→bf16 storage bounce) and substitute
+  the fused/original computation.
+* **dead-code elimination** — a rewrite that routes around earlier
+  equations (cancelling a transpose round-trip, fusing a split
+  transcendental) leaves those equations dead in the retraced candidate;
+  :func:`build_candidate` runs XLA-independent DCE over the retrace so the
+  candidate is priced without the orphaned work.
+
+Layering: this module depends only on ``jax`` and ``repro.core.graph``;
+``repro.testing.mutate`` (forward direction) and ``repro.optimize.rewrites``
+(inverse direction) both build on it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+
+# Call-like higher-order primitives whose bodies the replay inlines so
+# rules can see the equations inside (jnp.einsum / jnp.matmul are jitted
+# and would otherwise hide their dot_general behind a pjit eqn).  shard_map
+# is NOT inlined: its collectives need the mesh context, so it is re-bound
+# as-is, matching graph.py's treatment of scan/while/cond super-nodes.
+_INLINE_PRIMITIVES = ("pjit", "jit", "closed_call", "custom_jvp_call",
+                      "custom_vjp_call", "remat", "checkpoint",
+                      "custom_vjp_call_jaxpr")
+
+
+def nested_jaxpr(eqn):
+    from repro.core.graph import _nested_jaxpr as nj
+    return nj(eqn)
+
+
+def bind_eqn(eqn, invals):
+    """Re-bind an equation unchanged on new input values."""
+    subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+    out = eqn.primitive.bind(*subfuns, *invals, **bind_params)
+    return out if eqn.primitive.multiple_results else [out]
+
+
+def bind_eqn_with_params(eqn, invals, params):
+    """Re-bind an equation with overridden params."""
+    subfuns, bind_params = eqn.primitive.get_bind_params(params)
+    out = eqn.primitive.bind(*subfuns, *invals, **bind_params)
+    return out if eqn.primitive.multiple_results else [out]
+
+
+class RewriteRule:
+    """Base for both waste-injecting mutations and waste-removing rewrites.
+
+    Subclasses override :meth:`on_eqn` (or a higher-level ``rewrite``) to
+    return replacement output values for an equation, or ``None`` to leave
+    it untouched.  ``max_sites`` bounds how many applicable sites are
+    rewritten (default: all); ``applied`` counts the sites actually
+    rewritten in the last trace; ``skipped`` collects human-readable
+    reasons recorded via :meth:`decline` for near-miss sites, surfaced when
+    a rule turns out to have zero applicable sites.
+    """
+
+    name: str = "?"
+
+    def __init__(self, max_sites: int | None = None):
+        self.max_sites = max_sites
+        self.applied = 0
+        self.skipped: list[str] = []
+
+    def reset(self) -> None:
+        self.applied = 0
+        self.skipped = []
+
+    def decline(self, why: str) -> None:
+        if why not in self.skipped:
+            self.skipped.append(why)
+
+    def skip_summary(self) -> str:
+        return "; ".join(self.skipped) if self.skipped else \
+            "no applicable equation in the jaxpr"
+
+    def _take(self) -> bool:
+        if self.max_sites is not None and self.applied >= self.max_sites:
+            return False
+        self.applied += 1
+        return True
+
+    def on_eqn(self, eqn, invals, ctx: "RewriteContext | None" = None
+               ) -> list[Any] | None:
+        raise NotImplementedError
+
+
+class RewriteContext:
+    """Dataflow provenance for one replay.
+
+    Maps each value the replay produced back to ``(eqn, invals)`` — the
+    equation that produced it and the resolved input values it was bound
+    on.  Keys are object identities, which is sound because the context
+    keeps every noted value alive for the duration of the replay and the
+    first (true) producer wins.
+    """
+
+    def __init__(self):
+        self._prov: dict[int, tuple[Any, list[Any]]] = {}
+        self._keep: list[Any] = []
+
+    def note(self, eqn, invals: Sequence[Any], outvals: Sequence[Any]) -> None:
+        in_ids = {id(v) for v in invals}
+        for o in outvals:
+            # a rewrite that passes an input through (or re-returns an
+            # earlier value) must not masquerade as that value's producer
+            if id(o) in in_ids or id(o) in self._prov:
+                continue
+            self._prov[id(o)] = (eqn, list(invals))
+            self._keep.append(o)
+
+    def producer(self, val) -> tuple[Any, list[Any]] | None:
+        """``(eqn, invals)`` that produced ``val`` in this replay, or None
+        (inputs, constants, and literal operands have no producer)."""
+        return self._prov.get(id(val))
+
+
+def replay_jaxpr(closed, flat_args: Sequence[Any],
+                 rule: RewriteRule | None, *,
+                 ctx: RewriteContext | None = None) -> list[Any]:
+    """Replay a closed jaxpr, giving ``rule`` first shot at every equation.
+
+    Call-like primitives in ``_INLINE_PRIMITIVES`` are inlined so the rule
+    sees their body equations.  With a ``ctx``, provenance is recorded for
+    every produced value (inlined bodies included).
+    """
+    from jax._src.core import Literal
+
+    jaxpr = closed.jaxpr
+    if len(flat_args) != len(jaxpr.invars):
+        raise ValueError(f"replay expected {len(jaxpr.invars)} input leaves, "
+                         f"got {len(flat_args)}")
+
+    def run(eqns, env):
+        def read(v):
+            return v.val if isinstance(v, Literal) else env[v]
+
+        for eqn in eqns:
+            inner = nested_jaxpr(eqn)
+            if inner is not None and eqn.primitive.name in _INLINE_PRIMITIVES:
+                sub_env = dict(zip(inner.jaxpr.constvars, inner.consts))
+                sub_env.update(zip(inner.jaxpr.invars,
+                                   [read(v) for v in eqn.invars]))
+                run(inner.jaxpr.eqns, sub_env)
+                for ov, iv in zip(eqn.outvars, inner.jaxpr.outvars):
+                    env[ov] = (iv.val if isinstance(iv, Literal)
+                               else sub_env[iv])
+                continue
+            invals = [read(v) for v in eqn.invars]
+            out = rule.on_eqn(eqn, invals, ctx) if rule is not None else None
+            if out is None:
+                out = bind_eqn(eqn, invals)
+            if ctx is not None:
+                ctx.note(eqn, invals, out)
+            for v, val in zip(eqn.outvars, out):
+                if type(v).__name__ != "DropVar":
+                    env[v] = val
+        return env
+
+    env = dict(zip(jaxpr.constvars, closed.consts))
+    env.update(zip(jaxpr.invars, flat_args))
+    run(jaxpr.eqns, env)
+    return [v.val if isinstance(v, Literal) else env[v]
+            for v in jaxpr.outvars]
+
+
+def dce_closed(closed):
+    """Dead-code-eliminate a closed jaxpr.
+
+    Returns ``(jaxpr, consts, used)``: an open jaxpr whose invars are the
+    original ``[*constvars, *invars]`` filtered by the ``used`` mask, plus
+    the matching constant values.  Scan/while/pjit bodies are pruned too
+    (partial_eval registers DCE rules for them).
+    """
+    from jax._src.interpreters import partial_eval as pe
+
+    jaxpr = closed.jaxpr
+    consts = list(closed.consts)
+    if jaxpr.constvars:
+        jaxpr = pe.convert_constvars_jaxpr(jaxpr)
+    dced, used = pe.dce_jaxpr(jaxpr, [True] * len(jaxpr.outvars))
+    return dced, consts, list(used)
+
+
+def build_candidate(closed, rule: RewriteRule, example_args: Sequence[Any],
+                    *, name: str) -> tuple[Callable, int]:
+    """Apply ``rule`` to a captured jaxpr and package the result.
+
+    Replays ``closed`` under ``rule`` with provenance, retraces the result,
+    DCEs equations the rewrites orphaned, and returns ``(candidate,
+    sites)`` where ``candidate`` is an ordinary callable over the same
+    argument pytree (returning the flat output leaves as a tuple) and
+    ``sites`` counts the equations the rule actually rewrote.
+    """
+    example_args = tuple(example_args)
+
+    def raw(*args):
+        ctx = RewriteContext()
+        outs = replay_jaxpr(closed, jax.tree_util.tree_leaves(args), rule,
+                            ctx=ctx)
+        return tuple(outs)
+
+    rule.reset()
+    retraced = jax.make_jaxpr(raw)(*example_args)
+    sites = rule.applied
+    if sites == 0:
+        return None, 0
+
+    dced, consts, used = dce_closed(retraced)
+
+    def candidate(*args):
+        leaves = [*consts, *jax.tree_util.tree_leaves(args)]
+        kept = [v for v, u in zip(leaves, used) if u]
+        return tuple(jax.core.eval_jaxpr(dced, [], *kept))
+
+    candidate.__name__ = name
+    return candidate, sites

@@ -1,0 +1,162 @@
+"""The detect→transform→verify loop: propose inverse rewrites for a
+wasteful program and verify them with the differential pipeline itself.
+
+:func:`optimize` is the entry point.  Given a wasteful callable (and
+optionally the :class:`~repro.core.diagnose.Diagnosis` that flagged it), it
+
+1. captures the target through the session (content-addressed, priced),
+2. replays the target's jaxpr under each applicable inverse rewrite
+   (``repro.optimize.rewrites``), retracing + DCE-ing a candidate callable
+   per rewrite — the diagnosed subkind's inverse is proposed first,
+3. re-captures every candidate with the *same* functional-equivalence gate
+   the detector uses (``gate_against`` the target capture — a candidate
+   that changes the answer is rejected, not reported),
+4. ranks target + surviving candidates with ``Session.rank`` at N≫2 and
+   emits a :class:`~repro.optimize.patch.PatchReport` whose win margins
+   come from the session's energy backend.
+
+The verification gates are exactly the detector's own: a rewrite is never
+trusted because the pattern matched — only because the rewritten program
+computed the same answer and priced cheaper under the session backend.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+
+from repro.core.diagnose import Diagnosis
+from repro.optimize.engine import build_candidate
+from repro.optimize.patch import PatchCandidate, PatchReport
+from repro.optimize.rewrites import REWRITES, rewrites_for
+
+
+def propose(closed, example_args: Sequence[Any], *,
+            subkind: str | None = None,
+            rewrite_names: Sequence[str] | None = None,
+            target_name: str = "target"
+            ) -> list[tuple[Any, Callable | None, int, str | None]]:
+    """Build rewrite candidates for a captured jaxpr, without verifying.
+
+    Returns ``(rule, candidate, sites, error)`` per attempted rewrite:
+    ``candidate`` is None when the rewrite found no site (``sites == 0``)
+    or the rewritten program failed to retrace (``error`` holds why).
+    """
+    names = list(rewrite_names) if rewrite_names is not None \
+        else rewrites_for(subkind)
+    out = []
+    for rname in names:
+        rule = REWRITES[rname]()
+        try:
+            cand, sites = build_candidate(
+                closed, rule, example_args,
+                name=f"{target_name}__fix_{rname}")
+        except Exception as e:   # a broken candidate is a result, not a crash
+            out.append((rule, None, 0, f"{type(e).__name__}: {e}"))
+            continue
+        out.append((rule, cand, sites, None))
+    return out
+
+
+def optimize(fn: Callable, example_args: Sequence[Any], *,
+             session=None,
+             name: str | None = None,
+             diagnosis: Diagnosis | None = None,
+             subkind: str | None = None,
+             rewrite_names: Sequence[str] | None = None,
+             output_rtol: float | None = None,
+             config: Mapping[str, Any] | None = None) -> PatchReport:
+    """Propose, verify, and rank inverse rewrites for a wasteful program.
+
+    ``diagnosis`` (or a bare ``subkind``) orients the proposal: the
+    diagnosed class's inverse is tried first, the remaining rewrites ride
+    along as extra rank columns.  ``output_rtol`` overrides the
+    per-rewrite functional-equivalence tolerance (bf16 rewrites default
+    looser — see ``Rewrite.verify_rtol``).
+    """
+    from repro.core.session import Session
+
+    session = session or Session()
+    example_args = tuple(example_args)
+    target_name = name or getattr(fn, "__name__", "target")
+
+    target = session.capture(fn, example_args, name=target_name,
+                             config=config)
+    closed = target.graph.closed_jaxpr
+    if closed is None:
+        raise ValueError(f"target {target_name!r} has no captured jaxpr "
+                         "(loaded sketch-only artifact?); optimize needs "
+                         "a live capture")
+    if subkind is None and diagnosis is not None:
+        subkind = diagnosis.subkind
+
+    proposals = propose(closed, example_args, subkind=subkind,
+                        rewrite_names=rewrite_names,
+                        target_name=target_name)
+
+    candidates: list[PatchCandidate] = []
+    survivors = []               # (PatchCandidate, CandidateArtifact)
+    for rule, cand, sites, error in proposals:
+        entry = PatchCandidate(rewrite=rule.name, inverts=rule.name,
+                               status="inapplicable", sites=sites)
+        if error is not None:
+            entry.status = "failed"
+            entry.reason = error
+        elif sites == 0:
+            entry.reason = rule.skip_summary()
+        else:
+            rtol = output_rtol if output_rtol is not None else rule.verify_rtol
+            try:
+                art = session.capture(cand, example_args,
+                                      name=cand.__name__,
+                                      gate_against=target,
+                                      output_rtol=rtol, config=config)
+            except ValueError as e:
+                entry.status = "rejected"
+                entry.reason = str(e)
+            except Exception as e:
+                entry.status = "failed"
+                entry.reason = f"{type(e).__name__}: {e}"
+            else:
+                entry.energy_j = art.total_energy_j
+                entry.key = art.key
+                entry.win_j = target.total_energy_j - art.total_energy_j
+                entry.win_pct = (entry.win_j / target.total_energy_j * 100.0
+                                 if target.total_energy_j > 0 else 0.0)
+                entry.status = "verified" if entry.win_j > 0 else "no_win"
+                survivors.append((entry, art))
+        candidates.append(entry)
+
+    report = PatchReport(target=target_name, target_key=target.key,
+                         target_energy_j=target.total_energy_j,
+                         subkind=subkind, candidates=candidates,
+                         diagnosis=diagnosis,
+                         meta={"backend": session.backend.name
+                               if hasattr(session.backend, "name") else None,
+                               "n_proposed": len(proposals),
+                               "n_verified": sum(
+                                   1 for c in candidates
+                                   if c.status == "verified")})
+
+    # N-way rank: target + every gate-surviving candidate.  Pairwise
+    # candidate-candidate compares may see up to 2x the per-candidate
+    # tolerance (triangle inequality through the target), so widen.
+    if survivors:
+        rank_rtol = 2.0 * max(
+            output_rtol if output_rtol is not None
+            else REWRITES[e.rewrite]().verify_rtol
+            for e, _ in survivors)
+        try:
+            rank = session.rank([target] + [a for _, a in survivors],
+                                output_rtol=rank_rtol)
+            report.meta["rank_matrix"] = {
+                "names": rank.names,
+                "total_energy_j": rank.total_energy_j,
+                "waste_matrix": rank.waste_matrix,
+            }
+        except Exception as e:   # rank is reporting sugar, not a gate
+            report.meta["rank_error"] = f"{type(e).__name__}: {e}"
+
+    report.sort()
+    return report

@@ -1,0 +1,102 @@
+"""Ranked patch reports: the optimizer's output artifact.
+
+A :class:`PatchReport` records, for one wasteful target, every inverse
+rewrite that was tried: whether it applied (``sites``), whether the
+candidate survived the functional-equivalence gate, what it cost, and the
+energy win vs the target.  Reports round-trip through JSON
+(``kind: "patch"``) so ``python -m repro.cli report`` can re-render them,
+and embed the N-way rank matrix under ``meta['rank_matrix']`` exactly like
+``Session.rank`` reports do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping
+
+from repro.core.diagnose import Diagnosis
+from repro.core.report import render_patch_report
+
+# candidate lifecycle:
+#   verified     passed the equivalence gate AND priced strictly cheaper
+#   no_win       passed the gate but did not price cheaper
+#   rejected     failed the functional-equivalence gate
+#   failed       the rewritten program could not be built/captured
+#   inapplicable the rewrite found no site in the target jaxpr
+CANDIDATE_STATUSES = ("verified", "no_win", "rejected", "failed",
+                      "inapplicable")
+
+_STATUS_ORDER = {s: i for i, s in enumerate(CANDIDATE_STATUSES)}
+
+
+@dataclasses.dataclass
+class PatchCandidate:
+    rewrite: str                 # rewrite registry name
+    inverts: str                 # mutation class this rewrite inverts
+    status: str                  # one of CANDIDATE_STATUSES
+    sites: int = 0
+    reason: str | None = None    # why rejected/failed/inapplicable
+    energy_j: float | None = None
+    win_j: float | None = None   # target energy - candidate energy
+    win_pct: float | None = None
+    key: str | None = None       # candidate artifact key, when captured
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PatchCandidate":
+        return cls(rewrite=d["rewrite"], inverts=d["inverts"],
+                   status=d["status"], sites=d.get("sites", 0),
+                   reason=d.get("reason"), energy_j=d.get("energy_j"),
+                   win_j=d.get("win_j"), win_pct=d.get("win_pct"),
+                   key=d.get("key"))
+
+
+@dataclasses.dataclass
+class PatchReport:
+    target: str                  # target candidate name
+    target_key: str | None
+    target_energy_j: float
+    subkind: str | None          # diagnosed subkind that drove the proposal
+    candidates: list[PatchCandidate]
+    diagnosis: Diagnosis | None = None
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def best(self) -> PatchCandidate | None:
+        """The cheapest verified candidate, or None."""
+        verified = [c for c in self.candidates if c.status == "verified"]
+        if not verified:
+            return None
+        return min(verified, key=lambda c: c.energy_j)
+
+    @property
+    def verified(self) -> list[PatchCandidate]:
+        return [c for c in self.candidates if c.status == "verified"]
+
+    def sort(self) -> None:
+        """Rank in place: verified by ascending energy, then the also-rans
+        grouped by how far they got."""
+        self.candidates.sort(key=lambda c: (
+            _STATUS_ORDER.get(c.status, len(_STATUS_ORDER)),
+            c.energy_j if c.energy_j is not None else float("inf")))
+
+    def render(self) -> str:
+        return render_patch_report(self)
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["kind"] = "patch"
+        return json.dumps(d, indent=2)
+
+    @classmethod
+    def from_json(cls, data: str | Mapping[str, Any]) -> "PatchReport":
+        d = json.loads(data) if isinstance(data, str) else dict(data)
+        diag = d.get("diagnosis")
+        if diag is not None:
+            diag = Diagnosis.from_dict(diag)
+        return cls(target=d["target"], target_key=d.get("target_key"),
+                   target_energy_j=d["target_energy_j"],
+                   subkind=d.get("subkind"),
+                   candidates=[PatchCandidate.from_dict(c)
+                               for c in d["candidates"]],
+                   diagnosis=diag, meta=dict(d.get("meta", {})))

@@ -29,7 +29,8 @@ from repro.testing.baselines import (Baseline, BaselineError, BaselineStore,
                                      Drift, MissingBaselineError,
                                      diff_baselines)
 from repro.testing.mutate import (MUTATIONS, CleanProgram, DtypeUpcast,
-                                  Mutation, OpSplit, OversizedPadding,
+                                  InapplicableMutationError, Mutation,
+                                  OpSplit, OversizedPadding,
                                   RedundantRecompute, Scenario, SyncInLoop,
                                   ValidationResult, clean_programs,
                                   generate_scenarios, make_mutant,
@@ -48,7 +49,8 @@ def __getattr__(name):
 __all__ = [
     "Baseline", "BaselineError", "BaselineStore", "Drift",
     "MissingBaselineError", "diff_baselines",
-    "MUTATIONS", "CleanProgram", "DtypeUpcast", "Mutation", "OpSplit",
+    "MUTATIONS", "CleanProgram", "DtypeUpcast", "InapplicableMutationError",
+    "Mutation", "OpSplit",
     "OversizedPadding", "RedundantRecompute", "Scenario", "SyncInLoop",
     "ValidationResult", "clean_programs", "generate_scenarios", "make_mutant",
     "validate_detector",

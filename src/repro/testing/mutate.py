@@ -53,72 +53,64 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.diagnose import DIAGNOSIS_KINDS
-
-# Call-like higher-order primitives whose bodies the replay inlines so
-# mutations can see the equations inside (jnp.einsum / jnp.matmul are jitted
-# and would otherwise hide their dot_general behind a pjit eqn).  shard_map
-# is NOT inlined: its collectives need the mesh context, so it is re-bound
-# as-is, matching graph.py's treatment of scan/while/cond super-nodes.
-_INLINE_PRIMITIVES = ("pjit", "jit", "closed_call", "custom_jvp_call",
-                      "custom_vjp_call", "remat", "checkpoint",
-                      "custom_vjp_call_jaxpr")
-
-
-def _nested_jaxpr(eqn):
-    from repro.core.graph import _nested_jaxpr as nj
-    return nj(eqn)
-
-
-def _bind(eqn, invals):
-    subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
-    out = eqn.primitive.bind(*subfuns, *invals, **bind_params)
-    return out if eqn.primitive.multiple_results else [out]
-
-
-def _bind_with_params(eqn, invals, params):
-    subfuns, bind_params = eqn.primitive.get_bind_params(params)
-    out = eqn.primitive.bind(*subfuns, *invals, **bind_params)
-    return out if eqn.primitive.multiple_results else [out]
+from repro.core.diagnose import DIAGNOSIS_KINDS, DIAGNOSIS_SUBKINDS
+# The replay interpreter and bind helpers moved to the shared bidirectional
+# rewrite engine (repro.optimize.engine) when the inverse rewrites landed;
+# the historical names stay importable from here.
+from repro.optimize.engine import _INLINE_PRIMITIVES  # noqa: F401
+from repro.optimize.engine import RewriteRule
+from repro.optimize.engine import bind_eqn as _bind
+from repro.optimize.engine import bind_eqn_with_params as _bind_with_params
+from repro.optimize.engine import nested_jaxpr as _nested_jaxpr  # noqa: F401
+from repro.optimize.engine import replay_jaxpr
 
 
 def _is_float(x) -> bool:
     return jnp.issubdtype(jnp.result_type(x), jnp.floating)
 
 
+class InapplicableMutationError(ValueError):
+    """A mutation found no applicable site in the program's jaxpr.
+
+    Raised by :func:`make_mutant` instead of silently returning an
+    unchanged twin (a mutant identical to its clean program makes any
+    downstream "the detector must alarm" check vacuously green — the PR 7
+    serving demo hit exactly that with ``dtype_upcast`` on a bf16 model).
+    ``reasons`` carries the per-site near-miss notes the mutation recorded.
+    """
+
+    def __init__(self, mutation: "Mutation", fn_name: str):
+        self.mutation_name = mutation.name
+        self.reasons = list(mutation.skipped)
+        detail = ("; ".join(self.reasons) if self.reasons
+                  else "no applicable equation in the jaxpr")
+        super().__init__(
+            f"mutation {mutation.name!r} found no applicable site in "
+            f"{fn_name!r}: {detail}")
+
+
 # ---------------------------------------------------------------------------
 # mutations
 # ---------------------------------------------------------------------------
 
-class Mutation:
+class Mutation(RewriteRule):
     """One waste pattern, applied at replay time.
 
     Subclasses override :meth:`rewrite` to return replacement output values
     for an equation (or ``None`` to leave it untouched).  ``max_sites``
     bounds how many applicable sites are mutated (default: all);
-    ``applied`` counts the sites actually rewritten in the last trace.
+    ``applied`` counts the sites actually rewritten in the last trace;
+    near-miss sites record why via :meth:`RewriteRule.decline` so a
+    zero-site mutation can explain itself.
     """
 
     name: str = "?"
     expected_kinds: tuple[str, ...] = ()
 
-    def __init__(self, max_sites: int | None = None):
-        self.max_sites = max_sites
-        self.applied = 0
-
-    def reset(self) -> None:
-        self.applied = 0
-
-    def _take(self) -> bool:
-        if self.max_sites is not None and self.applied >= self.max_sites:
-            return False
-        self.applied += 1
-        return True
-
     def rewrite(self, eqn, invals) -> list[Any] | None:
         raise NotImplementedError
 
-    def on_eqn(self, eqn, invals) -> list[Any] | None:
+    def on_eqn(self, eqn, invals, ctx=None) -> list[Any] | None:
         out = self.rewrite(eqn, invals)
         if out is not None and not isinstance(out, (list, tuple)):
             out = [out]
@@ -138,11 +130,15 @@ class DtypeUpcast(Mutation):
         if eqn.primitive.name != "dot_general":
             return None
         if "HIGHEST" in str(eqn.params.get("precision")).upper():
-            return None                      # already running upcast
+            self.decline("dot_general already bound at precision=HIGHEST")
+            return None
         # f32 dots only: HIGHEST on bf16 storage changes the accumulation
         # numerics, so the mutant would no longer be bitwise-equivalent and
         # the matcher could not localize the region
         if any(getattr(x, "dtype", None) == jnp.bfloat16 for x in invals):
+            self.decline("dot_general runs on bf16 storage (HIGHEST would "
+                         "change accumulation numerics); upcast an f32 dot "
+                         "or use a program with a master-precision dot")
             return None
         if not self._take():
             return None
@@ -235,8 +231,11 @@ class OpSplit(Mutation):
         (x,) = invals
         # f32 only: the split formulas round through exp, and in bf16 the
         # accumulated rounding (~0.8%/step) can breach the equivalence gate
-        if not _is_float(x) or jnp.result_type(x) != jnp.float32 \
-                or not self._take():
+        if not _is_float(x) or jnp.result_type(x) != jnp.float32:
+            self.decline(f"{prim} runs on {jnp.result_type(x)} (split "
+                         "formulas only stay within the gate in f32)")
+            return None
+        if not self._take():
             return None
         if prim == "tanh":
             xc = jnp.clip(x, -20.0, 20.0)    # exp(2x) stays finite
@@ -280,7 +279,10 @@ class ScanBodyWaste(Mutation):
         if eqn.primitive.name != "scan":
             return None
         body = eqn.params["jaxpr"]
-        if not _contains_dot(body) or not self._take():
+        if not _contains_dot(body):
+            self.decline("scan body binds no dot_general to recompute")
+            return None
+        if not self._take():
             return None
         num_consts = eqn.params["num_consts"]
         num_carry = eqn.params["num_carry"]
@@ -344,6 +346,8 @@ class StorageUpcast(Mutation):
             return None
         if not all(hasattr(x, "dtype") and x.dtype == jnp.bfloat16
                    for x in invals):
+            self.decline(f"{eqn.primitive.name} operands are not uniformly "
+                         "bf16 (nothing to bounce through f32 storage)")
             return None
         if not self._take():
             return None
@@ -359,6 +363,10 @@ MUTATIONS: dict[str, type[Mutation]] = {
 
 assert all(k in DIAGNOSIS_KINDS for m in MUTATIONS.values()
            for k in m.expected_kinds)
+# the finer subkind taxonomy (and the inverse-rewrite registry keyed on it)
+# must stay in lockstep with the mutation classes
+assert set(MUTATIONS) == set(DIAGNOSIS_SUBKINDS), \
+    (set(MUTATIONS), set(DIAGNOSIS_SUBKINDS))
 
 
 def default_mutations() -> list[Mutation]:
@@ -370,52 +378,23 @@ def default_mutations() -> list[Mutation]:
 # ---------------------------------------------------------------------------
 
 def _replay(closed, flat_args: Sequence[Any], mutation: Mutation) -> list[Any]:
-    from jax._src.core import Literal
-
-    jaxpr = closed.jaxpr
-    if len(flat_args) != len(jaxpr.invars):
-        raise ValueError(f"mutant expected {len(jaxpr.invars)} input leaves, "
-                         f"got {len(flat_args)}")
-
-    def run(eqns, env):
-        def read(v):
-            return v.val if isinstance(v, Literal) else env[v]
-
-        for eqn in eqns:
-            inner = _nested_jaxpr(eqn)
-            if inner is not None and eqn.primitive.name in _INLINE_PRIMITIVES:
-                sub_env = dict(zip(inner.jaxpr.constvars, inner.consts))
-                sub_env.update(zip(inner.jaxpr.invars,
-                                   [read(v) for v in eqn.invars]))
-                run(inner.jaxpr.eqns, sub_env)
-                for ov, iv in zip(eqn.outvars, inner.jaxpr.outvars):
-                    env[ov] = (iv.val if isinstance(iv, Literal)
-                               else sub_env[iv])
-                continue
-            invals = [read(v) for v in eqn.invars]
-            out = mutation.on_eqn(eqn, invals)
-            if out is None:
-                out = _bind(eqn, invals)
-            for v, val in zip(eqn.outvars, out):
-                if type(v).__name__ != "DropVar":
-                    env[v] = val
-        return env
-
-    env = dict(zip(jaxpr.constvars, closed.consts))
-    env.update(zip(jaxpr.invars, flat_args))
-    run(jaxpr.eqns, env)
-    return [v.val if isinstance(v, Literal) else env[v]
-            for v in jaxpr.outvars]
+    return replay_jaxpr(closed, flat_args, mutation)
 
 
 def make_mutant(fn: Callable, mutation: Mutation, example_args: Sequence[Any],
-                *, name: str | None = None) -> tuple[Callable, int]:
+                *, name: str | None = None,
+                allow_zero_sites: bool = False) -> tuple[Callable, int]:
     """Build the mutated twin of ``fn`` and count its mutated sites.
 
-    Returns ``(mutant, sites)``; ``sites == 0`` means the mutation found no
-    applicable equation in ``fn``'s jaxpr (scenario not generated).  The
-    mutant is an ordinary callable over the same argument pytree, so it can
-    be captured, jitted, or compared like any hand-written candidate.
+    Returns ``(mutant, sites)``.  A mutation that finds no applicable
+    equation raises :class:`InapplicableMutationError` carrying the
+    mutation's recorded skip reasons — a zero-site mutant is bitwise the
+    clean program, which silently turns "the detector must alarm on this"
+    checks vacuous (the PR 7 serving demo shipped exactly that).  Pass
+    ``allow_zero_sites=True`` to get the old ``(mutant, 0)`` behavior for
+    callers that probe applicability themselves.  The mutant is an ordinary
+    callable over the same argument pytree, so it can be captured, jitted,
+    or compared like any hand-written candidate.
     """
     example_args = tuple(example_args)
     closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
@@ -430,6 +409,9 @@ def make_mutant(fn: Callable, mutation: Mutation, example_args: Sequence[Any],
                                f"__{mutation.name}")
     mutation.reset()
     jax.eval_shape(mutant, *example_args)
+    if mutation.applied == 0 and not allow_zero_sites:
+        raise InapplicableMutationError(
+            mutation, getattr(fn, "__name__", "fn"))
     return mutant, mutation.applied
 
 
@@ -511,6 +493,17 @@ def clean_programs() -> list[CleanProgram]:
     def act_chain_bf16(x):
         return jnp.tanh(x) * jax.nn.sigmoid(x + jnp.bfloat16(1.0))
 
+    w_master = jax.random.normal(ks[4], (128, 128), jnp.float32) * 0.1
+
+    def mlp_bf16_master(x):
+        # mixed precision with f32 master weights: bf16 storage upcast to
+        # f32 around the dot.  This is the one program where dtype_upcast
+        # has a site on a bf16 model (the dot itself runs f32), closing the
+        # gap PR 7 hit: serving models default to bf16, where dtype_upcast
+        # declines every dot and used to yield a silent zero-site mutant.
+        h = x.astype(jnp.float32) @ w_master
+        return jnp.tanh(h).astype(jnp.bfloat16)
+
     def _qkv():
         kq, kk, kv = jax.random.split(ks[4], 3)
         shape = (1, 2, 64, 128)   # head_dim 128: the score matmul's 3x fp32
@@ -542,6 +535,10 @@ def clean_programs() -> list[CleanProgram]:
                                                 ).astype(jnp.bfloat16),)),
         CleanProgram("act_chain_bf16", act_chain_bf16,
                      lambda: (jax.random.normal(ks[11], (128, 128),
+                                                jnp.float32
+                                                ).astype(jnp.bfloat16),)),
+        CleanProgram("mlp_bf16_master", mlp_bf16_master,
+                     lambda: (jax.random.normal(ks[6], (64, 128),
                                                 jnp.float32
                                                 ).astype(jnp.bfloat16),)),
     ]
@@ -576,9 +573,10 @@ def generate_scenarios(programs: Sequence[CleanProgram] | None = None,
         args = prog.make_args()
         for mname in names:
             mutation = MUTATIONS[mname]()
-            mutant, sites = make_mutant(prog.fn, mutation, args)
+            mutant, sites = make_mutant(prog.fn, mutation, args,
+                                        allow_zero_sites=True)
             if sites == 0:
-                continue
+                continue                     # inapplicable pair, by design
             out.append(Scenario(program=prog, mutation=mutation,
                                 mutant=mutant, sites=sites))
     return out

@@ -196,6 +196,24 @@ def test_mutated_engine_alarms_with_diagnosis_kind(served):
     assert alarm.class_key == rc.key
 
 
+def test_inapplicable_decode_mutation_fails_loudly(served):
+    """dtype_upcast has no site on a bf16 serving model (every dot runs on
+    bf16 storage).  The audit must surface that as an explicit probe error
+    in ``audit_last_error`` — not sample a silently-unmutated clean twin
+    that can never alarm (the PR 7 vacuous-green failure mode)."""
+    cfg, params, _, root = served
+    assert str(cfg.dtype) == "bfloat16"
+    eng = ServeEngine(cfg, params, ecfg=EngineConfig(
+        batch_size=2, max_len=48, audit_sample_every=1, store=str(root),
+        engine_id="inapplicable", audit_timeout_s=300.0,
+        audit_mutate_decode="dtype_upcast"))
+    eng._observe_audit("decode", 2, 12, latency_s=0.001)
+    assert eng.stats["audit_failures"] >= 1
+    err = eng.stats["audit_last_error"] or ""
+    assert "dtype_upcast" in err and "no applicable site" in err
+    assert eng.auditor.alarms == []             # no fake alarm either
+
+
 def test_fleet_status_aggregates_engines_and_alarms(served):
     _, _, _, root = served
     status = fleet_status(str(root))

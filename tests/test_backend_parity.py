@@ -132,6 +132,16 @@ def test_disagreement_ledgers_name_real_cases():
         assert zoo.get_case(cid).expect_detect, cid
 
 
+def test_sign_disagreement_ledger_only_shrinks():
+    """The two residual sign flips are pinned BY NAME: a new entry means a
+    new attribution defect (fix it, don't ledger it), while an entry
+    dropping out is progress (the paired test above forces its removal)."""
+    assert set(KNOWN_SIGN_DISAGREEMENTS) <= {"c15-expm", "c7-concat-split"}, (
+        "the sign-disagreement ledger grew beyond the two documented flips "
+        f"({sorted(set(KNOWN_SIGN_DISAGREEMENTS) - {'c15-expm', 'c7-concat-split'})}); "
+        "new backend disagreements must be fixed, not added to the ledger")
+
+
 # ---------------------------------------------------------------------------
 # parity matrix on GENERATED cases: attribution quality is gated on the
 # mutation engine's scenarios, not just the hand-written zoo twins

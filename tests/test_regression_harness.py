@@ -27,9 +27,9 @@ import pytest
 import repro.core.interp as interp
 from repro.core.diagnose import DIAGNOSIS_KINDS
 from repro.testing.baselines import (Baseline, BaselineStore, diff_baselines)
-from repro.testing.mutate import (MUTATIONS, clean_programs,
-                                  generate_scenarios, make_mutant,
-                                  validate_detector)
+from repro.testing.mutate import (MUTATIONS, InapplicableMutationError,
+                                  clean_programs, generate_scenarios,
+                                  make_mutant, validate_detector)
 from repro.testing.pytest_plugin import assert_no_energy_regression
 from repro.zoo import cases as zoo
 
@@ -175,10 +175,11 @@ def test_new_waste_classes_target_the_planted_constructs():
     want = np.asarray(scan_prog.fn(*args))
     np.testing.assert_array_equal(np.asarray(mutant(*args)), want)
 
-    # no scan -> no site
+    # no scan -> no site, and the refusal says why
     mlp = progs["mlp_swiglu"]
-    _, sites = make_mutant(mlp.fn, MUTATIONS["scan_body"](), mlp.make_args())
-    assert sites == 0
+    with pytest.raises(InapplicableMutationError,
+                       match="no applicable site"):
+        make_mutant(mlp.fn, MUTATIONS["scan_body"](), mlp.make_args())
 
     # layout_thrash: bitwise-identical values, one site per dot
     args = mlp.make_args()
@@ -195,9 +196,9 @@ def test_new_waste_classes_target_the_planted_constructs():
     got = np.asarray(mutant(*args), dtype=np.float32)
     want = np.asarray(bf16.fn(*args), dtype=np.float32)
     np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
-    _, sites = make_mutant(mlp.fn, MUTATIONS["storage_upcast"](),
-                           mlp.make_args())
-    assert sites == 0
+    with pytest.raises(InapplicableMutationError,
+                       match="not uniformly.*bf16|bf16"):
+        make_mutant(mlp.fn, MUTATIONS["storage_upcast"](), mlp.make_args())
 
 
 def test_mutants_preserve_semantics():
@@ -208,7 +209,8 @@ def test_mutants_preserve_semantics():
     want = np.asarray(prog.fn(*args))
     seen = set()
     for name, cls in MUTATIONS.items():
-        mutant, sites = make_mutant(prog.fn, cls(), args)
+        mutant, sites = make_mutant(prog.fn, cls(), args,
+                                    allow_zero_sites=True)
         if sites == 0:
             continue
         seen.add(name)
@@ -259,12 +261,12 @@ def test_energy_gate_fails_on_injected_regression(tmp_path):
     fn, args = _norm_prog()
     path = tmp_path / "norm.npz"
     assert_no_energy_regression(fn, args, path, record=True)
-    mutant, sites = make_mutant(fn, MUTATIONS["oversized_padding"](), args)
-    assert sites == 0                         # no matmul in rms_norm
-    mutant, sites = make_mutant(fn, MUTATIONS["op_split"](), args)
-    assert sites == 0                         # rsqrt is not split
-    mutant, sites = make_mutant(fn, MUTATIONS["sync_in_loop"](), args)
-    assert sites == 0
+    # inapplicable mutations refuse loudly instead of minting a clean twin
+    for inapplicable in ("oversized_padding",   # no matmul in rms_norm
+                         "op_split",            # rsqrt is not split
+                         "sync_in_loop"):
+        with pytest.raises(InapplicableMutationError):
+            make_mutant(fn, MUTATIONS[inapplicable](), args)
     # recompute has no dot either -> plant the waste by hand: double work
     def regressed(x, scale):
         a = fn(x, scale)

@@ -139,6 +139,35 @@ echo "== chaos (offline replay under seeded faults) =="
 python scripts/chaos_check.py
 echo "chaos OK"
 
+echo "== matcher-scaling (fig9: hierarchical matcher to 5k+ nodes) =="
+# Runs the fig9 harness (which itself asserts streaming capture <= eager
+# capture at every config >= 161 nodes, stamped == exhaustive/streamed pair
+# parity, >= 10x over the N^2 eager extrapolation at 5k nodes, and no
+# throughput cliff), then gates the emitted BENCH_matcher.json on the
+# headline scaling bound: nodes/sec at the 5121-node config must be at
+# least the 41-node config's rate — hierarchical matching may not decay
+# toward the quadratic baseline as graphs grow.
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fig9_scalability.py
+python - <<'PY'
+import json
+d = json.load(open("BENCH_matcher.json"))
+cfg = d["configs"]
+small, big = cfg["41"], cfg["5121"]
+r_small, r_big = small["nodes_per_sec"], big["nodes_per_sec"]
+print(f"matcher-scaling: {r_small:.0f} nodes/sec @41 -> "
+      f"{r_big:.0f} nodes/sec @5121 "
+      f"(speedup vs N^2 extrapolation: {big['speedup']:.0f}x)")
+assert r_big >= r_small, (
+    f"matcher throughput decayed with size: {r_big:.0f} nodes/sec at 5121 "
+    f"nodes < {r_small:.0f} at 41 (quadratic cliff)")
+for nodes, c in sorted(cfg.items(), key=lambda kv: int(kv[0])):
+    if int(nodes) >= 161:
+        assert c["capture_s_streaming"] <= c["capture_s_eager"], (
+            f"streaming capture slower than eager at {nodes} nodes")
+PY
+echo "matcher-scaling OK"
+
 if [[ "$FULL" == 1 ]]; then
     echo "== overhead benchmark (BENCH_overhead.json) =="
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \

@@ -1,0 +1,287 @@
+"""Block-stamped matching: prove tensor pairs bitwise-identical by induction.
+
+The hierarchical matcher's stamping layer.  ``graph.block_structure`` finds
+repeated-block families and canonical per-node digests; this module turns
+them into *twin pairs* — cross-graph tensor pairs (tid_a, tid_b) PROVEN
+bitwise-identical without ever touching their values:
+
+  base case    graph-input pairs whose captured value digests are equal on
+               every sample (inputs are the only tensors whose bytes we must
+               actually look at);
+  induction    a node pair with equal op digests (same primitive, params,
+               avals, mesh axes), whose produced/input operand slots pair up
+               as twins and whose const/literal operand slots have equal
+               value digests, produces twin outputs — single-device XLA
+               execution is deterministic, so identical ops over identical
+               bytes yield identical bytes.
+
+Twins let ``TensorMatcher.match_streamed`` STAMP phase-2 verdicts: a twin
+pair is equivalent by construction, on every sample, with zero fetches and
+zero SVDs — so matching a 160-layer stack costs one representative block's
+worth of spectral checks plus O(nodes) digest propagation, instead of
+O(nodes) SVD work.  Crucially the stamp can only *accept* pairs the
+exhaustive matcher would also accept (bitwise identity implies equal
+signatures); pairs it cannot prove fall through to the full two-phase
+pipeline unchanged, which keeps the fast path exhaustive-equivalent — the
+digest-demotion invariant: a mutated layer mid-stack demotes only its own
+pairs.
+
+``resolve_pending`` closes the boundary case: when a demoted (or simply
+unproven) pair blocks downstream induction, its actual values are batch-
+fetched ONCE per side, digest-compared across all samples, and — when a
+bitwise-preserving rewrite merely re-expressed the op — re-seeded as a twin
+so stamping resumes below the rewrite instead of degrading for the whole
+suffix of the stack.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import deque
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.graph import OpGraph, _value_digest, block_structure
+
+# Propagation is O(twin pairs x consumer fan-out); degenerate graphs (long
+# chains of bitwise-identical tensors on BOTH axes) could in principle pair
+# every tensor with every other.  Cap proven node-pair work far above any
+# real stack so pathological inputs degrade to partial stamping, never hang.
+_MAX_NODE_PAIRS = 500_000
+
+# A twin with huge fan-out on both sides (a weight matrix consumed by every
+# layer) would enumerate a quadratic consumer cross product, almost all of it
+# cross-layer node pairs that can never prove.  Skip enumeration for such
+# twins: any node pair worth checking is also triggered by its low-fan-out
+# activation operands, and the ubiquitous operand is then verified by a plain
+# twin-set lookup inside the check.
+_FANOUT_CAP = 64
+
+_PROVEN, _FAILED, _BLOCKED = 1, 2, 3
+
+
+class BlockStamper:
+    """Twin-pair prover over two live graphs and their captured samples.
+
+    ``samples_*`` are the per-sample argument tuples the graphs were captured
+    with (``Session`` keeps them on live artifacts).  Graphs rebuilt from
+    persisted artifacts carry stringified params whose digests are not
+    canonical across traces — the stamper refuses them (no twins) and the
+    matcher silently falls back to the full pipeline.
+    """
+
+    def __init__(self, graph_a: OpGraph, graph_b: OpGraph,
+                 samples_a: Sequence[Sequence[Any]],
+                 samples_b: Sequence[Sequence[Any]]):
+        self.graph_a = graph_a
+        self.graph_b = graph_b
+        self.twins: set[tuple[int, int]] = set()
+        self.pending: set[tuple[int, int]] = set()
+        self.reseeded = 0
+        self.demoted = 0
+        self._status: dict[tuple[int, int], int] = {}
+        self._waiting: dict[tuple[int, int], set[tuple[int, int]]] = {}
+        self._refuted: set[tuple[int, int]] = set()
+        self._queue: deque[tuple[int, int]] = deque()
+        self._checks = 0
+
+        live = (graph_a._eqns is not None and graph_b._eqns is not None
+                and len(samples_a) == len(samples_b) and samples_a)
+        if not live:
+            self._bs_a = self._bs_b = None
+            return
+        self._bs_a = block_structure(graph_a)
+        self._bs_b = block_structure(graph_b)
+        self._meta_a, roots_a = _node_meta(graph_a, self._bs_a)
+        self._meta_b, roots_b_list = _node_meta(graph_b, self._bs_b)
+
+        # base case: input pairs bitwise-equal on every sample
+        dig_a = _input_digests(graph_a, samples_a)
+        dig_b = _input_digests(graph_b, samples_b)
+        n = len(samples_a)
+        for ta in graph_a.inputs:
+            for tb in graph_b.inputs:
+                if all(dig_a[k].get(ta) == dig_b[k].get(tb)
+                       and dig_a[k].get(ta) is not None for k in range(n)):
+                    self._add_twin(ta, tb)
+        # nodes with no produced/input operands (const-only) have no twin
+        # trigger: seed their pairs directly, grouped by op digest
+        roots_b: dict[str, list[int]] = {}
+        for nb in roots_b_list:
+            roots_b.setdefault(self._bs_b.op_digests[nb], []).append(nb)
+        for na in roots_a:
+            for nb in roots_b.get(self._bs_a.op_digests[na], ()):
+                self._consider(na, nb)
+        self._drain()
+
+    # -- public --------------------------------------------------------------
+    def is_twin(self, ta: int, tb: int) -> bool:
+        return (ta, tb) in self.twins
+
+    @property
+    def stamped(self) -> int:
+        return len(self.twins)
+
+    def resolve_pending(self, fetch_a: Callable, fetch_b: Callable,
+                        n_samples: int, budget: int = 512) -> int:
+        """Digest-verify pending boundary pairs and re-seed twins from them.
+
+        ``fetch_*(k, tids) -> {tid: ndarray}`` are the matcher's phase-2
+        fetchers.  Each examined pair costs one sliced value fetch per side
+        per sample; ``budget`` bounds the total examined.  Returns the number
+        of pairs re-seeded.  Fetch errors abort resolution quietly — the
+        unresolved pairs simply stay with the full matcher.
+        """
+        before = self.reseeded
+        examined = 0
+        while examined < budget:
+            todo = sorted(p for p in self.pending
+                          if p not in self.twins and p not in self._refuted)
+            todo = todo[:budget - examined]
+            if not todo:
+                break
+            tids_a = sorted({p[0] for p in todo})
+            tids_b = sorted({p[1] for p in todo})
+            try:
+                dig_a = [_digest_values(fetch_a(k, tids_a))
+                         for k in range(n_samples)]
+                dig_b = [_digest_values(fetch_b(k, tids_b))
+                         for k in range(n_samples)]
+            except Exception:
+                break
+            for p in todo:
+                ta, tb = p
+                examined += 1
+                self.pending.discard(p)
+                ok = all(dig_a[k].get(ta) is not None
+                         and dig_a[k].get(ta) == dig_b[k].get(tb)
+                         for k in range(n_samples))
+                if ok:
+                    self.reseeded += 1
+                    self._add_twin(ta, tb)
+                else:
+                    self.demoted += 1
+                    self._refuted.add(p)
+            self._drain()
+        return self.reseeded - before
+
+    # -- internals -----------------------------------------------------------
+    def _add_twin(self, ta: int, tb: int) -> None:
+        p = (ta, tb)
+        if p in self.twins:
+            return
+        self.twins.add(p)
+        self._queue.append(p)
+
+    def _drain(self) -> None:
+        while self._queue:
+            ta, tb = self._queue.popleft()
+            w = self._waiting.pop((ta, tb), None)
+            if w:
+                for key in sorted(w):
+                    self._consider(*key)
+            cons_a = self.graph_a.tensors[ta].consumers
+            cons_b = self.graph_b.tensors[tb].consumers
+            if len(cons_a) * len(cons_b) > _FANOUT_CAP:
+                continue
+            for na in cons_a:
+                for nb in cons_b:
+                    self._consider(na, nb)
+
+    def _consider(self, na: int, nb: int) -> None:
+        key = (na, nb)
+        st = self._status.get(key)
+        if st in (_PROVEN, _FAILED):
+            return
+        if self._checks >= _MAX_NODE_PAIRS:
+            return
+        self._checks += 1
+        # precomputed (op_digest, slot kinds, const digests, live slots):
+        # equal tuples cover primitive/params/avals, operand arity, per-slot
+        # const/input/produced classification and const-value equality
+        ma = self._meta_a[na]
+        mb = self._meta_b[nb]
+        if ma[0] != mb[0] or ma[1] != mb[1] or ma[2] != mb[2]:
+            self._status[key] = _FAILED
+            return
+        node_a = self.graph_a.nodes[na]
+        node_b = self.graph_b.nodes[nb]
+        if len(node_a.outvars) != len(node_b.outvars):
+            self._status[key] = _FAILED
+            return
+        twins = self.twins
+        kinds = ma[1]
+        missing: list[tuple[int, int]] = []
+        for si in ma[3]:
+            p = (node_a.invars[si], node_b.invars[si])
+            if p in twins:
+                continue
+            if kinds[si] == 1:
+                # input digests are complete up front: non-twin means
+                # genuinely different bytes
+                self._status[key] = _FAILED
+                return
+            missing.append(p)
+        if missing:
+            self._status[key] = _BLOCKED
+            for p in missing:
+                self._waiting.setdefault(p, set()).add(key)
+                if p not in self._refuted:
+                    self.pending.add(p)
+            return
+        self._status[key] = _PROVEN
+        for oa, ob in zip(node_a.outvars, node_b.outvars):
+            self._add_twin(oa, ob)
+
+
+def _node_meta(graph: OpGraph, bs) -> tuple[list[tuple], list[int]]:
+    """Per-node operand metadata, memoized on the graph instance.
+
+    Each entry is ``(op_digest, slot kinds, const digests, live slots)``
+    where kinds are 0=produced / 1=input / 2=const per invar slot and live
+    slots are the non-const slot indices (the ones needing twin checks).
+    Also returns the const-only node list (no live slots — induction roots).
+    """
+    cached = getattr(graph, "_stamp_meta", None)
+    if cached is not None:
+        return cached
+    tensors = graph.tensors
+    metas: list[tuple] = []
+    roots: list[int] = []
+    for node in graph.nodes:
+        kinds: list[int] = []
+        cdigs: list[str] = []
+        live: list[int] = []
+        for si, t in enumerate(node.invars):
+            e = tensors[t]
+            if e.is_const:
+                kinds.append(2)
+                cdigs.append(bs.const_digest(t))
+            elif e.is_input:
+                kinds.append(1)
+                live.append(si)
+            else:
+                kinds.append(0)
+                live.append(si)
+        metas.append((bs.op_digests[node.idx], tuple(kinds),
+                      tuple(cdigs), tuple(live)))
+        if not live:
+            roots.append(node.idx)
+    out = (metas, roots)
+    graph._stamp_meta = out
+    return out
+
+
+def _input_digests(graph: OpGraph, samples) -> list[dict[int, str]]:
+    out = []
+    for sample in samples:
+        flat = jax.tree_util.tree_leaves(tuple(sample))
+        out.append({t: _value_digest(np.asarray(v))
+                    for t, v in zip(graph.inputs, flat)})
+    return out
+
+
+def _digest_values(values: dict[int, np.ndarray]) -> dict[int, str]:
+    return {t: _value_digest(np.asarray(v)) for t, v in values.items()}

@@ -13,8 +13,14 @@ Pipeline (now in session.py):
      the sample-0 execution's outputs double as the functional equivalence
      gate, so neither side is ever executed just for the gate,
   3. match semantically equivalent tensors (tensor_match.py, Hypothesis 1)
-     with the lazy two-phase matcher,
-  4. match semantically equivalent subgraphs (subgraph_match.py, Algorithm 1),
+     with the lazy two-phase matcher; on live graphs a block stamper
+     (block_match.py) first proves repeated-block pairs bitwise-identical
+     from canonical structural digests, so a deep stack costs one
+     representative block of spectral checks — stamped verdicts are
+     exhaustive-equivalent, and a mutated layer demotes only its own pairs,
+  4. match semantically equivalent subgraphs (subgraph_match.py, Algorithm 1)
+     with repeated-region template memoization and piecewise dominator-path
+     decomposition on large graphs (identical regions, ~linear scaling),
   5. price every region with the selected energy backend (energy.py),
   6. detect: regions whose energy differs by more than ``energy_threshold``
      while performance stays within ``perf_tolerance`` are software energy

@@ -30,16 +30,19 @@ _SNK = -4
 
 
 def _build_flow(graph: OpGraph, src_tids: Sequence[int],
-                snk_tids: Sequence[int]
+                snk_tids: Sequence[int],
+                nodes: list[int] | None = None,
                 ) -> tuple[dict[int, list[int]], list[int]]:
     """Adjacency of the op/tensor flow graph between given tensor frontiers.
 
     Also returns the between-set node list so callers don't recompute the
-    (BFS-heavy) ``subgraph_nodes_between`` for the same frontier.
+    (BFS-heavy) ``subgraph_nodes_between`` for the same frontier; a caller
+    that already has it can pass it in via ``nodes``.
     """
     succ: dict[int, list[int]] = {_SRC: [], _SNK: []}
     src_set, snk_set = set(src_tids), set(snk_tids)
-    nodes = graph.subgraph_nodes_between(src_set, snk_set)
+    if nodes is None:
+        nodes = graph.subgraph_nodes_between(src_set, snk_set)
     node_set = set(nodes)
 
     interior_tids: set[int] = set()
@@ -216,6 +219,162 @@ def _dominator_path(succ: dict[int, list[int]]) -> list[int]:
     return [rpo[i] for i in reversed(path)]
 
 
+# Regions smaller than this solve their dominator path monolithically; above
+# it the piecewise path (single-crossing pre-cuts + segment memo) amortizes
+# repeated-block spans.
+_PIECEWISE_MIN_NODES = 192
+
+_SEG_MISS = object()
+
+
+def _segment_dom(graph: OpGraph, sd: list[str], seg_memo: dict,
+                 src_t: list[int], snk_t: list[int]) -> list[int] | None:
+    """Interior dominator-path tensors of one path segment (endpoints
+    excluded), memoized over identical struct-digest spans.
+
+    A segment between two produced frontier tensors is keyed by its span
+    length, endpoint struct digests, and endpoint outvar slots; a hit is
+    verified by full digest-slice equality, then the recorded path is
+    translated by node-index delta.  Templates are only recorded when the
+    segment's between-set lies inside the span (so translation is sound);
+    anything else simply re-solves.  Returns None when the segment has no
+    src->snk path (caller falls back to the monolithic solve).
+    """
+    key = None
+    ps = pk = None
+    if len(src_t) == 1 and len(snk_t) == 1:
+        ps = graph.tensors[src_t[0]].producer
+        pk = graph.tensors[snk_t[0]].producer
+        if ps is not None and pk is not None and pk > ps:
+            key = (pk - ps, sd[ps], sd[pk],
+                   graph.nodes[ps].outvars.index(src_t[0]),
+                   graph.nodes[pk].outvars.index(snk_t[0]))
+            hit = seg_memo.get(key, _SEG_MISS)
+            if hit is not None and hit is not _SEG_MISS \
+                    and sd[ps:pk + 1] == hit[0]:
+                return [graph.nodes[ps + d].outvars[s] for d, s in hit[1]]
+        else:
+            key = None
+    flow, seg_nodes = _build_flow(graph, src_t, snk_t)
+    path = _dominator_path(flow)
+    if not path:
+        return None
+    ends = set(src_t) | set(snk_t)
+    seg = [v >> 1 for v in path if v > 0 and v & 1 and (v >> 1) not in ends]
+    if key is not None:
+        rel: list[tuple[int, int]] | None = []
+        if all(ps < nn <= pk for nn in seg_nodes):
+            for tid in seg:
+                p = graph.tensors[tid].producer
+                if p is None or not ps < p <= pk:
+                    rel = None
+                    break
+                rel.append((p - ps, graph.nodes[p].outvars.index(tid)))
+        else:
+            rel = None
+        seg_memo[key] = None if rel is None else (sd[ps:pk + 1], rel)
+    return seg
+
+
+def _piecewise_dom(graph: OpGraph, sd: list[str], seg_memo: dict,
+                   src_t: list[int], snk_t: list[int],
+                   nodes: list[int]) -> list[int] | None:
+    """Dominator-path tensors of a region via single-crossing pre-cuts.
+
+    Any flow path from the region's sources to its sinks that moves past a
+    topological boundary must do so through a produced tensor whose live
+    interval crosses that boundary; when exactly one tensor crosses, every
+    path passes through it, so it lies on the dominator path.  The dominator
+    chain decomposes exactly at its own vertices, so solving each inter-cut
+    segment independently (:func:`_segment_dom`, with the repeated-block
+    memo) and concatenating reproduces the monolithic solve's path — this is
+    how block spans turn the top-level O(N) dominator solve into one
+    representative-segment solve plus O(repeats) digest-verified
+    translations.  Returns the frontier-excluded tensor list in path order,
+    or None when the region does not fit (caller runs the monolithic solve).
+    """
+    tensors = graph.tensors
+    gnodes = graph.nodes
+    src_set, snk_set = set(src_t), set(snk_t)
+    pos = {nn: i for i, nn in enumerate(nodes)}
+    n = len(nodes)
+    for t in src_set:
+        if tensors[t].producer in pos:
+            return None                     # source produced inside region
+    for t in snk_set:
+        if tensors[t].producer not in pos and t not in src_set:
+            return None                     # stray sink: unreachable vertex
+
+    # live interval sweep: tensor crossing boundaries b in [lo, hi), where
+    # boundary b separates node positions < b from >= b.  Vectorized over
+    # the graph's memoized flat edge arrays (one C pass per reduction).
+    from repro.core.graph import edge_arrays
+    e_p, e_c, e_t, o_n, o_t = edge_arrays(graph)
+    cnt = np.zeros(n + 1, dtype=np.int64)
+    acc = np.zeros(n + 1, dtype=np.int64)
+
+    n_all = len(gnodes)
+    pos_of = np.full(n_all, -1, dtype=np.int64)
+    pos_of[np.asarray(nodes, dtype=np.int64)] = np.arange(n, dtype=np.int64)
+    # max in-region consumer position per tensor
+    maxq = np.full(int(o_t.max()) + 2 if len(o_t) else 1, -1, dtype=np.int64)
+    if len(e_t):
+        np.maximum.at(maxq, e_t, pos_of[e_c])
+
+    def mark(tid: int, lo: int, hi: int) -> None:
+        cnt[lo] += 1
+        cnt[hi] -= 1
+        acc[lo] += tid
+        acc[hi] -= tid
+
+    for t in src_set:
+        q = -1
+        for c in tensors[t].consumers:
+            i = pos.get(c)
+            if i is not None and i > q:
+                q = i
+        hi = n if t in snk_set else q + 1
+        if hi > 0:
+            mark(t, 0, hi)
+    p_pos = pos_of[o_n]
+    sel = p_pos >= 0
+    ts = o_t[sel]
+    ps = p_pos[sel]
+    if len(ts):
+        is_snk = np.isin(ts, np.fromiter(snk_set, dtype=np.int32))
+        his = np.where(is_snk, n, maxq[ts] + 1)
+        los = ps + 1
+        keep = his > los
+        ts, los, his = ts[keep], los[keep], his[keep]
+        np.add.at(cnt, los, 1)
+        np.add.at(cnt, his, -1)
+        np.add.at(acc, los, ts)
+        np.add.at(acc, his, -ts)
+
+    ccnt = np.cumsum(cnt[:n])
+    cacc = np.cumsum(acc[:n])
+    cuts: list[int] = []
+    last = -1
+    for b in np.nonzero(ccnt[1:] == 1)[0] + 1:
+        tid = int(cacc[b])
+        if tid != last and tid not in src_set and tid not in snk_set:
+            cuts.append(tid)
+            last = tid
+    if len(cuts) < 2:
+        return None
+
+    dom: list[int] = []
+    fr = [list(src_t)] + [[c] for c in cuts] + [list(snk_t)]
+    for k in range(len(fr) - 1):
+        seg = _segment_dom(graph, sd, seg_memo, fr[k], fr[k + 1])
+        if seg is None:
+            return None
+        dom.extend(seg)
+        if k < len(fr) - 2:
+            dom.append(fr[k + 1][0])
+    return dom
+
+
 @dataclasses.dataclass
 class MatchedRegion:
     """A pair of semantically equivalent subgraphs, one per side."""
@@ -245,12 +404,29 @@ def _attach_side_ops(graph: OpGraph, region_nodes: list[int],
     return sorted(out)
 
 
+@dataclasses.dataclass
+class _RegionTemplate:
+    """Memoized recursion result for one repeated-block subproblem.
+
+    Node indices and tensor references are stored as deltas from the span
+    start so the template can be re-emitted (translated) for every later
+    repeat of the same block, after digest verification.
+    """
+
+    digests_a: list[str]           # struct digests over the a-side span
+    digests_b: list[str]
+    norm_pairs: frozenset          # normalized eq-pair layout inside the span
+    regions: list[tuple]           # (nodes_a deltas, nodes_b deltas,
+    #                                 in_ref, out_ref, depth delta)
+
+
 def match_subgraphs(
     graph_a: OpGraph, graph_b: OpGraph,
     eq_pairs: Sequence[tuple[int, int]],
     *,
     stream_inputs_a: Sequence[int] | None = None,
     stream_inputs_b: Sequence[int] | None = None,
+    block_memo: bool | None = None,
 ) -> list[MatchedRegion]:
     """Algorithm 1: recursively match equivalent regions of two graphs.
 
@@ -258,6 +434,15 @@ def match_subgraphs(
     reduced to bijective pairs here).  ``stream_inputs_*`` select which graph
     inputs carry the activation stream (default: all inputs shared by an
     equivalent pair, falling back to all inputs).
+
+    ``block_memo`` (default: auto-on at >=64 nodes) memoizes the recursion
+    over repeated-block spans: the first repeat of a layer stack runs the
+    full dominator solve and records a translation template; every later
+    repeat whose span's struct digests AND normalized eq-pair layout are
+    identical re-emits the translated regions directly — region growth
+    costs one representative block plus O(period) digest verification per
+    repeat, and any divergent repeat (mismatched digests or pair layout)
+    falls back to the full solve for just that span.
     """
     from repro.core.tensor_match import bijective_pairs
     eq = bijective_pairs(eq_pairs)
@@ -271,6 +456,16 @@ def match_subgraphs(
                 tids.append(t)
             elif not side_is_a and t in eq_b_tids:
                 tids.append(t)
+        # Weights are side inputs (paper Fig. 7): an input consumed by a
+        # large fraction of all operators (a weight matrix feeding every
+        # layer) gives every op a bypass path from _SRC and destroys the
+        # dominator chain.  Keep only low-fan-out inputs as stream sources
+        # when that leaves any — the adaptive retry below still covers the
+        # cases this heuristic gets wrong.
+        cap = max(8, len(graph.nodes) // 16)
+        low = [t for t in tids if len(graph.tensors[t].consumers) <= cap]
+        if low:
+            tids = low
         return tids or list(graph.inputs)
 
     src_a = list(stream_inputs_a) if stream_inputs_a else default_stream(graph_a, True)
@@ -278,21 +473,187 @@ def match_subgraphs(
 
     regions: list[MatchedRegion] = []
 
+    # -- repeated-block recursion memo --------------------------------------
+    n_nodes_total = max(len(graph_a.nodes), len(graph_b.nodes))
+    use_memo = (block_memo if block_memo is not None
+                else n_nodes_total >= 64)
+    sd_a: list[str] | None = None
+    sd_b: list[str] | None = None
+    if use_memo:
+        from repro.core.graph import block_structure
+        try:
+            sd_a = block_structure(graph_a).struct_digests
+            sd_b = block_structure(graph_b).struct_digests
+        except Exception:
+            use_memo = False
+    memo: dict[tuple, "_RegionTemplate | None"] = {}
+    seg_memo_a: dict = {}
+    seg_memo_b: dict = {}
+    _MISS = object()
+
+    def _dom_and_nodes(graph: OpGraph, sd: "list[str] | None",
+                       seg_memo: dict, src_t: list[int], snk_t: list[int]
+                       ) -> tuple[list[int], list[int]]:
+        """Frontier-excluded dominator-path tensors + between-set nodes."""
+        src_set, snk_set = set(src_t), set(snk_t)
+        nodes = graph.subgraph_nodes_between(src_set, snk_set)
+        if sd is not None and len(nodes) >= _PIECEWISE_MIN_NODES:
+            dom = _piecewise_dom(graph, sd, seg_memo, src_t, snk_t, nodes)
+            if dom is not None:
+                return dom, nodes
+        flow, _ = _build_flow(graph, src_t, snk_t, nodes=nodes)
+        path = _dominator_path(flow)
+        ends = src_set | snk_set
+        return [v >> 1 for v in path if v > 0 and v & 1
+                and (v >> 1) not in ends], nodes
+
+    def _span(graph: OpGraph, src: int, snk: int) -> tuple[int, int] | None:
+        """Inclusive node-index span between two produced frontier tensors
+        (every between-node lies in it: node order is topological)."""
+        ps = graph.tensors[src].producer
+        pk = graph.tensors[snk].producer
+        if ps is None or pk is None or pk <= ps:
+            return None
+        return ps + 1, pk
+
+    def _norm_pairs(spa: tuple[int, int], spb: tuple[int, int]) -> frozenset:
+        """Normalized eq-pair layout of a span pair: for every a-side output
+        slot, the (delta, slot) of its partner when that partner is produced
+        inside the b-side span (only such pairs can become cut points)."""
+        out = set()
+        for idx in range(spa[0], spa[1] + 1):
+            for slot, ta in enumerate(graph_a.nodes[idx].outvars):
+                tb = eq_a2b.get(ta)
+                entry = None
+                if tb is not None:
+                    pb = graph_b.tensors[tb].producer
+                    if pb is not None and spb[0] <= pb <= spb[1]:
+                        entry = (pb - spb[0],
+                                 graph_b.nodes[pb].outvars.index(tb))
+                out.add((idx - spa[0], slot, entry))
+        return frozenset(out)
+
+    def _make_template(emitted: list[MatchedRegion],
+                       spa, spb, in_pair, out_pair, depth
+                       ) -> "_RegionTemplate | None":
+        def tid_ref(graph, span, tid, side):
+            if in_pair is not None and tid == in_pair[side]:
+                return ("in",)
+            if out_pair is not None and tid == out_pair[side]:
+                return ("out",)
+            p = graph.tensors[tid].producer
+            if p is None or not span[0] <= p <= span[1]:
+                return None
+            return ("t", p - span[0], graph.nodes[p].outvars.index(tid))
+
+        def pair_ref(pair):
+            if pair is None:
+                return ("none",)
+            ra = tid_ref(graph_a, spa, pair[0], 0)
+            rb = tid_ref(graph_b, spb, pair[1], 1)
+            return None if ra is None or rb is None else (ra, rb)
+
+        tpl_regions = []
+        for r in emitted:
+            if any(not spa[0] <= x <= spa[1] for x in r.nodes_a) or \
+                    any(not spb[0] <= x <= spb[1] for x in r.nodes_b):
+                return None
+            ri = pair_ref(r.in_pair)
+            ro = pair_ref(r.out_pair)
+            if ri is None or ro is None:
+                return None
+            tpl_regions.append(
+                ([x - spa[0] for x in r.nodes_a],
+                 [x - spb[0] for x in r.nodes_b], ri, ro, r.depth - depth))
+        return _RegionTemplate(
+            digests_a=sd_a[spa[0]:spa[1] + 1],
+            digests_b=sd_b[spb[0]:spb[1] + 1],
+            norm_pairs=_norm_pairs(spa, spb), regions=tpl_regions)
+
+    def _emit_template(tpl: _RegionTemplate, spa, spb,
+                       in_pair, out_pair, depth) -> None:
+        def resolve(ref, span, graph):
+            if ref[0] == "t":
+                return graph.nodes[span[0] + ref[1]].outvars[ref[2]]
+            raise AssertionError(ref)
+
+        def resolve_pair(ref, boundary_in, boundary_out):
+            if ref == ("none",):
+                return None
+            ra, rb = ref
+            if ra[0] == "in" or rb[0] == "in":
+                return boundary_in
+            if ra[0] == "out" or rb[0] == "out":
+                return boundary_out
+            return (resolve(ra, spa, graph_a), resolve(rb, spb, graph_b))
+
+        for da, db, ri, ro, ddepth in tpl.regions:
+            regions.append(MatchedRegion(
+                nodes_a=[spa[0] + x for x in da],
+                nodes_b=[spb[0] + x for x in db],
+                in_pair=resolve_pair(ri, in_pair, out_pair),
+                out_pair=resolve_pair(ro, in_pair, out_pair),
+                depth=depth + ddepth))
+
+    def _memo_recurse(src_ta, snk_ta, src_tb, snk_tb,
+                      in_pair, out_pair, depth) -> bool:
+        """Serve one recursion step from the block memo.  Returns True when
+        the step was handled (template emitted, or recorded on first miss)."""
+        if not (len(src_ta) == 1 and len(snk_ta) == 1
+                and len(src_tb) == 1 and len(snk_tb) == 1):
+            return False
+        spa = _span(graph_a, src_ta[0], snk_ta[0])
+        spb = _span(graph_b, src_tb[0], snk_tb[0])
+        if spa is None or spb is None:
+            return False
+        pa, pk = graph_a.tensors[src_ta[0]].producer, \
+            graph_a.tensors[snk_ta[0]].producer
+        pb, pl = graph_b.tensors[src_tb[0]].producer, \
+            graph_b.tensors[snk_tb[0]].producer
+        key = (spa[1] - spa[0], spb[1] - spb[0], sd_a[spa[0]], sd_b[spb[0]],
+               graph_a.nodes[pa].outvars.index(src_ta[0]),
+               graph_a.nodes[pk].outvars.index(snk_ta[0]),
+               graph_b.nodes[pb].outvars.index(src_tb[0]),
+               graph_b.nodes[pl].outvars.index(snk_tb[0]))
+        tpl = memo.get(key, _MISS)
+        if tpl is _MISS:
+            base = len(regions)
+            _recurse_body(src_ta, snk_ta, src_tb, snk_tb,
+                          in_pair, out_pair, depth)
+            memo[key] = _make_template(regions[base:], spa, spb,
+                                       in_pair, out_pair, depth)
+            return True
+        if tpl is None:
+            return False
+        # verify the translated span is byte-for-byte the template's shape:
+        # identical struct digests and identical eq-pair layout — a mutated
+        # repeat fails here and falls through to the full dominator solve
+        if sd_a[spa[0]:spa[1] + 1] != tpl.digests_a or \
+                sd_b[spb[0]:spb[1] + 1] != tpl.digests_b or \
+                _norm_pairs(spa, spb) != tpl.norm_pairs:
+            return False
+        _emit_template(tpl, spa, spb, in_pair, out_pair, depth)
+        return True
+
     def recurse(src_ta: list[int], snk_ta: list[int],
                 src_tb: list[int], snk_tb: list[int],
                 in_pair, out_pair, depth: int):
-        flow_a, na = _build_flow(graph_a, src_ta, snk_ta)
-        flow_b, nb = _build_flow(graph_b, src_tb, snk_tb)
-        path_a = _dominator_path(flow_a)
-        path_b = _dominator_path(flow_b)
-        # interior tensor vertices on the dominator paths (exclude frontiers);
-        # tensor vertices are the odd-encoded ints (2*t + 1)
-        ends_a = set(src_ta) | set(snk_ta)
-        ends_b = set(src_tb) | set(snk_tb)
-        dom_a = [v >> 1 for v in path_a if v > 0 and v & 1
-                 and (v >> 1) not in ends_a]
-        dom_b = [v >> 1 for v in path_b if v > 0 and v & 1
-                 and (v >> 1) not in ends_b]
+        if use_memo and _memo_recurse(src_ta, snk_ta, src_tb, snk_tb,
+                                      in_pair, out_pair, depth):
+            return
+        _recurse_body(src_ta, snk_ta, src_tb, snk_tb,
+                      in_pair, out_pair, depth)
+
+    def _recurse_body(src_ta: list[int], snk_ta: list[int],
+                      src_tb: list[int], snk_tb: list[int],
+                      in_pair, out_pair, depth: int):
+        # dominator-path tensor tids per side (frontier tensors excluded);
+        # large regions use the piecewise block-span path, small ones the
+        # monolithic flow solve — both produce the identical path
+        dom_a, na = _dom_and_nodes(graph_a, sd_a if use_memo else None,
+                                   seg_memo_a, src_ta, snk_ta)
+        dom_b, nb = _dom_and_nodes(graph_b, sd_b if use_memo else None,
+                                   seg_memo_b, src_tb, snk_tb)
         dom_b_order = {t: i for i, t in enumerate(dom_b)}
         # ordered, order-consistent cut pairs (strictly increasing in B)
         cuts: list[tuple[int, int]] = []
@@ -346,12 +707,15 @@ def match_subgraphs(
                 best = regions
         regions = best
 
-    # attach weight-only side ops to their consuming region
+    # attach weight-only side ops to their consuming region (a region's own
+    # nodes seed ``out`` inside _attach_side_ops, so they never hit the
+    # claimed check — passing the full claimed set is equivalent to
+    # subtracting them, without rebuilding an O(N) set per region)
     claimed_a = {n for r in regions for n in r.nodes_a}
     claimed_b = {n for r in regions for n in r.nodes_b}
     for r in regions:
-        r.nodes_a = _attach_side_ops(graph_a, r.nodes_a, claimed_a - set(r.nodes_a))
-        r.nodes_b = _attach_side_ops(graph_b, r.nodes_b, claimed_b - set(r.nodes_b))
-        claimed_a |= set(r.nodes_a)
-        claimed_b |= set(r.nodes_b)
+        r.nodes_a = _attach_side_ops(graph_a, r.nodes_a, claimed_a)
+        r.nodes_b = _attach_side_ops(graph_b, r.nodes_b, claimed_b)
+        claimed_a.update(r.nodes_a)
+        claimed_b.update(r.nodes_b)
     return regions

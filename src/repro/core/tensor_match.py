@@ -469,6 +469,12 @@ class _LazySpectra:
         return out
 
 
+# Above this candidate-product size, the phase-1 bucket gate switches from
+# the dense cross-product to the l1-sorted window prefilter (same survivors,
+# near-linear cost for buckets holding thousands of layer activations).
+_PHASE1_DENSE_MAX = 1 << 16
+
+
 @dataclasses.dataclass
 class MatchStats:
     """Instrumentation of one fast-matcher run (read by fig9_scalability)."""
@@ -483,6 +489,9 @@ class MatchStats:
     peak_value_bytes: int = 0      # peak resident values (one sample's worth)
     decided_dry: int = 0           # pair-verdicts served by persisted evidence
     undecided_dropped: int = 0     # dry_only: pairs undecidable without values
+    stamped_pairs: int = 0         # pairs accepted via block-stamped twins
+    twin_reseeded: int = 0         # boundary pairs re-proven by resolve_pending
+    demoted_pairs: int = 0         # boundary pairs refuted -> full matcher
     phase1_s: float = 0.0
     phase2_s: float = 0.0
 
@@ -539,6 +548,7 @@ class TensorMatcher:
         provider_a: "SpectraProvider | None" = None,
         provider_b: "SpectraProvider | None" = None,
         dry_only: bool = False,
+        stamper: "Any | None" = None,
     ) -> list[tuple[int, int]]:
         """Two-phase match from streamed cheap signatures.
 
@@ -554,6 +564,14 @@ class TensorMatcher:
         are conservatively *dropped* (counted in
         ``last_stats.undecided_dropped``) instead of being fetched — the
         result under-matches rather than guesses.
+
+        ``stamper`` (a ``block_match.BlockStamper``) supplies twin pairs
+        proven bitwise-identical by block-digest induction: twin survivors
+        of phase 1 are accepted without fetches or SVDs (they are equivalent
+        by construction, so the pair set stays exhaustive-equivalent), and
+        unproven boundary pairs are digest-resolved once up front so a
+        bitwise-preserving rewrite demotes only its own pairs.  Twins still
+        pass through phase 1 so coincidental cross-layer matches are kept.
         """
         self._check_samples(stats_a, stats_b)
         n = len(stats_a)
@@ -609,6 +627,48 @@ class TensorMatcher:
                 jb.extend(groups_b.get((numel, q + dq), ()))
             if not jb:
                 continue
+            if len(ia) * len(jb) > _PHASE1_DENSE_MAX:
+                # Giant bucket (thousands of same-shape layer activations in
+                # one narrow l2 band): the dense |ia| x |jb| gate would cost
+                # O(n^2) memory/time.  Sort side B by sample-0 l1 and gate
+                # only the rtol window around each A tensor — a sound
+                # overapproximation of the full gate (any matching pair has
+                # l1 within rtol on sample 0), so the surviving set is
+                # identical to the dense path's.
+                ia_arr = np.asarray(ia)
+                jb_arr = np.asarray(jb)
+                l1b = inv_b[0, jb_arr, 0]
+                order = np.argsort(l1b, kind="stable")
+                sb = l1b[order]
+                l1a = inv_a[0, ia_arr, 0]
+                lo = np.searchsorted(sb, l1a * (1.0 - self.rtol) - 1e-30,
+                                     side="left")
+                hi = np.searchsorted(sb, l1a * (1.0 + 2.0 * self.rtol)
+                                     + 1e-30, side="right")
+                counts = hi - lo
+                ii = np.repeat(np.arange(len(ia)), counts)
+                if not ii.size:
+                    continue
+                jj = np.concatenate(
+                    [order[l:h] for l, h in zip(lo, hi) if h > l])
+                # staged gate: the (decorrelated) mean column alone rejects
+                # almost every window candidate before the full 5-column pass
+                ma = inv_a[:, ia_arr[ii], 2]          # (n, m)
+                mb = inv_b[:, jb_arr[jj], 2]
+                md = np.abs(ma - mb)
+                ms = np.maximum(np.maximum(np.abs(ma), np.abs(mb)), 1e-30)
+                keep = (md <= self.rtol * ms).all(axis=0)
+                ii, jj = ii[keep], jj[keep]
+                if not ii.size:
+                    continue
+                da = inv_a[:, ia_arr[ii], :]          # (n, m, 5)
+                db = inv_b[:, jb_arr[jj], :]
+                diff = np.abs(da - db)
+                scale = np.maximum(np.maximum(np.abs(da), np.abs(db)), 1e-30)
+                ok = (diff <= self.rtol * scale).all(axis=(0, 2))    # (m,)
+                for t in np.nonzero(ok)[0]:
+                    cand.append((tids_a[ia[ii[t]]], tids_b[jb[jj[t]]]))
+                continue
             xa = inv_a[:, ia, :]                      # (n, |ia|, 5)
             xb = inv_b[:, jb, :]                      # (n, |jb|, 5)
             diff = np.abs(xa[:, :, None, :] - xb[:, None, :, :])
@@ -630,6 +690,11 @@ class TensorMatcher:
         # remaining pairs' tensors for the *wet* pass.
         st = MatchStats(n_tids_a=len(tids_a), n_tids_b=len(tids_b),
                         phase1_pairs=len(cand), phase1_s=t1 - t0)
+        if stamper is not None and not dry_only and stamper.pending and \
+                any(not stamper.is_twin(ta, tb) for ta, tb in cand):
+            # boundary re-seed: digest-verify unproven pairs once so a
+            # bitwise-preserving rewrite demotes only its own pairs
+            stamper.resolve_pending(fetch_a, fetch_b, n)
         surviving = cand
         for k in range(n):
             if not surviving:
@@ -641,30 +706,40 @@ class TensorMatcher:
             decided: dict[tuple[int, int], bool] = {}
             need_a: set[int] = set()
             need_b: set[int] = set()
-            for ta, tb in surviving:
+            twins = stamper.twins if stamper is not None else frozenset()
+            for p in surviving:
+                if p in twins:
+                    # proven bitwise-identical: accepted with no fetch/SVD
+                    if k == 0:
+                        st.stamped_pairs += 1
+                    continue
+                ta, tb = p
                 verdict = self._spectra_gate(la, ta, lb, tb, dry=True)
                 if verdict is None:
                     if dry_only:
-                        decided[(ta, tb)] = False
+                        decided[p] = False
                         st.undecided_dropped += 1
                         continue
                     need_a.add(ta)
                     need_b.add(tb)
                 else:
-                    decided[(ta, tb)] = verdict
+                    decided[p] = verdict
                     st.decided_dry += 1
             la.prefetch(need_a)
             lb.prefetch(need_b)
             surviving = [
-                (ta, tb) for ta, tb in surviving
-                if (decided[(ta, tb)] if (ta, tb) in decided
-                    else self._spectra_gate(la, ta, lb, tb))]
+                p for p in surviving
+                if p in twins or (decided[p] if p in decided
+                                  else self._spectra_gate(la, p[0], lb, p[1]))]
             st.dense_svds += la.dense_svds + lb.dense_svds
             st.sketch_svds += la.sketch_svds + lb.sketch_svds
             st.fetched_bytes += la.fetched_bytes + lb.fetched_bytes
             st.peak_value_bytes = max(st.peak_value_bytes,
                                       la.fetched_bytes + lb.fetched_bytes)
         st.pairs = len(surviving)
+        if stamper is not None:
+            st.twin_reseeded = stamper.reseeded
+            st.demoted_pairs = stamper.demoted
         st.phase2_s = time.perf_counter() - t1
         self.last_stats = st
         return surviving

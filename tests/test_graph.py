@@ -86,3 +86,78 @@ def test_constants_marked():
     assert any(t.is_const or g.nodes[t.producer].primitive == "iota"
                for t in g.tensors.values() if t.producer is not None
                or t.is_const)
+
+
+def test_block_structure_detects_layer_family():
+    """A deep stack of identical layers must be found as one repeated-block
+    family covering (almost) the whole graph."""
+    from repro.core.graph import block_structure
+
+    def fn(x):
+        for _ in range(12):
+            x = jnp.tanh(x * 1.01) + 0.5 * x
+        return x.sum()
+
+    g = trace(fn, jnp.arange(16.0).reshape(4, 4) / 10.0)
+    bs = block_structure(g)
+    assert bs.families, "no repeated-block family detected"
+    best = max(bs.families, key=lambda f: f.period * f.count)
+    assert best.count >= 10
+    assert best.period * best.count >= 0.7 * len(g.nodes)
+
+
+def test_block_digests_stable_under_jaxpr_roundtrip():
+    """Canonical per-node digests and family spans must be identical when
+    the same program is re-extracted from its closed jaxpr — the stamper's
+    cross-graph induction depends on digest stability across traces."""
+    from repro.core.graph import block_structure, extract_graph
+
+    def fn(x, w):
+        for _ in range(8):
+            x = (jnp.tanh(x @ w) + 0.5 * x) * 1.01
+        return x.sum()
+
+    x = jnp.arange(32.0).reshape(4, 8) / 10.0
+    w = jnp.eye(8) * 0.9
+    g1 = trace(fn, x, w)
+    g2 = extract_graph(g1.closed_jaxpr)
+    g3 = trace(fn, x, w)               # independent re-trace
+    bs1, bs2, bs3 = (block_structure(g) for g in (g1, g2, g3))
+    assert bs1.struct_digests == bs2.struct_digests == bs3.struct_digests
+    assert bs1.op_digests == bs2.op_digests == bs3.op_digests
+    fams = lambda bs: [(f.start, f.period, f.count) for f in bs.families]
+    assert fams(bs1) == fams(bs2) == fams(bs3)
+
+
+def test_between_sparse_matches_python_reference(monkeypatch):
+    """The scipy-BFS between-set fast path must return exactly the python
+    reference's node list on assorted frontiers (the subgraph matcher's
+    region growth is built on this set)."""
+    import repro.core.graph as G
+
+    if G._bfs_order is None:
+        pytest.skip("scipy unavailable")
+
+    def fn(x, w):
+        for _ in range(40):
+            x = (jnp.tanh(x @ w) + 0.5 * x) * 1.01
+        return x.sum()
+
+    x = jnp.arange(32.0).reshape(4, 8) / 10.0
+    w = jnp.eye(8) * 0.9
+    g = trace(fn, x, w)
+    mid1 = g.nodes[len(g.nodes) // 3].outvars[0]
+    mid2 = g.nodes[2 * len(g.nodes) // 3].outvars[0]
+    frontiers = [
+        (set(g.inputs), set(g.outputs)),
+        ({g.inputs[0]}, set(g.outputs)),
+        (set(g.inputs), {mid2}),
+        ({mid1}, {mid2}),
+        ({mid2}, {mid1}),                  # empty: sink upstream of source
+    ]
+    for src, dst in frontiers:
+        fast = g._between_sparse(src, dst)
+        monkeypatch.setattr(G, "_bfs_order", None)   # force python path
+        slow = g.subgraph_nodes_between(src, dst)
+        monkeypatch.undo()
+        assert fast == slow, (src, dst)

@@ -14,6 +14,7 @@ import os
 import subprocess
 import sys
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -592,3 +593,71 @@ def test_cli_smoke(tmp_path):
     r = _cli(tmp_path, "compare", keys[0], keys[1], "--output-rtol", "0.05")
     assert r.returncode == 0, r.stderr
     assert "energy-waste findings: 1" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# parallel per-sample capture
+# ---------------------------------------------------------------------------
+
+def _deep_parallel_model():
+    def fn(x, w):
+        for _ in range(30):           # 151 nodes: parallel auto-threshold hit
+            x = (jnp.tanh(x @ w) + 0.5 * x) * 1.01
+        return x.sum()
+    return fn
+
+
+def test_parallel_sample_capture_byte_identical_to_serial(monkeypatch):
+    """parallel_samples must change wall-clock only: identical store key,
+    identical per-sample signatures in identical order, and exactly
+    num_samples instrumented executions (spy-visible through the module
+    attribute, which the thread pool resolves at submit time)."""
+    fn = _deep_parallel_model()
+    w = jnp.eye(8) * 0.9
+    x = jnp.arange(32.0, dtype=jnp.float32).reshape(4, 8) / 10.0
+
+    art_ser = Session(parallel_samples=False,
+                      num_input_samples=4).capture(fn, (x, w), name="m")
+    calls = _count_runs(monkeypatch)
+    sess = Session(parallel_samples=True, num_input_samples=4)
+    art_par = sess.capture(fn, (x, w), name="m")
+    assert calls["n"] == 4            # one instrumented run per sample
+    assert art_par.key == art_ser.key
+    assert len(art_par.sample_stats) == len(art_ser.sample_stats) == 4
+    for ks, kp in zip(art_ser.sample_stats, art_par.sample_stats):
+        assert sorted(ks) == sorted(kp)
+        for t in ks:
+            assert repr(ks[t]) == repr(kp[t])   # bitwise-equal invariants
+
+
+def test_parallel_capture_gate_against_still_fails_fast(monkeypatch):
+    """Sample 0 runs serially first, so the functional-equivalence gate
+    rejects a different task BEFORE samples 1..n-1 are captured."""
+    fn = _deep_parallel_model()
+
+    def other(x, w):
+        return (x @ w).sum() * 3.0
+
+    w = jnp.eye(8) * 0.9
+    x = jnp.arange(32.0, dtype=jnp.float32).reshape(4, 8) / 10.0
+    sess = Session(parallel_samples=True, num_input_samples=4)
+    art = sess.capture(fn, (x, w), name="m")
+    calls = _count_runs(monkeypatch)
+    with pytest.raises(ValueError, match="not the same task"):
+        sess.capture(other, (x, w), name="other", gate_against=art)
+    assert calls["n"] == 1            # only sample 0 ever executed
+
+
+def test_compare_stamps_twins_on_live_artifacts():
+    """Live-captured artifacts carry their graphs and samples, so compare()
+    attaches a BlockStamper: repeated-block pairs are stamped (declared in
+    report meta) and the findings still match a stamper-less session's."""
+    fn = _deep_parallel_model()
+    w = jnp.eye(8) * 0.9
+    x = jnp.arange(32.0, dtype=jnp.float32).reshape(4, 8) / 10.0
+    sess = Session(num_input_samples=2)
+    art_a = sess.capture(fn, (x, w), name="a")
+    art_b = sess.capture(fn, (x, w), name="b")
+    rep = sess.compare(art_a, art_b)
+    assert rep.meta["stamped_pairs"] > 0
+    assert rep.meta["eq_tensor_pairs"] >= rep.meta["stamped_pairs"]

@@ -138,3 +138,50 @@ def test_o_n_squared_scalability():
     ga, gb, regions = _match(deep, deep, (x,))
     assert time.time() - t0 < 60
     assert len(regions) >= 30
+
+
+def test_block_memo_regions_identical_to_full_recursion():
+    """Hierarchical region matching (template memo + piecewise dominator
+    decomposition + sparse between-sets, all active at this size) must
+    reproduce the unmemoized recursion's region list EXACTLY — same order,
+    same node sets, same cut pairs, same depths."""
+    from repro.core.block_match import BlockStamper
+    from repro.core.interp import capture_tensor_stats
+    from repro.core.subgraph_match import (_PIECEWISE_MIN_NODES,
+                                           match_subgraphs)
+
+    def deep(x, w):
+        for _ in range(110):          # 551 nodes: piecewise + sparse paths on
+            x = (jnp.tanh(x @ w) + 0.5 * x) * 1.01
+        return x.sum()
+
+    # block-diagonal rotation weight: keeps every layer's activation
+    # distinct (an eye-like weight converges to a fixed point and collapses
+    # the stack into a handful of duplicate-tensor regions)
+    w0 = np.zeros((8, 8), np.float32)
+    for i in range(0, 8, 2):
+        c, s = np.cos(1.0 + i * 0.1), np.sin(1.0 + i * 0.1)
+        w0[i, i], w0[i, i + 1], w0[i + 1, i], w0[i + 1, i + 1] = c, s, -s, c
+    w = jnp.asarray(0.99 * w0)
+    x = jnp.arange(32.0, dtype=jnp.float32).reshape(4, 8) / 10.0
+    ga = trace(deep, x, w, name="a")
+    gb = trace(deep, x, w, name="b")
+    assert len(ga.nodes) >= max(_PIECEWISE_MIN_NODES, 512)
+    samples = [(x, w)]
+    _, sa = capture_tensor_stats(ga, x, w)
+    _, sb = capture_tensor_stats(gb, x, w)
+    m = TensorMatcher()
+    pairs = m.match_streamed(
+        [sa], [sb],
+        lambda k, tids: capture_tensor_values(ga, x, w, only_tids=tids),
+        lambda k, tids: capture_tensor_values(gb, x, w, only_tids=tids),
+        stamper=BlockStamper(ga, gb, samples, samples))
+    fast = match_subgraphs(ga, gb, pairs)
+    full = match_subgraphs(ga, gb, pairs, block_memo=False)
+
+    def key(r):
+        return (tuple(r.nodes_a), tuple(r.nodes_b), r.in_pair, r.out_pair,
+                r.depth)
+
+    assert [key(r) for r in fast] == [key(r) for r in full]
+    assert len(fast) >= 100           # the stack actually decomposed

@@ -139,6 +139,29 @@ echo "== chaos (offline replay under seeded faults) =="
 python scripts/chaos_check.py
 echo "chaos OK"
 
+echo "== incremental-capture (delta-replay rank + block-evidence cache) =="
+# Captures a >=512-node layered model plus 8 single-block rewrite
+# candidates twice — block cache off, then on — and gates the warm
+# rank's capture+pricing time at >=3x faster with every warm artifact
+# byte-identical to its cold twin (content address, profile payload,
+# rank energies/waste matrix).  Emits BENCH_incremental.json.  See
+# docs/artifacts.md (block-evidence schema) and docs/optimizer.md
+# (delta-verification cost model).
+python scripts/incremental_check.py
+python - <<'PY'
+import json
+d = json.load(open("BENCH_incremental.json"))
+print(f"incremental-capture: {d['speedup']:.1f}x warm speedup, "
+      f"{d['block_hit_rate']:.1%} candidate hit rate "
+      f"({d['model_nodes']} nodes, {d['n_candidates']} candidates)")
+assert d["byte_identical"] is True, "warm capture diverged from cold"
+assert d["speedup"] >= 3.0, (
+    f"delta-replay speedup {d['speedup']:.2f}x below the 3x bound")
+assert d["block_hit_rate"] >= 0.9, (
+    f"candidate block hit rate {d['block_hit_rate']:.1%} < 90%")
+PY
+echo "incremental-capture OK"
+
 echo "== matcher-scaling (fig9: hierarchical matcher to 5k+ nodes) =="
 # Runs the fig9 harness (which itself asserts streaming capture <= eager
 # capture at every config >= 161 nodes, stamped == exhaustive/streamed pair

@@ -1,0 +1,152 @@
+#!/usr/bin/env python
+"""CI incremental-capture stage: delta-replay speedup + byte-identity.
+
+Gates the block-evidence cache (core/block_cache.py, docs/artifacts.md) on
+the PR's acceptance bounds:
+
+1. **Delta-replay speedup** — warm ``Session.rank`` over 8 single-block
+   rewrite candidates of a >=512-node layered model must spend at least
+   3x less capture+pricing wall time (``stats_s + price_s`` from each
+   artifact's timing meta; tracing is identical either way) than the same
+   captures with the cache disabled.
+2. **Byte-identity** — every warm capture must be indistinguishable from
+   its cold twin: same content address, same priced profile payload
+   (which embeds the per-op cost table), and the warm N-way rank must
+   reproduce the cold rank's energies and waste matrix exactly.  Reuse
+   that changes a single byte of evidence is a correctness bug, not a
+   perf bug.
+3. **Block-cache hit rate** — the candidate captures must actually run
+   incrementally: >= 90% of their block probes hit (each candidate
+   replays only its rewritten block plus boundary windows).
+
+Emits BENCH_incremental.json for the perf trajectory.
+
+Run from the repo root (scripts/ci.sh does):
+    PYTHONPATH=src python scripts/incremental_check.py
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+from common import emit_json  # noqa: E402
+
+import jax.numpy as jnp                                     # noqa: E402
+
+from repro.core.artifact import _profile_payload            # noqa: E402
+from repro.core.session import Session                      # noqa: E402
+
+LAYERS = 103
+N_CANDIDATES = 8
+TWISTS = tuple(12 * (i + 1) for i in range(N_CANDIDATES))   # 12 .. 96
+
+
+def build_model(twist: int | None = None):
+    """A 103-layer matmul+tanh stack (~516 nodes); ``twist`` inserts a
+    transpose round-trip into exactly one layer — the single-block rewrite
+    whose verification a warm session should pay for incrementally."""
+    rng = np.random.default_rng(7)
+    w = jnp.asarray((rng.standard_normal((24, 24)) / np.sqrt(24))
+                    .astype(np.float32))
+    x0 = jnp.asarray(rng.standard_normal((4, 24)).astype(np.float32))
+
+    def fn(x):
+        for i in range(LAYERS):
+            h = x @ w
+            if i == twist:
+                h = jnp.transpose(jnp.transpose(h))
+            x = (jnp.tanh(h) + 0.5 * x) * 1.01
+        return x
+
+    fn.__name__ = "target" if twist is None else f"cand_twist{twist}"
+    return fn, (x0,)
+
+
+def run_phase(root: str, *, cache: bool):
+    """Capture target + all candidates and rank them; return artifacts,
+    per-capture capture+price seconds, and the rank result."""
+    session = Session(store=root, block_cache=None if cache else False)
+    fn, args = build_model()
+    target = session.capture(fn, args, name="target")
+    cand_cost = 0.0
+    arts = [target]
+    for t in TWISTS:
+        cfn, _ = build_model(twist=t)
+        art = session.capture(cfn, args, name=cfn.__name__)
+        timings = art.meta["timings"]
+        cand_cost += timings["stats_s"] + timings["price_s"]
+        arts.append(art)
+    rank = session.rank(arts)
+    return session, arts, cand_cost, rank
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory() as tmp:
+        cold_sess, cold_arts, cold_s, cold_rank = run_phase(
+            str(Path(tmp) / "cold"), cache=False)
+        warm_sess, warm_arts, warm_s, warm_rank = run_phase(
+            str(Path(tmp) / "warm"), cache=True)
+
+    assert cold_sess.block_cache_counters == {}, \
+        "cold phase must run with the block cache disabled"
+    nodes = len(cold_arts[0].graph.nodes)
+    assert nodes >= 512, f"model too small for the gate: {nodes} nodes"
+
+    # -- byte-identity: warm captures are indistinguishable from cold ----
+    mismatches = []
+    for c, w in zip(cold_arts, warm_arts):
+        if c.key != w.key:
+            mismatches.append(f"{c.name}: content address diverged")
+        if _profile_payload(c.profile) != _profile_payload(w.profile):
+            mismatches.append(f"{c.name}: profile payload diverged")
+    if cold_rank.total_energy_j != warm_rank.total_energy_j:
+        mismatches.append("rank energies diverged")
+    if cold_rank.waste_matrix != warm_rank.waste_matrix:
+        mismatches.append("rank waste matrix diverged")
+    if cold_rank.names != warm_rank.names:
+        mismatches.append("rank names diverged")
+    assert not mismatches, "warm capture is not byte-identical to cold:\n  " \
+        + "\n  ".join(mismatches)
+
+    # -- hit rate over the candidate captures (target is the cold fill) --
+    hits = sum(a.meta["block_cache"].get("block_hits", 0)
+               for a in warm_arts[1:])
+    misses = sum(a.meta["block_cache"].get("block_misses", 0)
+                 for a in warm_arts[1:])
+    hit_rate = hits / max(hits + misses, 1)
+
+    speedup = cold_s / max(warm_s, 1e-9)
+    payload = {
+        "model_nodes": nodes,
+        "n_candidates": N_CANDIDATES,
+        "cold_capture_price_s": cold_s,
+        "warm_capture_price_s": warm_s,
+        "speedup": speedup,
+        "block_hit_rate": hit_rate,
+        "candidate_block_hits": hits,
+        "candidate_block_misses": misses,
+        "session_counters": dict(warm_sess.block_cache_counters),
+        "byte_identical": not mismatches,
+        "identical_pairs": warm_rank.meta.get("identical_pairs", 0),
+    }
+    emit_json("BENCH_incremental.json", payload)
+    print(f"incremental: {nodes}-node model, {N_CANDIDATES} single-block "
+          f"rewrites: cold {cold_s:.2f}s -> warm {warm_s:.2f}s capture+price "
+          f"({speedup:.1f}x), block hit rate {hit_rate:.1%}")
+
+    assert speedup >= 3.0, (
+        f"warm rank({N_CANDIDATES}) capture+price is only {speedup:.2f}x "
+        "faster than cold (acceptance bound: >=3x)")
+    assert hit_rate >= 0.9, (
+        f"candidate block-cache hit rate {hit_rate:.1%} < 90% — candidates "
+        "are not being captured incrementally")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

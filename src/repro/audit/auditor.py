@@ -293,7 +293,10 @@ class EngineAuditor:
                 "log": self.log.to_payload(),
                 "alarms": [a.to_payload() for a in self.alarms],
                 "flush_failures": self.flush_failures,
-                "last_error": self.last_error}
+                "last_error": self.last_error,
+                # recurring per-class checks replay unchanged blocks from
+                # the evidence cache; the fleet dashboard aggregates these
+                "block_cache": self.session.block_cache_counters}
 
     def summary(self) -> dict[str, Any]:
         """Compact JSON-safe health summary for ``ServeEngine.health()``."""
@@ -303,4 +306,5 @@ class EngineAuditor:
                 "slo_skipped": self.sampler.slo_skipped,
                 "alarms": self.log.alarm_count(),
                 "flush_failures": self.flush_failures,
-                "last_error": self.last_error}
+                "last_error": self.last_error,
+                "block_cache": self.session.block_cache_counters}

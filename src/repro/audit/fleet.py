@@ -14,6 +14,7 @@ from __future__ import annotations
 from typing import Any
 
 from repro.audit.auditor import GOLDEN_PREFIX, LOG_PREFIX
+from repro.core.block_cache import is_block_evidence
 from repro.core.store import Store, open_store
 
 
@@ -30,6 +31,9 @@ def fleet_status(store, *, timeout: float | None = None) -> dict[str, Any]:
     goldens: list[dict[str, Any]] = []
     classes: dict[str, dict[str, Any]] = {}
     n_artifacts = 0
+    n_block_entries = 0
+    block_cache = {"block_hits": 0, "block_misses": 0,
+                   "profile_hits": 0, "profile_misses": 0}
 
     def cls(key: str) -> dict[str, Any]:
         return classes.setdefault(key, {
@@ -44,11 +48,17 @@ def fleet_status(store, *, timeout: float | None = None) -> dict[str, Any]:
             c = cls(rec.get("class_key", "?"))
             c["energy_j"] = rec.get("energy_j")
             continue
+        if is_block_evidence(key):
+            n_block_entries += 1
+            continue
         if not key.startswith(LOG_PREFIX):
             n_artifacts += 1
             continue
 
         payload = backend.read_manifest(key)
+        for k, v in (payload.get("block_cache") or {}).items():
+            if k in block_cache:
+                block_cache[k] += int(v)
         sampler = payload.get("sampler", {})
         log = payload.get("log", {})
         alarms = payload.get("alarms", [])
@@ -98,6 +108,8 @@ def fleet_status(store, *, timeout: float | None = None) -> dict[str, Any]:
             "classes": {k: classes[k] for k in sorted(classes)},
             "goldens": len(goldens),
             "artifacts": n_artifacts,
+            "block_entries": n_block_entries,
+            "block_cache": block_cache,
             "total_alarms": sum(e["alarms"] for e in engines)}
 
 
@@ -108,6 +120,15 @@ def render_fleet_status(status: dict[str, Any]) -> str:
              f"goldens: {status['goldens']}   "
              f"artifacts: {status['artifacts']}   "
              f"alarms: {status['total_alarms']}"]
+    bc = status.get("block_cache") or {}
+    n_entries = status.get("block_entries", 0)
+    if n_entries or any(bc.values()):
+        lines.append(
+            f"block evidence: {n_entries} entries   "
+            f"block cache: {bc.get('block_hits', 0)} hits / "
+            f"{bc.get('block_misses', 0)} misses   "
+            f"profile cache: {bc.get('profile_hits', 0)} hits / "
+            f"{bc.get('profile_misses', 0)} misses")
     for e in status["engines"]:
         flags = []
         if e["alarms"]:

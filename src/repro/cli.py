@@ -359,6 +359,17 @@ def cmd_artifacts(args) -> int:
               f"(+{s['legacy_npz']} legacy .npz)")
         print(f"chunks: {s['chunk_count']} "
               f"({s['chunk_bytes'] / 1024:.1f} KiB)")
+        bc = s.get("block_cache", {})
+        print(f"block evidence: {s.get('block_entries', 0)} block + "
+              f"{s.get('profile_entries', 0)} profile + "
+              f"{s.get('hlo_entries', 0)} hlo entries "
+              f"({s.get('block_evidence_manifest_bytes', 0) / 1024:.1f} KiB "
+              f"manifests)")
+        print(f"block cache (this process): "
+              f"{bc.get('block_hits', 0)} hits / "
+              f"{bc.get('block_misses', 0)} misses; profile "
+              f"{bc.get('profile_hits', 0)} hits / "
+              f"{bc.get('profile_misses', 0)} misses")
         print(f"values: {s['values_total']} recorded, "
               f"{s['values_sketch_only']} sketch-only "
               f"({s['sketch_only_fraction']:.1%}); "

@@ -66,8 +66,28 @@ ARTIFACT_FORMAT_VERSION = 3
 _READABLE_VERSIONS = (1, 2, 3)
 _NPZ_FORMAT_VERSION = 2          # what CandidateArtifact.save(path) writes
 
+# Store schema v4 = v3 artifact manifests + block-evidence sibling entries
+# (``block--``/``profile--``/``hlo--`` manifest keys, core/block_cache.py)
+# sharing the chunk space.  Artifact manifests themselves are UNCHANGED —
+# ARTIFACT_FORMAT_VERSION stays 3 (it is hashed into every artifact_key, so
+# bumping it would rotate all content addresses) and a v3 store reads a v4
+# store's artifacts verbatim; the extra entries are advisory cache state.
+STORE_SCHEMA_VERSION = 4
+
 _STORE_ENV = "MAGNETON_STORE"
 _DEFAULT_STORE = "~/.cache/magneton/artifacts"
+
+# Ephemeral capture meta: wall-clock timings and block-cache hit/miss
+# deltas describe the *run that produced* the artifact, not its content.
+# They stay on the in-memory object but are stripped from every persisted
+# form — manifests must be deterministic functions of the capture key so
+# racing writers of one key converge byte-identically (the fleet-store
+# convergence invariant, scripts/serve_audit_check.py).
+_EPHEMERAL_META = ("timings", "block_cache")
+
+
+def _persistable_meta(meta: Mapping[str, Any]) -> dict[str, Any]:
+    return {k: v for k, v in meta.items() if k not in _EPHEMERAL_META}
 
 
 class ArtifactValueError(RuntimeError):
@@ -481,7 +501,7 @@ class CandidateArtifact:
             "backend_label": self.backend_label,
             "sample_seeds": list(self.sample_seeds),
             "config": self.config,
-            "meta": self.meta,
+            "meta": _persistable_meta(self.meta),
             "graph": _graph_payload(self.graph),
             "stats": _stats_payload(self.sample_stats),
             "profile": _profile_payload(self.profile),
@@ -603,7 +623,7 @@ class CandidateArtifact:
             "backend_label": self.backend_label,
             "sample_seeds": list(self.sample_seeds),
             "config": self.config,
-            "meta": self.meta,
+            "meta": _persistable_meta(self.meta),
             "graph": _graph_payload(self.graph),
             "stats": _stats_payload(self.sample_stats),
             "profile": _profile_payload(self.profile),
@@ -819,14 +839,31 @@ class ArtifactStore:
 
     # -- sizes --------------------------------------------------------------
     def _chunk_refs(self, manifest: Mapping[str, Any]) -> list[str]:
-        # .get: reserved audit-state manifests have neither field and
-        # reference no chunks
+        # .get: reserved audit-state manifests have none of these fields
+        # and reference no chunks; block-evidence entries reference theirs
+        # through "ext_out"
         out: list[str] = []
         for rec in (list(manifest.get("outputs", ()))
-                    + list(manifest.get("values", ()))):
+                    + list(manifest.get("values", ()))
+                    + list(manifest.get("ext_out", ()))):
             if rec.get("chunks"):
                 out.extend(rec["chunks"])
         return out
+
+    def _evidence_chunk_refs(self) -> set[str]:
+        """Chunks referenced by block-evidence entries: pinned against
+        artifact-walk GC (prune only sees artifact manifests)."""
+        from repro.core.block_cache import is_block_evidence
+        pinned: set[str] = set()
+        for key in self.backend.manifest_keys():
+            if not is_block_evidence(key):
+                continue
+            try:
+                manifest = self.backend.read_manifest(key)
+            except (KeyError, OSError, StoreError):
+                continue
+            pinned.update(self._chunk_refs(manifest))
+        return pinned
 
     def entry_bytes(self, key: str) -> int:
         """One entry's footprint: manifest + referenced chunks (shared
@@ -869,9 +906,12 @@ class ArtifactStore:
 
     # -- GC -----------------------------------------------------------------
     def _refcounts(self) -> dict[str, int]:
+        from repro.core.block_cache import is_block_evidence
         refs: dict[str, int] = {}
         for key in self.backend.manifest_keys():
-            if is_reserved_manifest(key):
+            # audit state references no chunks; block evidence does, and a
+            # live entry must keep its chunks out of gc_chunks' dead set
+            if is_reserved_manifest(key) and not is_block_evidence(key):
                 continue
             try:
                 manifest = self.backend.read_manifest(key)
@@ -937,6 +977,10 @@ class ArtifactStore:
             except (KeyError, OSError, StoreError):
                 chunk_size[d] = 0
 
+        # chunks shared with block-evidence entries survive their last
+        # artifact referent: the evidence entry still rematerializes them
+        pinned = self._evidence_chunk_refs()
+
         protected = set(keep)
         if keep_latest > 0:
             protected.update(key for _, key, _, _ in entries[-keep_latest:])
@@ -951,7 +995,7 @@ class ArtifactStore:
             freed = size
             for d in refs:
                 refcount[d] -= 1
-                if refcount[d] == 0:
+                if refcount[d] == 0 and d not in pinned:
                     freed += chunk_size.get(d, 0)
                     if not dry_run:
                         self.backend.delete_chunk(d)
@@ -1078,11 +1122,27 @@ class ArtifactStore:
         value stored inline, duplicates and all); ``dedup_ratio`` divides it
         by the physical chunked footprint.
         """
+        from repro.core.block_cache import (BLOCK_PREFIX, HLO_PREFIX,
+                                            PROFILE_PREFIX, is_block_evidence)
         manifest_bytes = chunkrefs = 0
         logical_values = logical_outputs = meta_bytes = 0
         values_total = values_sketch_only = spectra_entries = 0
         n_manifests = n_audit = 0
+        n_block = n_profile = n_hlo = 0
+        evidence_bytes = 0
         for key in self.backend.manifest_keys():
+            if is_block_evidence(key):
+                if key.startswith(BLOCK_PREFIX):
+                    n_block += 1
+                elif key.startswith(PROFILE_PREFIX):
+                    n_profile += 1
+                elif key.startswith(HLO_PREFIX):
+                    n_hlo += 1
+                try:
+                    evidence_bytes += self.backend.manifest_bytes(key)
+                except (KeyError, OSError, StoreError):
+                    pass
+                continue
             if is_reserved_manifest(key):
                 n_audit += 1
                 continue
@@ -1127,9 +1187,20 @@ class ArtifactStore:
         physical = manifest_bytes + chunk_bytes + legacy_bytes
         monolithic = meta_bytes + logical_outputs + logical_values \
             + legacy_bytes
+        counters = self.backend.counters
         return {
+            "schema_version": STORE_SCHEMA_VERSION,
             "artifacts": n_manifests,
             "audit_entries": n_audit,
+            "block_entries": n_block,
+            "profile_entries": n_profile,
+            "hlo_entries": n_hlo,
+            "block_evidence_manifest_bytes": evidence_bytes,
+            "block_cache": {
+                "block_hits": counters.get("block_hits", 0),
+                "block_misses": counters.get("block_misses", 0),
+                "profile_hits": counters.get("profile_hits", 0),
+                "profile_misses": counters.get("profile_misses", 0)},
             "legacy_npz": len(legacy),
             "manifest_bytes": manifest_bytes,
             "chunk_count": chunk_count,

@@ -1,0 +1,264 @@
+"""Block-granular incremental capture/pricing cache (store schema v4).
+
+PR 9's ``block_structure`` digests prove that two blocks with equal
+structural digests and bitwise-identical external inputs produce
+bitwise-identical outputs (the twin-propagation invariant).  This module
+turns that proof into *reuse*: every fused-block dispatch of the
+instrumented interpreter (interp.py) is keyed by
+
+    sha256("blockev4" || family digest || period || ext-out structure
+           || ordered external-input value digests)
+
+and its evidence — the five streamed invariants of every block tensor plus
+the raw bytes of every externally-consumed output — is persisted as a
+first-class content-addressed entry next to the artifact manifests
+(``block--<hash>`` manifest + sha256 chunks).  A warm capture of a rewrite
+candidate that differs from an already-captured model in one layer then
+replays exactly that layer: every other block's key hits, its stats are
+spliced verbatim and its external outputs are rematerialized from chunks,
+so downstream blocks see bitwise-identical inputs and chain-hit in turn.
+
+Keying on external-input VALUE digests is deliberately stronger than the
+"input avals + sample seeds" a whole-graph key would use: a mid-graph
+block's inputs depend on everything upstream, so value digests are the
+only key that keeps reuse byte-identical by construction — a mutated
+block changes its own key (different family digest) and, if its outputs
+change, every downstream key too; if its rewrite is bitwise-preserving,
+downstream blocks keep hitting (same re-seeding discipline as PR 9's
+``resolve_pending``).
+
+Digests chain without re-hashing: on a hit the cached entry's output
+digests seed the run-local digest memo; on a miss the freshly computed
+bytes are hashed once.  Only graph inputs and consts are ever hashed
+outside that chain (consts via ``BlockStructure.const_digest``, memoized).
+
+``profile--`` entries give the same treatment to whole-graph energy
+pricing: a deterministic backend's EnergyProfile (including per-op HLO
+costs) is keyed by (jaxpr fingerprint, const value digests, input avals,
+backend id) and replayed from the store instead of re-profiled.
+
+Schema v4 = v3 artifact manifests + these sibling entries; a v3 store
+reads back unchanged (entries are additive), and every entry is advisory
+cache state — deleting one merely makes the next capture cold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any
+
+import numpy as np
+
+from repro.core.store import (Store, StoreError, chunk_digest, split_chunks)
+
+BLOCK_SCHEMA_VERSION = 4
+
+BLOCK_PREFIX = "block--"
+PROFILE_PREFIX = "profile--"
+HLO_PREFIX = "hlo--"
+EVIDENCE_PREFIXES = (BLOCK_PREFIX, PROFILE_PREFIX, HLO_PREFIX)
+
+# store errors that demote a cache probe to a miss / skip a write — the
+# cache must never fail a capture that would succeed cold
+_SOFT_ERRORS = (StoreError, KeyError, OSError, ValueError)
+
+
+def is_block_evidence(key: str) -> bool:
+    """True for block-evidence manifest keys (schema v4 cache entries)."""
+    return key.startswith(EVIDENCE_PREFIXES)
+
+
+def _fresh_block_counters() -> dict[str, int]:
+    return {"block_hits": 0, "block_misses": 0,
+            "profile_hits": 0, "profile_misses": 0,
+            "block_errors": 0}
+
+
+def format_value_digest(dtype: str, shape, sha: str) -> str:
+    """The graph._value_digest format for a value known only by metadata."""
+    return f"{dtype}:{tuple(shape)}:{sha}"
+
+
+def block_entry_key(fam_digest: str, period: int, ext_out, in_digests) -> str:
+    """Content address of one block repeat's evidence.
+
+    ``ext_out`` (the (offset, slot) union of externally-consumed outputs)
+    is part of the key because two graphs can share a family digest but
+    consume different slots outside the block — the cached entry must
+    carry every output the *reader* needs.
+    """
+    h = hashlib.sha256()
+    h.update(b"blockev4\x00")
+    h.update(fam_digest.encode())
+    h.update(f"\x00{period}\x00{ext_out!r}\x00".encode())
+    for d in in_digests:
+        h.update(d.encode())
+        h.update(b"\x00")
+    return BLOCK_PREFIX + h.hexdigest()[:40]
+
+
+@dataclasses.dataclass
+class BlockEvidenceCache:
+    """In-memory memo + optional persistent Store backend for block-level
+    capture evidence and whole-graph pricing entries.
+
+    Thread-compatible with Session's parallel per-sample captures: entries
+    are immutable once written, dict/get/set are atomic, and backend writes
+    are atomic-rename (or conditional-put) by construction — concurrent
+    writers of the same key converge on byte-identical bodies.
+    """
+
+    backend: Store | None = None
+    counters: dict[str, int] = dataclasses.field(
+        default_factory=_fresh_block_counters)
+    # entry key -> (payload, materialized ext-out arrays, by ext_out order)
+    memo: dict[str, tuple[dict, list[np.ndarray]]] = dataclasses.field(
+        default_factory=dict)
+    profiles: dict[str, dict] = dataclasses.field(default_factory=dict)
+    # (kind, key, family digest, window lo, "hit"|"miss") per probe — the
+    # invalidation tests' ground truth
+    trace: list[tuple] = dataclasses.field(default_factory=list)
+
+    # -- counters -----------------------------------------------------------
+
+    def _count(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+        if self.backend is not None:
+            c = self.backend.counters
+            c[name] = c.get(name, 0) + n
+
+    def snapshot(self) -> dict[str, int]:
+        return dict(self.counters)
+
+    @staticmethod
+    def delta(before: dict[str, int], after: dict[str, int]) -> dict[str, int]:
+        return {k: after.get(k, 0) - before.get(k, 0)
+                for k in after if after.get(k, 0) != before.get(k, 0)}
+
+    # -- block entries ------------------------------------------------------
+
+    def get_block(self, key: str, *, fam_digest: str = "",
+                  lo: int = -1) -> tuple[dict, list[np.ndarray]] | None:
+        """The cached (payload, ext-out arrays) for ``key``, or None."""
+        hit = self.memo.get(key)
+        if hit is None and self.backend is not None:
+            hit = self._load_block(key)
+            if hit is not None:
+                self.memo[key] = hit
+        if hit is not None:
+            self._count("block_hits")
+            self.trace.append(("block", key, fam_digest, lo, "hit"))
+            return hit
+        self._count("block_misses")
+        self.trace.append(("block", key, fam_digest, lo, "miss"))
+        return None
+
+    def _load_block(self, key: str) -> tuple[dict, list[np.ndarray]] | None:
+        try:
+            if not self.backend.has_manifest(key):
+                return None
+            payload = self.backend.read_manifest(key)
+            if payload.get("kind") != "block-evidence":
+                return None
+            arrays = [self._materialize(rec) for rec in payload["ext_out"]]
+        except _SOFT_ERRORS:
+            self._count("block_errors")
+            return None
+        return payload, arrays
+
+    def _materialize(self, rec: dict) -> np.ndarray:
+        buf = b"".join(self.backend.read_chunk(c) for c in rec["chunks"])
+        if len(buf) != rec["nbytes"] or chunk_digest(buf) != rec["digest"]:
+            raise StoreError(f"block evidence value corrupt: {rec['digest']}")
+        a = np.frombuffer(buf, dtype=np.dtype(rec["dtype"]))
+        return a.reshape(tuple(rec["shape"]))
+
+    def put_block(self, key: str, payload: dict,
+                  arrays: list[np.ndarray]) -> None:
+        """Record one block repeat's evidence (memo always; store when
+        writable).  ``arrays`` follow ``payload["ext_out"]`` order."""
+        self.memo[key] = (payload, arrays)
+        if self.backend is None or self.backend.readonly:
+            return
+        try:
+            for rec, a in zip(payload["ext_out"], arrays):
+                buf = np.ascontiguousarray(a).tobytes()
+                for chunk in split_chunks(buf):
+                    dg = chunk_digest(chunk)
+                    if not self.backend.has_chunk(dg):
+                        self.backend.write_chunk(dg, chunk)
+            self.backend.write_manifest(key, payload)
+        except _SOFT_ERRORS:
+            self._count("block_errors")
+
+    @staticmethod
+    def value_record(a: np.ndarray) -> dict:
+        """ValueRef-shaped record of one external output (chunk digests
+        computed here; bytes written by put_block)."""
+        buf = np.ascontiguousarray(a).tobytes()
+        return {"dtype": str(a.dtype), "shape": list(a.shape),
+                "nbytes": len(buf), "digest": chunk_digest(buf),
+                "chunks": [chunk_digest(c) for c in split_chunks(buf)]}
+
+    # -- profile entries ----------------------------------------------------
+
+    def get_profile(self, key: str) -> dict | None:
+        """The cached profile payload for ``key``, or None."""
+        payload = self.profiles.get(key)
+        if payload is None and self.backend is not None:
+            try:
+                if self.backend.has_manifest(key):
+                    payload = self.backend.read_manifest(key)
+                    if payload.get("kind") != "profile":
+                        payload = None
+                    else:
+                        self.profiles[key] = payload
+            except _SOFT_ERRORS:
+                self._count("block_errors")
+                payload = None
+        if payload is not None:
+            self._count("profile_hits")
+            self.trace.append(("profile", key, "", -1, "hit"))
+            return payload
+        self._count("profile_misses")
+        self.trace.append(("profile", key, "", -1, "miss"))
+        return None
+
+    def put_profile(self, key: str, payload: dict) -> None:
+        self.profiles[key] = payload
+        if self.backend is None or self.backend.readonly:
+            return
+        try:
+            self.backend.write_manifest(key, payload)
+        except _SOFT_ERRORS:
+            self._count("block_errors")
+
+
+def profile_entry_key(graph, args, backend_id: str) -> str:
+    """Content address of a deterministic backend's EnergyProfile.
+
+    Const VALUES are part of the key (XLA folds them into the compiled
+    module, so HLO costs depend on them); arg values are not — only their
+    avals matter to pricing.
+    """
+    from repro.core.graph import _jaxpr_fingerprint, _value_digest
+    closed = graph.closed_jaxpr
+    h = hashlib.sha256()
+    h.update(b"profilev4\x00")
+    if closed is not None:
+        h.update(_jaxpr_fingerprint(closed.jaxpr, tuple(closed.consts),
+                                    {}).encode())
+    else:   # rebuilt graphs: fall back to the structural node digests
+        from repro.core.graph import block_structure
+        bs = block_structure(graph)
+        for d in bs.struct_digests:
+            h.update(d.encode())
+    for t in sorted((graph._const_vals or {})):
+        h.update(_value_digest(graph._const_vals[t]).encode())
+    import jax
+    for a in jax.tree_util.tree_leaves(args):
+        arr = np.asarray(a)
+        h.update(f"{arr.dtype}:{arr.shape}\x00".encode())
+    h.update(backend_id.encode())
+    return PROFILE_PREFIX + h.hexdigest()[:40]

@@ -261,6 +261,10 @@ class AnalyticalBackend:
 
     spec: HardwareSpec = TPU_V5E
 
+    # a pure function of (graph, input avals): profiles are cacheable as
+    # content-addressed ``profile--`` entries (core/block_cache.py)
+    deterministic = True
+
     @property
     def id(self) -> str:
         return f"analytic:{self.spec.name}:{_spec_digest(self.spec)}"
@@ -282,6 +286,10 @@ class ReplayBackend:
     spec: HardwareSpec = CPU_HOST
     min_replay_time_s: float = 5e-3
     max_replay_iters: int = 64
+
+    # measured wall time is not a pure function of the program: never
+    # replayed from a profile cache entry
+    deterministic = False
 
     @property
     def id(self) -> str:
@@ -318,6 +326,9 @@ class HloCostBackend:
     """
 
     spec: HardwareSpec = TPU_V5E
+
+    # XLA cost analysis of a fixed module is deterministic: cacheable
+    deterministic = True
 
     @property
     def id(self) -> str:

@@ -630,6 +630,16 @@ def _find_families(struct: list[str]) -> list[BlockFamily]:
             while (e < n and not claimed[e] and not claimed[e - p]
                    and struct[e] == struct[e - p]):
                 e += 1
+            # canonical phase anchoring: a run's start is wherever
+            # periodicity happened to begin, so two graphs sharing the
+            # same repeated content can carve rotated (incompatible)
+            # windows — e.g. a program and its single-block rewrite,
+            # whose post-rewrite run starts mid-layer.  Re-anchor on the
+            # lexicographically least rotation of the period content:
+            # the window phase becomes a pure function of the CONTENT,
+            # so the block-evidence cache (core/block_cache.py) keys
+            # align across such graphs.  Costs at most one repeat.
+            s += min(range(p), key=lambda o: struct[s + o:s + o + p])
             count = (e - s) // p
             # trim any partial overlap with an earlier family
             while count >= _MIN_REPEATS and claimed[s:s + count * p].any():

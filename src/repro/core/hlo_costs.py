@@ -751,7 +751,52 @@ def attribute_costs(graph, compiled) -> PerOpCosts:
         module=module, attribution=stats)
 
 
-def per_op_costs(graph, args: Sequence[Any] = ()) -> PerOpCosts:
-    """Compile the graph with eqn-id metadata and attribute per-op costs."""
+# annotated_compile + attribute_costs memo, keyed by (jaxpr fingerprint,
+# const value digests, input avals) — a rewrite candidate sharing its
+# target's program text reuses the compile + walk outright, and repeated
+# pricing of the same graph (optimize's verify loop, recurring serving
+# audits) is free.  Bounded FIFO: compiled-module attributions are a few
+# hundred KB each and an unbounded process-wide dict would leak across
+# long sweeps.  Results are treated as immutable by every consumer
+# (EnergyProfile.hlo holds the same instance).
+_PER_OP_MEMO: "dict[str, PerOpCosts]" = {}
+_PER_OP_MEMO_MAX = 16
+PER_OP_MEMO_COUNTERS = {"hits": 0, "misses": 0}
+
+
+def _per_op_memo_key(graph, args) -> str:
+    import hashlib
+
+    import jax
+
+    from repro.core.graph import _jaxpr_fingerprint, _value_digest
+    closed = graph.closed_jaxpr
+    h = hashlib.sha256()
+    h.update(_jaxpr_fingerprint(closed.jaxpr, tuple(closed.consts),
+                                {}).encode())
+    for t in sorted((graph._const_vals or {})):
+        h.update(_value_digest(graph._const_vals[t]).encode())
+    for a in jax.tree_util.tree_leaves(args):
+        arr = np.asarray(a)
+        h.update(f"{arr.dtype}:{arr.shape}\x00".encode())
+    return h.hexdigest()
+
+
+def per_op_costs(graph, args: Sequence[Any] = (), *,
+                 memo: bool = True) -> PerOpCosts:
+    """Compile the graph with eqn-id metadata and attribute per-op costs
+    (memoized per content digest — see ``_PER_OP_MEMO``)."""
+    key = _per_op_memo_key(graph, args) if memo else None
+    if key is not None:
+        hit = _PER_OP_MEMO.get(key)
+        if hit is not None:
+            PER_OP_MEMO_COUNTERS["hits"] += 1
+            return hit
+        PER_OP_MEMO_COUNTERS["misses"] += 1
     compiled = annotated_compile(graph, args)
-    return attribute_costs(graph, compiled)
+    poc = attribute_costs(graph, compiled)
+    if key is not None:
+        while len(_PER_OP_MEMO) >= _PER_OP_MEMO_MAX:
+            _PER_OP_MEMO.pop(next(iter(_PER_OP_MEMO)))
+        _PER_OP_MEMO[key] = poc
+    return poc

@@ -265,6 +265,7 @@ def run_instrumented(
     only_nodes: "set[int] | None" = None,
     fused_stats: "dict[int, Any] | None" = None,
     mem: "dict[str, int] | None" = None,
+    block_cache=None,
 ) -> tuple[list[Any], list[OpRecord]]:
     """Execute the graph's jaxpr operator-by-operator with instrumentation.
 
@@ -296,6 +297,13 @@ def run_instrumented(
     mark of operator outputs resident in the interpreter environment, with
     per-op reference-counted discard (tensors are dropped after their last
     consumer).  Only the fast tid-space executor tracks this.
+
+    ``block_cache`` (a block_cache.BlockEvidenceCache) makes the fused
+    block path INCREMENTAL: each repeat's dispatch is keyed by its family
+    digest + external-input value digests; hits splice the cached stats
+    and rematerialize the cached external outputs without executing the
+    block, misses execute normally and record their evidence.  Only active
+    when the fused path is (``fused_stats`` set, graph large enough).
     """
     closed = graph.closed_jaxpr
     if closed is None:
@@ -317,7 +325,7 @@ def run_instrumented(
                          min_replay_time_s=min_replay_time_s,
                          max_replay_iters=max_replay_iters, on_op=on_op,
                          only_nodes=only_nodes, fused_stats=fused_stats,
-                         mem=mem)
+                         mem=mem, block_cache=block_cache)
 
     jaxpr = closed.jaxpr
     env: dict[Any, Any] = {}
@@ -420,7 +428,7 @@ def run_instrumented(
 def _run_flat(graph: OpGraph, plan: _ExecPlan, args, *,
               capture_values: bool, stream_values: bool, measure: bool,
               min_replay_time_s: float, max_replay_iters: int,
-              on_op, only_nodes, fused_stats, mem
+              on_op, only_nodes, fused_stats, mem, block_cache=None
               ) -> tuple[list[Any], list[OpRecord]]:
     """Flat tid-space executor (see run_instrumented for semantics)."""
     nodes = graph.nodes
@@ -457,6 +465,10 @@ def _run_flat(graph: OpGraph, plan: _ExecPlan, args, *,
                  and not capture_values and only_nodes is None
                  and len(nodes) >= _FUSED_STATS_MIN_NODES)
     blocks = plan.fused_blocks(graph) if use_fused else {}
+    cache = block_cache if use_fused else None
+    # run-local tid -> value digest memo: seeded by cache hits/misses so
+    # chained blocks never re-hash intermediate values
+    run_digests: dict[int, str] = {} if cache is not None else None
 
     records: list[OpRecord] = []
     idx = 0
@@ -465,7 +477,8 @@ def _run_flat(graph: OpGraph, plan: _ExecPlan, args, *,
         be = blocks.get(idx) if use_fused else None
         if be is not None:
             _run_block(graph, be, env, write_out, free_after, records,
-                       on_op, fused_stats)
+                       on_op, fused_stats, cache=cache,
+                       run_digests=run_digests)
             idx = be.fam.end
             continue
         node = nodes[idx]
@@ -520,18 +533,71 @@ def _run_flat(graph: OpGraph, plan: _ExecPlan, args, *,
 
 
 def _run_block(graph: OpGraph, be: _BlockExec, env, write_out, free_after,
-               records, on_op, fused_stats) -> None:
-    """Dispatch one fused block family: one compiled call per repeat."""
+               records, on_op, fused_stats, cache=None,
+               run_digests=None) -> None:
+    """Dispatch one fused block family: one compiled call per repeat — or,
+    with ``cache``, zero calls for repeats whose evidence key hits."""
     from repro.core.tensor_match import TensorSignature, stats_signature
 
     nodes = graph.nodes
     tensors = graph.tensors
     consts = getattr(graph, "_interp_plan").consts
     fam = be.fam
+    bs = None
+    if cache is not None:
+        from repro.core.graph import _value_digest, block_structure
+        bs = block_structure(graph)
+
+    def in_digest(t: int) -> str:
+        d = run_digests.get(t)
+        if d is None:
+            d = (bs.const_digest(t) if tensors[t].is_const
+                 else _value_digest(env[t]))
+            run_digests[t] = d
+        return d
+
+    def emit_records(lo: int) -> None:
+        for o in range(fam.period):
+            i = lo + o
+            rec = OpRecord(node_idx=i, primitive=nodes[i].primitive,
+                           out_values=None, wall_time_s=None)
+            records.append(rec)
+            if on_op is not None:
+                on_op(rec)
+            free_after(i)
+
     for r in range(fam.count):
         lo, _ = fam.window(r)
+
+        entry_key = None
+        if cache is not None:
+            from repro.core.block_cache import (block_entry_key,
+                                                format_value_digest)
+            digs = [in_digest(t) for t in be.ext_in[r]]
+            entry_key = block_entry_key(fam.digest, fam.period,
+                                        be.ext_out, digs)
+            hit = cache.get_block(entry_key, fam_digest=fam.digest, lo=lo)
+            if hit is not None:
+                payload, arrays = hit
+                for rec_d, v in zip(payload["ext_out"], arrays):
+                    t = nodes[lo + rec_d["o"]].outvars[rec_d["slot"]]
+                    write_out(t, v)
+                    run_digests[t] = format_value_digest(
+                        rec_d["dtype"], rec_d["shape"], rec_d["digest"])
+                for row in payload["stats"]:
+                    t = nodes[lo + row[0]].outvars[row[1]]
+                    fused_stats[t] = TensorSignature(
+                        numel=row[2], dtype=row[3],
+                        l1=row[4], l2=row[5], mean=row[6],
+                        amax=row[7], amin=row[8],
+                        spectra=None, shape=tuple(row[9]))
+                emit_records(lo)
+                continue
+
         args = [env[t] if t in env else consts[t] for t in be.ext_in[r]]
         ext_vals, stats_arr, raws = be.fn(*args)
+        ext_np = ([np.asarray(v) for v in ext_vals]
+                  if cache is not None else None)
         for (o, slot), v in zip(be.ext_out, ext_vals):
             write_out(nodes[lo + o].outvars[slot], v)
         # ONE host transfer per repeat, ONE C pass to python floats
@@ -546,14 +612,34 @@ def _run_block(graph: OpGraph, be: _BlockExec, env, write_out, free_after,
         for v, (o, slot) in zip(raws, be.raw_offsets):
             t = nodes[lo + o].outvars[slot]
             fused_stats[t] = stats_signature(np.asarray(v))
-        for o in range(fam.period):
-            i = lo + o
-            rec = OpRecord(node_idx=i, primitive=nodes[i].primitive,
-                           out_values=None, wall_time_s=None)
-            records.append(rec)
-            if on_op is not None:
-                on_op(rec)
-            free_after(i)
+
+        if cache is not None:
+            ext_recs = []
+            for (o, slot), a in zip(be.ext_out, ext_np):
+                rec_d = cache.value_record(a)
+                rec_d["o"], rec_d["slot"] = o, slot
+                ext_recs.append(rec_d)
+                t = nodes[lo + o].outvars[slot]
+                run_digests[t] = format_value_digest(
+                    rec_d["dtype"], rec_d["shape"], rec_d["digest"])
+            stat_rows = []
+            for o, slot, numel, dtype, shape in be.float_meta:
+                s = fused_stats[nodes[lo + o].outvars[slot]]
+                stat_rows.append([o, slot, numel, dtype,
+                                  float(s.l1), float(s.l2), float(s.mean),
+                                  float(s.amax), float(s.amin), list(shape)])
+            for o, slot in be.raw_offsets:
+                s = fused_stats[nodes[lo + o].outvars[slot]]
+                stat_rows.append([o, slot, int(s.numel), s.dtype,
+                                  float(s.l1), float(s.l2), float(s.mean),
+                                  float(s.amax), float(s.amin),
+                                  list(s.shape or ())])
+            from repro.core.block_cache import BLOCK_SCHEMA_VERSION
+            cache.put_block(entry_key, {
+                "schema": BLOCK_SCHEMA_VERSION, "kind": "block-evidence",
+                "family_digest": fam.digest, "period": fam.period,
+                "stats": stat_rows, "ext_out": ext_recs}, ext_np)
+        emit_records(lo)
 
 
 def _needed_nodes(graph: OpGraph, want: set[int]) -> set[int]:
@@ -605,7 +691,8 @@ def capture_tensor_values(
 
 
 def capture_tensor_stats(graph: OpGraph, *args,
-                         mem: "dict[str, int] | None" = None):
+                         mem: "dict[str, int] | None" = None,
+                         block_cache=None):
     """Streaming capture: outputs + tensor-id -> cheap symmetric invariants.
 
     One instrumented execution computes each intermediate tensor's
@@ -615,7 +702,10 @@ def capture_tensor_stats(graph: OpGraph, *args,
     ``(graph_outputs, {tid: TensorSignature})`` so callers (diff.py's
     functional-equivalence gate) can reuse the same execution's outputs
     instead of running the program again.  ``mem`` (optional dict) receives
-    the executor's ``peak_live_bytes`` watermark.
+    the executor's ``peak_live_bytes`` watermark.  ``block_cache`` (a
+    block_cache.BlockEvidenceCache) makes fused-block capture incremental:
+    repeats whose evidence key hits splice cached invariants and outputs
+    instead of executing (byte-identical to a cold capture).
     """
     from repro.core.tensor_match import stats_signature
 
@@ -630,5 +720,6 @@ def capture_tensor_stats(graph: OpGraph, *args,
             stats[tid] = stats_signature(val)
 
     outs, _ = run_instrumented(graph, *args, stream_values=True, on_op=on_op,
-                               fused_stats=stats, mem=mem)
+                               fused_stats=stats, mem=mem,
+                               block_cache=block_cache)
     return outs, stats

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 from pathlib import Path
 from typing import Any, Callable, Mapping, Sequence
 
@@ -212,6 +213,8 @@ class RankResult:
     total_energy_j: list[float]
     waste_matrix: list[list[float]]
     reports: dict[tuple[int, int], Report]   # (i, j) with i < j
+    # e.g. identical_pairs (content-address short-circuits), compares
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def order(self) -> list[int]:
         return sorted(range(len(self.names)),
@@ -258,6 +261,7 @@ class RankResult:
             "waste_matrix": self.waste_matrix,
             "reports": [{"i": i, "j": j, "report": json.loads(rep.to_json())}
                         for (i, j), rep in sorted(self.reports.items())],
+            "meta": self.meta,
         }, indent=2)
 
     @classmethod
@@ -268,7 +272,7 @@ class RankResult:
         return cls(names=list(d["names"]), keys=list(d["keys"]),
                    total_energy_j=list(d["total_energy_j"]),
                    waste_matrix=[list(row) for row in d["waste_matrix"]],
-                   reports=reports)
+                   reports=reports, meta=dict(d.get("meta", {})))
 
 
 # ---------------------------------------------------------------------------
@@ -314,6 +318,13 @@ class Session:
     # dialect so live captures persist straight into a shared fleet store
     # (repro.audit).  file:// and plain paths are always writable.
     store_writable: bool = False
+    # Incremental block-level capture & pricing (core/block_cache.py).
+    # None (default): auto — a BlockEvidenceCache backed by the session's
+    # store (in-memory only when store-less) engages for graphs on the
+    # fused-block capture path.  False disables; an explicit
+    # BlockEvidenceCache shares evidence across sessions in-process.
+    # Every reuse is byte-identical to a cold capture by construction.
+    block_cache: Any = None
 
     def __post_init__(self):
         if isinstance(self.store, (str, Path)):
@@ -326,6 +337,27 @@ class Session:
             from repro.core.store import Store
             if isinstance(self.store, Store):
                 self.store = ArtifactStore(backend=self.store)
+
+    def _block_evidence(self):
+        """The session's BlockEvidenceCache (lazily built), or None."""
+        if self.block_cache is False:
+            return None
+        from repro.core.block_cache import BlockEvidenceCache
+        if isinstance(self.block_cache, BlockEvidenceCache):
+            return self.block_cache
+        backend = (self.store.backend
+                   if isinstance(self.store, ArtifactStore) else None)
+        self.block_cache = BlockEvidenceCache(backend=backend)
+        return self.block_cache
+
+    @property
+    def block_cache_counters(self) -> dict[str, int]:
+        """Cumulative block/profile cache hit-miss counters (zeros when the
+        cache is disabled or never engaged)."""
+        from repro.core.block_cache import BlockEvidenceCache
+        if isinstance(self.block_cache, BlockEvidenceCache):
+            return dict(self.block_cache.counters)
+        return {}
 
     # -- capture ------------------------------------------------------------
     def capture(self, fn: Callable, args: Sequence[Any], *,
@@ -359,10 +391,12 @@ class Session:
         sample_seeds = tuple(int(s) for s in sample_seeds)
         name = name or getattr(fn, "__name__", "candidate")
 
+        t0 = time.perf_counter()
         try:
             graph = trace(fn, *args, name=name)
         except Exception as e:
             _raise_uncapturable(fn, args, name, e)
+        trace_s = time.perf_counter() - t0
         key = artifact_key(graph, args, sample_seeds, self.backend.id)
 
         store_warnings: list[str] = []
@@ -389,8 +423,12 @@ class Session:
                                      output_rtol)
                 return art
 
+        bc = self._block_evidence()
+        bc_before = bc.snapshot() if bc is not None else None
+        t0 = time.perf_counter()
         samples = make_samples(args, sample_seeds)
-        outs0, stats0 = interp.capture_tensor_stats(graph, *samples[0])
+        outs0, stats0 = interp.capture_tensor_stats(graph, *samples[0],
+                                                    block_cache=bc)
         if gate_against is not None:
             _check_same_task(gate_against.outputs, outs0, output_rtol)
         sample_stats = [stats0]
@@ -401,23 +439,27 @@ class Session:
         if par and len(rest) > 1:
             from concurrent.futures import ThreadPoolExecutor
             with ThreadPoolExecutor(max_workers=min(len(rest), 4)) as ex:
-                futs = [ex.submit(interp.capture_tensor_stats, graph, *s)
+                futs = [ex.submit(interp.capture_tensor_stats, graph, *s,
+                                  block_cache=bc)
                         for s in rest]
                 sample_stats.extend(f.result()[1] for f in futs)
         else:
             for s in rest:
-                sample_stats.append(interp.capture_tensor_stats(graph, *s)[1])
+                sample_stats.append(interp.capture_tensor_stats(
+                    graph, *s, block_cache=bc)[1])
         outputs = [np.asarray(o) for o in jax.tree_util.tree_leaves(outs0)]
+        stats_s = time.perf_counter() - t0
 
+        t0 = time.perf_counter()
         backend = self.backend
         degraded: list[str] = []
         try:
-            profile = backend.profile(graph, args)
+            profile = self._cached_profile(backend, graph, args, bc)
         except Exception as e:
             fallback = self._fallback_for(backend)
             if not self.allow_degraded or fallback is None:
                 raise
-            profile = fallback.profile(graph, args)
+            profile = self._cached_profile(fallback, graph, args, bc)
             degraded.append(
                 f"energy backend {backend.label!r} failed "
                 f"({type(e).__name__}: {e}); re-priced with fallback "
@@ -427,6 +469,7 @@ class Session:
             # actually produced it, so the degraded capture never aliases a
             # healthy one in the store
             key = artifact_key(graph, args, sample_seeds, backend.id)
+        price_s = time.perf_counter() - t0
 
         art = CandidateArtifact(
             name=name, key=key, graph=graph, sample_stats=sample_stats,
@@ -436,7 +479,13 @@ class Session:
             config=dict(config) if config is not None else None,
             meta={"nodes": len(graph.nodes),
                   "num_samples": len(samples),
+                  "timings": {"trace_s": trace_s, "stats_s": stats_s,
+                              "price_s": price_s},
                   **(dict(extra_meta) if extra_meta else {})})
+        if bc is not None:
+            delta = bc.delta(bc_before, bc.snapshot())
+            if delta:
+                art.meta["block_cache"] = delta
         if degraded:
             art.meta["degraded"] = degraded
         if store_warnings:
@@ -454,6 +503,31 @@ class Session:
                     f"artifact not persisted ({type(e).__name__}: {e}); "
                     "offline replay unavailable for this capture")
         return art
+
+    def _cached_profile(self, backend: EnergyBackend, graph: OpGraph,
+                        args, bc) -> EnergyProfile:
+        """Energy-price ``graph``, replaying a cached ``profile--`` entry
+        when the backend is deterministic (analytic / HLO-calibrated — a
+        function of graph + avals, so the entry is exact by construction).
+        Replay-measured backends are never cached: wall time is not a pure
+        function of the program."""
+        if (bc is None or not getattr(backend, "deterministic", False)
+                or len(graph.nodes) < _STAMP_MIN_NODES):
+            return backend.profile(graph, args)
+        from repro.core.artifact import (_profile_from_payload,
+                                         _profile_payload)
+        from repro.core.block_cache import profile_entry_key
+        key = profile_entry_key(graph, args, backend.id)
+        payload = bc.get_profile(key)
+        if payload is not None:
+            profile = _profile_from_payload(payload["profile"])
+            profile.graph_name = graph.name    # labels, not identity
+            return profile
+        profile = backend.profile(graph, args)
+        bc.put_profile(key, {"schema": 4, "kind": "profile",
+                             "backend_id": backend.id,
+                             "profile": _profile_payload(profile)})
+        return profile
 
     def _fallback_for(self, backend: EnergyBackend) -> EnergyBackend | None:
         """The next rung down the pricing ladder, or None at the bottom."""
@@ -625,9 +699,26 @@ class Session:
             raise ValueError("rank() needs at least two artifacts")
         waste = [[0.0] * n for _ in range(n)]
         reports: dict[tuple[int, int], Report] = {}
+        identical = 0
         try:
             for i in range(n):
                 for j in range(i + 1, n):
+                    if arts[i].key == arts[j].key:
+                        # same content address = same jaxpr, inputs, seeds
+                        # and backend: zero waste by construction, no
+                        # compare needed
+                        identical += 1
+                        reports[(i, j)] = Report(
+                            name_a=arts[i].name, name_b=arts[j].name,
+                            findings=[],
+                            total_energy_a_j=arts[i].profile.total_energy_j,
+                            total_energy_b_j=arts[j].profile.total_energy_j,
+                            meta={"identical_artifacts": True,
+                                  "key": arts[i].key,
+                                  "nodes_a": len(arts[i].graph.nodes)
+                                  if arts[i].graph is not None else None,
+                                  "energy_model": arts[i].backend_label})
+                        continue
                     rep = self.compare(arts[i], arts[j],
                                        output_rtol=output_rtol,
                                        persist=False)
@@ -649,7 +740,9 @@ class Session:
             keys=[a.key for a in arts],
             total_energy_j=[a.profile.total_energy_j for a in arts],
             waste_matrix=waste,
-            reports=reports)
+            reports=reports,
+            meta={"identical_pairs": identical,
+                  "compares": len(reports) - identical})
 
     # -- classification (paper §6.1) ----------------------------------------
     def _classify(self, idx: int, region: MatchedRegion,

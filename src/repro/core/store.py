@@ -194,17 +194,22 @@ class RetryPolicy:
             f"{what} failed after {self.max_attempts} attempt(s): {last}") from last
 
 
-# Manifest keys under this prefix are not CandidateArtifact manifests but
-# audit-subsystem state (per-engine audit logs, per-class golden records —
-# repro.audit).  They ride the same manifest transport (and index.json) so
-# one shared store carries both, but ArtifactStore's artifact-shaped walks
-# (stats, entries, prune, gc refcounts) skip them.
-RESERVED_MANIFEST_PREFIX = "audit-"
+# Manifest keys under these prefixes are not CandidateArtifact manifests:
+# ``audit-`` carries audit-subsystem state (per-engine audit logs,
+# per-class golden records — repro.audit); ``block--``/``profile--``/
+# ``hlo--`` carry schema-v4 block-evidence cache entries
+# (core/block_cache.py).  They ride the same manifest transport (and
+# index.json) so one shared store carries everything, but ArtifactStore's
+# artifact-shaped walks (stats entry listing, entries, prune) skip them —
+# chunk refcounting does NOT skip block evidence, since those entries
+# reference chunks (see ArtifactStore._chunk_refs).
+RESERVED_MANIFEST_PREFIX = "audit-"        # back-compat alias
+RESERVED_MANIFEST_PREFIXES = ("audit-", "block--", "profile--", "hlo--")
 
 
 def is_reserved_manifest(key: str) -> bool:
-    """True for non-artifact manifest keys (audit state, see above)."""
-    return key.startswith(RESERVED_MANIFEST_PREFIX)
+    """True for non-artifact manifest keys (audit state + block evidence)."""
+    return key.startswith(RESERVED_MANIFEST_PREFIXES)
 
 
 def chunk_digest(data: bytes) -> str:
@@ -225,7 +230,9 @@ def _fresh_counters() -> dict[str, int]:
             "chunk_dedup_hits": 0,
             "upstream_manifest_reads": 0, "upstream_chunk_reads": 0,
             "retries": 0, "chunks_quarantined": 0, "verify_failures": 0,
-            "quarantine_evictions": 0, "index_cas_conflicts": 0}
+            "quarantine_evictions": 0, "index_cas_conflicts": 0,
+            "block_hits": 0, "block_misses": 0,
+            "profile_hits": 0, "profile_misses": 0}
 
 
 # The quarantine directory holds corrupt-at-rest files for forensics, but a

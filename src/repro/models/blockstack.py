@@ -1,0 +1,97 @@
+"""Weight-tied heterogeneous transformer-block stack.
+
+A two-stage model for exercising MULTI-FAMILY block machinery on a
+non-homogeneous graph (the PR 9 headroom item): ``attn_layers`` repeats of
+a full transformer block (RMSNorm -> multi-head self-attention -> residual
+-> RMSNorm -> SwiGLU MLP -> residual) followed by ``mlp_layers`` repeats
+of a lighter norm+MLP block.  ``block_structure`` finds two distinct
+repeated-block families, so the fused capture, the block stamper, and the
+block-evidence cache (core/block_cache.py) all run with heterogeneous
+family digests in one graph.
+
+Weights are TIED across layers (ALBERT-style parameter sharing).  This is
+load-bearing, not a shortcut: struct digests embed const VALUE digests, so
+per-layer weights would make every layer structurally unique and no family
+would form.  Tied weights match how block families arise in practice —
+identical program text per layer — while the *activations* still differ
+per layer (each block's inputs are the previous block's outputs), which is
+exactly what the block cache keys on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models.layers import mlp_apply, rms_norm
+
+
+def transformer_block_stack(attn_layers: int = 6, mlp_layers: int = 6, *,
+                            d_model: int = 64, n_heads: int = 4,
+                            d_ff: int | None = None, seq: int = 16,
+                            batch: int = 2, dtype: str = "float32",
+                            seed: int = 0):
+    """Build ``(fn, example_args)`` for a tied-weight two-family stack.
+
+    ``fn(x)`` closes over the shared weights; ``example_args`` is a single
+    ``(batch, seq, d_model)`` activation tensor.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if d_ff is None:
+        d_ff = 2 * d_model
+    if d_model % n_heads:
+        raise ValueError(f"d_model={d_model} not divisible by n_heads={n_heads}")
+    head_dim = d_model // n_heads
+
+    rng = np.random.default_rng(seed)
+
+    def mat(shape, scale):
+        return jnp.asarray(
+            rng.standard_normal(shape).astype(dtype) * np.asarray(
+                scale, dtype=dtype))
+
+    wq = mat((d_model, d_model), 1.0 / np.sqrt(d_model))
+    wk = mat((d_model, d_model), 1.0 / np.sqrt(d_model))
+    wv = mat((d_model, d_model), 1.0 / np.sqrt(d_model))
+    wo = mat((d_model, d_model), 1.0 / np.sqrt(d_model))
+    g_attn = jnp.asarray(1.0 + 0.1 * rng.standard_normal(d_model)
+                         .astype(dtype))
+    g_mlp = jnp.asarray(1.0 + 0.1 * rng.standard_normal(d_model)
+                        .astype(dtype))
+    g_tail = jnp.asarray(1.0 + 0.1 * rng.standard_normal(d_model)
+                         .astype(dtype))
+    mlp_params = {"w_gate": mat((d_model, d_ff), 0.5 / np.sqrt(d_model)),
+                  "w_up": mat((d_model, d_ff), 0.5 / np.sqrt(d_model)),
+                  "w_down": mat((d_ff, d_model), 0.5 / np.sqrt(d_ff))}
+    tail_params = {"w_gate": mlp_params["w_gate"],
+                   "w_up": mlp_params["w_up"],
+                   "w_down": mlp_params["w_down"]}
+
+    def attention(h):
+        b, s, _ = h.shape
+        q = (h @ wq).reshape(b, s, n_heads, head_dim)
+        k = (h @ wk).reshape(b, s, n_heads, head_dim)
+        v = (h @ wv).reshape(b, s, n_heads, head_dim)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(head_dim)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        return ctx.reshape(b, s, d_model) @ wo
+
+    def attn_block(x):
+        x = x + attention(rms_norm(x, g_attn))
+        return x + mlp_apply(mlp_params, rms_norm(x, g_mlp))
+
+    def mlp_block(x):
+        return x + mlp_apply(tail_params, rms_norm(x, g_tail))
+
+    def fn(x):
+        for _ in range(attn_layers):
+            x = attn_block(x)
+        for _ in range(mlp_layers):
+            x = mlp_block(x)
+        return x
+
+    x0 = jnp.asarray(rng.standard_normal((batch, seq, d_model))
+                     .astype(dtype))
+    return fn, (x0,)

@@ -137,7 +137,13 @@ def optimize(fn: Callable, example_args: Sequence[Any], *,
                                "n_proposed": len(proposals),
                                "n_verified": sum(
                                    1 for c in candidates
-                                   if c.status == "verified")})
+                                   if c.status == "verified"),
+                               # candidate verification re-captures through
+                               # the session, so single-block rewrites of a
+                               # block-structured target replay only the
+                               # rewritten block (core/block_cache.py)
+                               "block_cache":
+                                   session.block_cache_counters})
 
     # N-way rank: target + every gate-surviving candidate.  Pairwise
     # candidate-candidate compares may see up to 2x the per-candidate
@@ -154,6 +160,7 @@ def optimize(fn: Callable, example_args: Sequence[Any], *,
                 "names": rank.names,
                 "total_energy_j": rank.total_energy_j,
                 "waste_matrix": rank.waste_matrix,
+                "identical_pairs": rank.meta.get("identical_pairs", 0),
             }
         except Exception as e:   # rank is reporting sugar, not a gate
             report.meta["rank_error"] = f"{type(e).__name__}: {e}"

@@ -1,0 +1,362 @@
+"""Block-evidence cache: invalidation, byte-identity, and persistence.
+
+The acceptance-critical properties of the incremental capture engine
+(core/block_cache.py):
+
+  * for EVERY mutation class, capturing the mutant against a cache
+    populated by the clean program reuses only entries that are provably
+    sound — the mutated block's clean entries are never served, and the
+    cached capture stays byte-identical to an uncached capture of the
+    same mutant,
+  * a warm ``Session.capture`` of a single-block rewrite is byte-identical
+    to a cold one (same content address, same stats payload, same profile
+    payload),
+  * evidence survives the store round-trip: a fresh Session on the same
+    store gets block hits, ``gc_chunks``/``prune`` never collect chunks an
+    evidence entry references,
+  * ``Session.rank`` short-circuits pairs whose artifacts share a content
+    address and reports the count in ``RankResult.meta``,
+  * ``hlo_costs.per_op_costs`` memoizes per (jaxpr, consts, avals).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.graph as graph_mod
+import repro.core.hlo_costs as hlo_costs
+import repro.core.interp as interp
+from repro.core.artifact import _profile_payload, _stats_payload
+from repro.core.block_cache import BlockEvidenceCache, is_block_evidence
+from repro.core.session import RankResult, Session
+from repro.models.blockstack import transformer_block_stack
+from repro.testing.mutate import MUTATIONS, make_mutant
+
+
+# ---------------------------------------------------------------------------
+# clean layered programs (>= 128 nodes so the fused/block path engages,
+# tied consts so block families form)
+# ---------------------------------------------------------------------------
+
+def _dot_tanh_model(layers=40, n=16, seed=0, twist=None):
+    """f32 matmul+tanh stack: dot_general and tanh site per layer."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray((rng.standard_normal((n, n)) / np.sqrt(n))
+                    .astype(np.float32))
+    x0 = jnp.asarray(rng.standard_normal((4, n)).astype(np.float32))
+
+    def fn(x):
+        for i in range(layers):
+            h = x @ w
+            if i == twist:
+                h = jnp.transpose(jnp.transpose(h))
+            x = (jnp.tanh(h) + 0.5 * x) * 1.01
+        return x
+
+    return fn, (x0,)
+
+
+def _scan_model(layers=48, n=8, seed=1):
+    """One scan-with-dot per layer (the scan_body mutation's target)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray((rng.standard_normal((n, n)) / np.sqrt(n))
+                    .astype(np.float32))
+    x0 = jnp.asarray(rng.standard_normal((2, n)).astype(np.float32))
+
+    def fn(x):
+        for _ in range(layers):
+            def body(c, _):
+                return jnp.tanh(c @ w) * 0.99 + c * 0.01, None
+            y, _ = jax.lax.scan(body, x, None, length=2)
+            x = (y + 0.1 * x) * 1.001
+        return x
+
+    return fn, (x0,)
+
+
+def _bf16_model(layers=48, n=16, seed=2):
+    """Uniformly-bf16 elementwise stack (the storage_upcast target)."""
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.standard_normal(n), dtype=jnp.bfloat16)
+    x0 = jnp.asarray(rng.standard_normal((4, n)), dtype=jnp.bfloat16)
+
+    def fn(x):
+        for _ in range(layers):
+            x = jnp.tanh(x * c) + x
+        return x
+
+    return fn, (x0,)
+
+
+# model builder + number of applicable sites to SKIP so the mutation lands
+# mid-graph (inside the block family, not on the boundary layer 0)
+_CASES = {
+    "dtype_upcast": (_dot_tanh_model, 20),
+    "redundant_recompute": (_dot_tanh_model, 20),
+    "sync_in_loop": (_dot_tanh_model, 20),
+    "oversized_padding": (_dot_tanh_model, 20),
+    "op_split": (_dot_tanh_model, 20),
+    "layout_thrash": (_dot_tanh_model, 20),
+    "scan_body": (_scan_model, 20),
+    "storage_upcast": (_bf16_model, 60),   # 3 sites/layer -> layer 20
+}
+
+
+def _nth_site(mutation_cls, skip):
+    """A mutation instance that declines its first ``skip`` applicable
+    sites and mutates exactly the next one (mid-graph, single block)."""
+
+    class NthSite(mutation_cls):
+        def __init__(self):
+            super().__init__(max_sites=1)
+            self._passed = 0
+
+        def reset(self):
+            super().reset()
+            self._passed = 0
+
+        def _take(self):
+            if self._passed < self._skip_n:
+                self._passed += 1
+                return False
+            return super()._take()
+
+    NthSite._skip_n = skip
+    NthSite.__name__ = f"NthSite_{mutation_cls.__name__}"
+    return NthSite()
+
+
+def _out_bytes(outs):
+    return tuple((np.asarray(o).dtype.str, np.asarray(o).shape,
+                  np.asarray(o).tobytes()) for o in outs)
+
+
+def _sig_tuple(s):
+    spectra = (None if s.spectra is None
+               else tuple(np.asarray(a).tobytes() for a in s.spectra))
+    return (s.numel, s.dtype, s.l1, s.l2, s.mean, s.amax, s.amin,
+            tuple(s.shape or ()), spectra)
+
+
+def _stats_equal(a, b):
+    if set(a) != set(b):
+        return False
+    return all(_sig_tuple(a[t]) == _sig_tuple(b[t]) for t in a)
+
+
+# ---------------------------------------------------------------------------
+# per-mutation-class invalidation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mname", sorted(MUTATIONS))
+def test_mutation_invalidates_only_its_block(mname):
+    model, skip = _CASES[mname]
+    fn, args = model()
+    clean_graph = graph_mod.trace(fn, *args, name="clean")
+
+    cache = BlockEvidenceCache()
+    clean_outs, _ = interp.capture_tensor_stats(clean_graph, *args,
+                                                block_cache=cache)
+    clean_probes = [t for t in cache.trace if t[0] == "block"]
+    clean_keys = {t[1] for t in clean_probes}
+    n_blocks = len(clean_keys)
+    # the model must actually exercise the block path, all cold
+    assert n_blocks >= 8
+    assert all(t[4] == "miss" for t in clean_probes)
+
+    mutant, sites = make_mutant(fn, _nth_site(MUTATIONS[mname], skip), args)
+    assert sites == 1
+    mutant_graph = graph_mod.trace(mutant, *args, name="mutant")
+
+    # uncached mutant capture: the byte-identity reference
+    ref_outs, ref_stats = interp.capture_tensor_stats(mutant_graph, *args)
+    preserving = _out_bytes(ref_outs) == _out_bytes(clean_outs)
+
+    before = cache.snapshot()
+    cache.trace.clear()
+    warm_outs, warm_stats = interp.capture_tensor_stats(mutant_graph, *args,
+                                                        block_cache=cache)
+    d = BlockEvidenceCache.delta(before, cache.snapshot())
+    hit_keys = {t[1] for t in cache.trace
+                if t[0] == "block" and t[4] == "hit"}
+    miss_keys = {t[1] for t in cache.trace
+                 if t[0] == "block" and t[4] == "miss"}
+
+    # soundness: the cached capture is byte-identical to the uncached one
+    # (a wrongly-served clean entry for the mutated block would corrupt
+    # either the spliced stats or the downstream outputs)
+    assert _out_bytes(warm_outs) == _out_bytes(ref_outs)
+    assert _stats_equal(warm_stats, ref_stats)
+    assert d.get("block_errors", 0) == 0
+
+    # only clean entries are ever reused, and the mutated block's clean
+    # entries are provably not among them (the mutation changed that
+    # block's struct digest, so its windows fall out of the reuse set)
+    assert hit_keys <= clean_keys
+    assert clean_keys - hit_keys, "every clean entry was reused, including " \
+        "the mutated block's"
+    assert not (miss_keys & clean_keys)
+
+    if preserving:
+        # bitwise-output-preserving mutation: every block outside the
+        # mutated window still hits (values are unchanged downstream)
+        assert d.get("block_hits", 0) >= n_blocks - 6
+        assert d.get("block_misses", 0) <= 6
+    else:
+        # value-changing mutation: blocks upstream of the site hit, the
+        # chained input digests honestly miss everything downstream
+        assert d.get("block_hits", 0) > 0
+        assert d.get("block_misses", 0) > 0
+        assert (d.get("block_hits", 0) + d.get("block_misses", 0)
+                >= n_blocks - 6)
+
+
+# ---------------------------------------------------------------------------
+# Session-level warm == cold, persistence, prune pinning
+# ---------------------------------------------------------------------------
+
+def test_session_warm_capture_byte_identical_to_cold(tmp_path):
+    fn, args = _dot_tanh_model()
+    variant, _ = _dot_tanh_model(twist=20)
+
+    cold = Session(store=str(tmp_path / "cold"), block_cache=False)
+    cold_t = cold.capture(fn, args, name="target")
+    cold_v = cold.capture(variant, args, name="variant")
+    assert cold.block_cache_counters == {}
+
+    warm = Session(store=str(tmp_path / "warm"))
+    warm_t = warm.capture(fn, args, name="target")
+    warm_v = warm.capture(variant, args, name="variant")
+
+    # the delta capture reused the target's block evidence...
+    assert warm_v.meta["block_cache"]["block_hits"] > 0
+    assert warm.block_cache_counters["block_hits"] > 0
+    # ...and stayed byte-identical to the cold capture: same content
+    # address, same stats payload, same priced profile
+    for c, w in ((cold_t, warm_t), (cold_v, warm_v)):
+        assert c.key == w.key
+        assert _stats_payload(c.sample_stats) == _stats_payload(w.sample_stats)
+        assert _profile_payload(c.profile) == _profile_payload(w.profile)
+        assert _out_bytes(c.outputs) == _out_bytes(w.outputs)
+        assert c.total_energy_j == w.total_energy_j
+
+
+def test_block_evidence_persists_across_sessions(tmp_path):
+    fn, args = _dot_tanh_model()
+    s1 = Session(store=str(tmp_path))
+    s1.capture(fn, args, name="target")
+    assert s1.block_cache_counters["block_misses"] > 0
+
+    # evidence is store-backed: a FRESH session (new in-memory cache) on
+    # the same store replays only the twisted block of a variant
+    variant, _ = _dot_tanh_model(twist=20)
+    s2 = Session(store=str(tmp_path))
+    art = s2.capture(variant, args, name="variant")
+    assert art.meta["block_cache"]["block_hits"] > 0
+    assert s2.block_cache_counters["block_errors"] == 0
+
+    # evidence entries are invisible to the artifact listing but counted
+    # by stats()
+    assert not any(is_block_evidence(k) for k in s2.store.keys())
+    st = s2.store.stats()
+    assert st["schema_version"] == 4
+    assert st["block_entries"] > 0
+    assert st["profile_entries"] >= 1
+
+
+def test_gc_and_prune_keep_evidence_chunks(tmp_path):
+    fn, args = _dot_tanh_model()
+    s1 = Session(store=str(tmp_path))
+    s1.capture(fn, args, name="target")
+
+    # gc must not collect chunks that only evidence entries reference
+    removed = s1.store.gc_chunks()
+    assert removed == []
+
+    # prune away every artifact: evidence-referenced chunks are pinned, so
+    # a fresh session still gets clean block hits (get_block re-verifies
+    # nbytes + digest per materialized chunk, so a collected or corrupted
+    # chunk would surface as block_errors / misses, not silent reuse)
+    s1.store.prune(max_bytes=0)
+    assert s1.store.keys() == []
+    s2 = Session(store=str(tmp_path))
+    s2.capture(fn, args, name="target", use_cache=False)
+    assert s2.block_cache_counters["block_hits"] > 0
+    assert s2.block_cache_counters["block_errors"] == 0
+
+
+# ---------------------------------------------------------------------------
+# rank short-circuit + meta round-trip
+# ---------------------------------------------------------------------------
+
+def test_rank_short_circuits_identical_artifacts():
+    fn, args = _dot_tanh_model(layers=6)
+    variant, _ = _dot_tanh_model(layers=6, twist=3)
+    s = Session()
+    a1 = s.capture(fn, args, name="a")
+    a2 = s.capture(fn, args, name="b")      # same content, new label
+    c = s.capture(variant, args, name="c")
+    assert a1.key == a2.key != c.key
+
+    rank = s.rank([a1, a2, c])
+    assert rank.meta["identical_pairs"] == 1
+    assert rank.meta["compares"] == 2
+    rep = rank.reports[(0, 1)]          # the a/b pair shares one key
+    assert rep.meta.get("identical_artifacts") is True
+    assert rep.findings == []
+
+    rt = RankResult.from_json(rank.to_json())
+    assert rt.meta == rank.meta
+
+
+# ---------------------------------------------------------------------------
+# per-op HLO cost memo
+# ---------------------------------------------------------------------------
+
+def test_per_op_costs_memoized():
+    fn, args = _dot_tanh_model(layers=4)
+    g = graph_mod.trace(fn, *args, name="memo")
+    before = dict(hlo_costs.PER_OP_MEMO_COUNTERS)
+    c1 = hlo_costs.per_op_costs(g, args)
+    c2 = hlo_costs.per_op_costs(g, args)
+    assert hlo_costs.PER_OP_MEMO_COUNTERS["hits"] == before["hits"] + 1
+    assert c2 is c1
+    # a re-traced twin of the same program memo-hits too (the key is
+    # jaxpr fingerprint + const digests + avals, not object identity)
+    g2 = graph_mod.trace(fn, *args, name="memo-twin")
+    c3 = hlo_costs.per_op_costs(g2, args)
+    assert c3.as_dict() == c1.as_dict()
+    # opting out bypasses the memo but agrees
+    c4 = hlo_costs.per_op_costs(g, args, memo=False)
+    assert c4.as_dict() == c1.as_dict()
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous stack: two distinct families share one graph
+# ---------------------------------------------------------------------------
+
+def test_blockstack_forms_two_families():
+    fn, args = transformer_block_stack()
+    g = graph_mod.trace(fn, *args, name="blockstack")
+    assert len(g.nodes) >= 128
+    bs = graph_mod.block_structure(g)
+    assert len(bs.families) >= 2
+    assert len({f.digest for f in bs.families}) >= 2
+    assert bs.coverage() > 0.5
+
+    cache = BlockEvidenceCache()
+    outs_cold, stats_cold = interp.capture_tensor_stats(g, *args,
+                                                        block_cache=cache)
+    fam_hit = {t[2] for t in cache.trace if t[0] == "block"}
+    assert len(fam_hit) >= 2            # both families went through the cache
+
+    before = cache.snapshot()
+    outs_warm, stats_warm = interp.capture_tensor_stats(g, *args,
+                                                        block_cache=cache)
+    d = BlockEvidenceCache.delta(before, cache.snapshot())
+    assert d.get("block_misses", 0) == 0 and d.get("block_hits", 0) > 0
+    assert _out_bytes(outs_warm) == _out_bytes(outs_cold)
+    assert _stats_equal(stats_warm, stats_cold)
